@@ -1,0 +1,96 @@
+"""Paper Fig. 4/5 (+ App. Figs 9-12): image-classification cascade, alpha
+sweep. CPU-scale instantiation (see DESIGN.md §7): synthetic easy/parity
+task; M_S = (64,64) MLP on 3k samples trained to interpolation (overconfident
+on its test errors — the CIFAR-CNN regime); M_L = (256,256) MLP on 25k
+samples (learns the hard tier exactly).
+
+Stage-2 note (adaptation, recorded in EXPERIMENTS.md): the paper fine-tunes
+on the training split; its models do not interpolate that split. At our
+scale M_S reaches 100% train accuracy, which would starve eq. (3) of
+incorrect examples — so Gatekeeper fine-tuning uses a HELD-OUT calibration
+split, the scale-equivalent of "training data the model still gets wrong".
+
+Expected reproduction (paper trends):
+  alpha ↓  =>  s_o ↓ (separation up), s_d ↑, AUROC ↑, acc(M_S) ↓/flat.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.core.metrics import summarize_deferral
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import make_classification
+from repro.models.classifier import (MLPClassifierConfig, classifier_forward,
+                                     init_classifier)
+from repro.training import optim
+from repro.training.loop import evaluate_classifier, make_train_step, train
+
+from benchmarks.common import emit_csv_row, save_result
+
+ALPHAS = (0.05, 0.2, 0.5, 0.8, 0.95)
+
+
+def _fit(cfg, data, seed, steps, loss_kind="ce", gk=None, init=None,
+         lr=3e-3):
+    params = init if init is not None else init_classifier(
+        cfg, jax.random.PRNGKey(seed))
+    apply_fn = lambda p, b: classifier_forward(p, cfg, b["inputs"])
+    it = BatchIterator({"inputs": data.x, "targets": data.y}, 256,
+                       key=jax.random.PRNGKey(seed))
+    step = make_train_step(apply_fn, optim.AdamWConfig(lr=lr,
+                                                       total_steps=steps),
+                           loss_kind=loss_kind, gk_cfg=gk)
+    return train(params, step, it.forever(), steps, log_every=10**9).params
+
+
+def run(n_train=3000, n_large=25000, n_cal=4000, n_test=3000,
+        steps=2500, gk_steps=3000, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tr_s = make_classification(key, n_train, n_classes=8, hard_frac=0.45)
+    tr_l = make_classification(jax.random.fold_in(key, 5), n_large,
+                               n_classes=8, hard_frac=0.45)
+    cal = make_classification(jax.random.fold_in(key, 7), n_cal, 8,
+                              hard_frac=0.45)
+    te = make_classification(jax.random.fold_in(key, 1), n_test, 8,
+                             hard_frac=0.45)
+    d_in = tr_s.x.shape[1]
+    s_cfg = MLPClassifierConfig(d_in=d_in, n_classes=8, hidden=(64, 64))
+    l_cfg = MLPClassifierConfig(d_in=d_in, n_classes=8, hidden=(256, 256))
+
+    t0 = time.perf_counter()
+    small = _fit(s_cfg, tr_s, 1, steps)
+    large = _fit(l_cfg, tr_l, 2, max(steps, 4000))
+    _, _, lcorr = evaluate_classifier(
+        lambda p, x: classifier_forward(p, l_cfg, x), large, te.x, te.y)
+
+    def metrics_of(params):
+        _, conf, corr = evaluate_classifier(
+            lambda p, x: classifier_forward(p, s_cfg, x), params, te.x, te.y)
+        return summarize_deferral(conf, corr, lcorr)
+
+    rows = {"baseline": metrics_of(small)}
+    for a in ALPHAS:
+        tuned = _fit(s_cfg, cal, 3, gk_steps, loss_kind="gatekeeper",
+                     gk=GatekeeperConfig(alpha=a), init=small, lr=5e-3)
+        rows[f"alpha={a}"] = metrics_of(tuned)
+    elapsed = time.perf_counter() - t0
+
+    payload = {k: {m: v[m] for m in ("s_d", "s_o", "auroc", "acc_small",
+                                     "acc_large")}
+               for k, v in rows.items()}
+    save_result("fig4_classification", payload)
+    for k, v in payload.items():
+        emit_csv_row(f"fig4/{k}",
+                     elapsed / len(rows) * 1e6,
+                     f"s_d={v['s_d']:.3f};s_o={v['s_o']:.3f};"
+                     f"auroc={v['auroc']:.3f};acc={v['acc_small']:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

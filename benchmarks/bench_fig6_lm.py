@@ -1,0 +1,116 @@
+"""Paper Fig. 6: decoder-only LM cascade on closed-form QA, alpha sweep +
+the App. B.2 prompting baselines ("Reduce Confidence", "Answer N").
+
+CPU-scale instantiation: synthetic QA (copy / modular add / modular mul,
+mirroring ARC-e vs ARC-c difficulty), 1-layer M_S vs 4-layer M_L decoders,
+g_NENT deferral on the answer token (eq. 8).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.baselines import PromptingBaseline
+from repro.core.deferral import sequence_negative_entropy
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.core.metrics import summarize_deferral
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import make_qa
+from repro.models import transformer as tfm
+from repro.sharding import ParallelContext
+from repro.training import optim
+from repro.training.loop import make_train_step, train
+
+from benchmarks.common import emit_csv_row, save_result
+
+ALPHAS = (0.05, 0.2, 0.5, 0.8)
+CTX = ParallelContext()
+
+
+def _mk_cfg(name, layers, d):
+    return ModelConfig(name=name, family="dense", n_layers=layers, d_model=d,
+                       n_heads=4, n_kv_heads=4, head_dim=d // 4, d_ff=d * 4,
+                       vocab_size=32, tie_embeddings=True)
+
+
+def _train_lm(cfg, data, seed, steps, loss_kind="ce", gk=None, init=None,
+              lr=3e-3):
+    params = init if init is not None else tfm.init_params(
+        cfg, jax.random.PRNGKey(seed))
+    apply_fn = lambda p, b: tfm.forward(p, cfg, b["inputs"], CTX)
+    it = BatchIterator({"inputs": data.inputs, "targets": data.targets,
+                        "loss_mask": data.loss_mask}, 256,
+                       key=jax.random.PRNGKey(seed))
+    step = make_train_step(apply_fn, optim.AdamWConfig(lr=lr,
+                                                       total_steps=steps),
+                           loss_kind=loss_kind, gk_cfg=gk)
+    return train(params, step, it.forever(), steps, log_every=10**9).params
+
+
+def _answer_metrics(cfg, params, data, confidence=None):
+    """Answer-token correctness + g_NENT confidence per example."""
+    logits = tfm.forward(params, cfg, jnp.asarray(data.inputs), CTX)
+    ans_pos = data.answer_pos - 1          # position predicting the answer
+    ans_logits = logits[:, ans_pos, :]
+    preds = np.asarray(jnp.argmax(ans_logits, -1))
+    correct = (preds == data.targets[:, ans_pos]).astype(np.float64)
+    if confidence is None:
+        conf = np.asarray(sequence_negative_entropy(
+            logits, jnp.asarray(data.loss_mask)))
+    else:
+        conf = confidence(ans_logits)
+    return conf, correct
+
+
+def run(n_train=8000, n_test=3000, steps=400, gk_steps=250, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tr = make_qa(key, n_train)
+    te = make_qa(jax.random.fold_in(key, 1), n_test)
+    s_cfg = _mk_cfg("lm-small", 1, 64)
+    l_cfg = _mk_cfg("lm-large", 4, 192)
+
+    t0 = time.perf_counter()
+    small = _train_lm(s_cfg, tr, 1, steps)
+    large = _train_lm(l_cfg, tr, 2, steps + 200)
+    _, lcorr = _answer_metrics(l_cfg, large, te)
+
+    rows = {}
+    conf, corr = _answer_metrics(s_cfg, small, te)
+    rows["baseline"] = summarize_deferral(conf, corr, lcorr)
+
+    # prompting baselines (App. B.2) — black-box prompt modifications on the
+    # UNtuned model; the paper reports they do not help.
+    for kind in ("reduce_confidence", "answer_n"):
+        pb = PromptingBaseline(kind)
+        inputs = np.asarray(pb.modify_inputs(jnp.asarray(te.inputs)))
+        logits = tfm.forward(small, s_cfg, jnp.asarray(inputs), CTX)
+        ans_logits = logits[:, te.answer_pos - 1, :]
+        conf_pb = np.asarray(pb.confidence_from_logits(ans_logits))
+        preds = np.asarray(jnp.argmax(ans_logits, -1))
+        corr_pb = (preds == te.targets[:, te.answer_pos - 1]).astype(float)
+        rows[f"prompt:{kind}"] = summarize_deferral(conf_pb, corr_pb, lcorr)
+
+    for a in ALPHAS:
+        tuned = _train_lm(s_cfg, tr, 3, gk_steps, loss_kind="gatekeeper",
+                          gk=GatekeeperConfig(alpha=a), init=small, lr=1e-3)
+        conf, corr = _answer_metrics(s_cfg, tuned, te)
+        rows[f"alpha={a}"] = summarize_deferral(conf, corr, lcorr)
+    elapsed = time.perf_counter() - t0
+
+    payload = {k: {m: v[m] for m in ("s_d", "s_o", "auroc", "acc_small",
+                                     "acc_large")}
+               for k, v in rows.items()}
+    save_result("fig6_lm", payload)
+    for k, v in payload.items():
+        emit_csv_row(f"fig6/{k}", elapsed / len(rows) * 1e6,
+                     f"s_d={v['s_d']:.3f};s_o={v['s_o']:.3f};"
+                     f"auroc={v['auroc']:.3f};acc={v['acc_small']:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Kernel micro-benchmarks.
+
+On CPU the Pallas kernels run in interpret mode (Python — timings are NOT
+hardware-representative); what we measure here is the XLA *fused chunked*
+Gatekeeper loss / entropy path against the naive materialize-[T,V] path,
+plus derived roofline units (bytes avoided) for the TPU target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deferral import negative_entropy
+from repro.core.gatekeeper import GatekeeperConfig, gatekeeper_loss
+from repro.launch.steps import chunked_gatekeeper_loss, fused_confidence
+
+from benchmarks.common import emit_csv_row, save_result, time_call
+
+GK = GatekeeperConfig(alpha=0.3)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    results = {}
+    # moderate CPU-feasible proxy of the V=163840 regime
+    B, S, d, V = 8, 128, 256, 16384
+    x = jax.random.normal(key, (B, S, d), jnp.float32)
+    table = jax.random.normal(jax.random.fold_in(key, 1), (V, d))
+    tgt = jax.random.randint(key, (B, S), 0, V)
+
+    naive = jax.jit(lambda x, t, y: gatekeeper_loss(
+        jnp.einsum("bsd,vd->bsv", x, t), y, GK)[0])
+    fused = jax.jit(lambda x, t, y: chunked_gatekeeper_loss(
+        x, t, y, GK, n_chunks=16)[0])
+    t_naive = time_call(lambda: float(naive(x, table, tgt)))
+    t_fused = time_call(lambda: float(fused(x, table, tgt)))
+    # bytes the fused path avoids writing+reading in HBM (fp32 logits x3)
+    avoided = B * S * V * 4 * 3
+    results["gatekeeper_loss"] = {
+        "us_naive": t_naive, "us_fused": t_fused,
+        "hbm_bytes_avoided": avoided,
+        "tpu_memory_term_saved_s": avoided / 819e9,
+    }
+    emit_csv_row("kernel/gatekeeper_fused", t_fused,
+                 f"naive={t_naive:.0f}us;avoided={avoided/1e6:.0f}MB")
+
+    # deferral entropy at decode: [128, 16384]
+    logits = jax.random.normal(key, (128, V))
+    naive_e = jax.jit(lambda l: negative_entropy(l))
+    xf = jax.random.normal(key, (128, d))
+    fused_e = jax.jit(lambda x, t: fused_confidence(x, t, n_chunks=8)[0])
+    t_naive = time_call(lambda: np.asarray(naive_e(logits)))
+    t_fused = time_call(lambda: np.asarray(fused_e(xf, table)))
+    results["deferral_entropy"] = {"us_naive": t_naive, "us_fused": t_fused}
+    emit_csv_row("kernel/deferral_entropy", t_fused,
+                 f"naive_from_logits={t_naive:.0f}us")
+
+    # WKV recurrence: naive per-token scan vs chunk-parallel (the Pallas
+    # kernel's algorithm; interpret-mode timing is not meaningful, so we
+    # time the XLA chunked path it mirrors and report the state-traffic
+    # the VMEM-resident kernel avoids)
+    from repro.models.ssm import (linear_attention_chunked,
+                                  linear_attention_scan)
+    Bw, Tw, Hw, Kw = 4, 256, 4, 64
+    kk = jax.random.split(jax.random.fold_in(key, 7), 6)
+    qw = jax.random.normal(kk[0], (Bw, Tw, Hw, Kw)) * 0.5
+    kw = jax.random.normal(kk[1], (Bw, Tw, Hw, Kw)) * 0.5
+    vw = jax.random.normal(kk[2], (Bw, Tw, Hw, Kw)) * 0.5
+    lw = -jax.random.uniform(kk[3], (Bw, Tw, Hw, Kw), minval=0.05, maxval=1.0)
+    uw = jax.random.normal(kk[4], (Hw, Kw)) * 0.3
+    s0 = jnp.zeros((Bw, Hw, Kw, Kw))
+    scan_f = jax.jit(lambda: linear_attention_scan(
+        qw, kw, vw, lw, s0, mode="rwkv", u=uw)[0])
+    chunk_f = jax.jit(lambda: linear_attention_chunked(
+        qw, kw, vw, lw, s0, mode="rwkv", u=uw, chunk=64)[0])
+    t_scan = time_call(lambda: np.asarray(scan_f()))
+    t_chunk = time_call(lambda: np.asarray(chunk_f()))
+    # per-token state round-trip the VMEM-resident kernel avoids
+    state_traffic = Bw * Hw * Kw * Kw * 4 * 2 * Tw
+    results["wkv_scan"] = {
+        "us_naive_scan": t_scan, "us_chunked": t_chunk,
+        "hbm_state_bytes_avoided": state_traffic,
+        "tpu_memory_term_saved_s": state_traffic / 819e9,
+    }
+    emit_csv_row("kernel/wkv_chunked", t_chunk,
+                 f"naive_scan={t_scan:.0f}us;"
+                 f"state_traffic_avoided={state_traffic/1e6:.0f}MB")
+
+    save_result("kernels", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Related-work comparison (paper §2, Rawat et al. 2021): static easy/hard
+pre-partition vs Gatekeeper's dynamic partition, matched budgets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import compute_static_partition
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.core.metrics import summarize_deferral
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import make_classification
+from repro.models.classifier import (MLPClassifierConfig, classifier_forward,
+                                     init_classifier)
+from repro.training import optim
+from repro.training.loop import evaluate_classifier, make_train_step, train
+
+from benchmarks.common import emit_csv_row, save_result
+
+
+def run(n_train=3000, n_test=3000, steps=2500, ft_steps=1500, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tr = make_classification(key, n_train, n_classes=8, hard_frac=0.45)
+    tr_l = make_classification(jax.random.fold_in(key, 5), 25000, 8,
+                               hard_frac=0.45)
+    cal = make_classification(jax.random.fold_in(key, 7), 4000, 8,
+                              hard_frac=0.45)
+    te = make_classification(jax.random.fold_in(key, 1), n_test, 8,
+                             hard_frac=0.45)
+    s_cfg = MLPClassifierConfig(d_in=tr.x.shape[1], n_classes=8,
+                                hidden=(64, 64))
+    l_cfg = MLPClassifierConfig(d_in=tr.x.shape[1], n_classes=8,
+                                hidden=(256, 256))
+
+    def fit(cfg, seed_, steps_, loss_kind="ce", gk=None, init=None,
+            extra=None, lr=3e-3, data=None):
+        data = tr if data is None else data
+        params = init if init is not None else init_classifier(
+            cfg, jax.random.PRNGKey(seed_))
+        arrays = {"inputs": data.x, "targets": data.y}
+        if extra:
+            arrays.update(extra)
+        it = BatchIterator(arrays, 256, key=jax.random.PRNGKey(seed_))
+        step = make_train_step(
+            lambda p, b: classifier_forward(p, cfg, b["inputs"]),
+            optim.AdamWConfig(lr=lr, total_steps=steps_),
+            loss_kind=loss_kind, gk_cfg=gk)
+        return train(params, step, it.forever(), steps_,
+                     log_every=10**9).params
+
+    t0 = time.perf_counter()
+    small = fit(s_cfg, 1, steps)
+    large = fit(l_cfg, 2, 4000, data=tr_l)
+    _, _, lcorr = evaluate_classifier(
+        lambda p, x: classifier_forward(p, l_cfg, x), large, te.x, te.y)
+
+    def metrics_of(params):
+        _, conf, corr = evaluate_classifier(
+            lambda p, x: classifier_forward(p, s_cfg, x), params, te.x, te.y)
+        return summarize_deferral(conf, corr, lcorr)
+
+    # Rawat'21: the partition is frozen ONCE from the pre-finetune model
+    # (on the calibration split, same data budget as Gatekeeper's stage 2)
+    ref_logits = classifier_forward(small, s_cfg, jnp.asarray(cal.x))
+    easy = np.asarray(compute_static_partition(ref_logits,
+                                               jnp.asarray(cal.y)))
+    static = fit(s_cfg, 3, ft_steps, loss_kind="static_partition",
+                 gk=GatekeeperConfig(alpha=0.05), init=small,
+                 extra={"easy_mask": easy}, lr=5e-3, data=cal)
+    dynamic = fit(s_cfg, 3, ft_steps, loss_kind="gatekeeper",
+                  gk=GatekeeperConfig(alpha=0.05), init=small, lr=5e-3,
+                  data=cal)
+    elapsed = time.perf_counter() - t0
+
+    payload = {
+        "baseline": metrics_of(small),
+        "static_partition(Rawat21)": metrics_of(static),
+        "gatekeeper_dynamic": metrics_of(dynamic),
+    }
+    payload = {k: {m: v[m] for m in ("s_d", "s_o", "auroc", "acc_small")}
+               for k, v in payload.items()}
+    save_result("static_vs_dynamic", payload)
+    for k, v in payload.items():
+        emit_csv_row(f"rawat21/{k}", elapsed / 3 * 1e6,
+                     f"s_d={v['s_d']:.3f};auroc={v['auroc']:.3f};"
+                     f"acc={v['acc_small']:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark suite (one module per paper table/fig)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload: Dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_np_safe)
+    return path
+
+
+def _np_safe(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit_csv_row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

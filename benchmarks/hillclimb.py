@@ -1,0 +1,155 @@
+"""§Perf hillclimb driver — labeled hypothesis→change→measure iterations.
+
+Three pairs chosen from the §Roofline baseline table (see EXPERIMENTS.md):
+
+  qwen     = qwen1.5-32b  × prefill_32k  (worst useful-FLOPs fraction, 0.093;
+             memory-dominant: S^2 attention HBM traffic + 40-head MHA that
+             does not divide the 16-way model axis)
+  kimi     = kimi-k2-1t-a32b × decode_32k (most collective-bound meaningful
+             pair; MoE all-to-all + V=163,840 fused entropy deferral — the
+             paper's serving path)
+  llama    = llama3-405b  × train_4k     (most representative of the paper's
+             technique: the Gatekeeper fine-tune step at the largest dense
+             scale; memory-dominant, does not fit HBM without remat+ZeRO)
+
+Each variant is a named (remat, rule_overrides, cfg_overrides) tuple.
+Results are appended to benchmarks/results/hillclimb.jsonl with the label,
+so EXPERIMENTS.md §Perf can cite exact before/after numbers.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair qwen --variant baseline
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair qwen --list
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+PAIRS = {
+    "qwen":  ("qwen1.5-32b", "prefill_32k"),
+    "kimi":  ("kimi-k2-1t-a32b", "decode_32k"),
+    "llama": ("llama3-405b", "train_4k"),
+}
+
+# label -> dict(remat=..., rules=..., cfg=..., multi_pod=...)
+VARIANTS = {
+    "qwen": {
+        "baseline": {},
+        # H1: [B,KV,g,S,S] f32 score materialization is the HBM-traffic
+        # wall; chunked/online-softmax attention removes the S^2 resident
+        # tensor (flash-attention schedule at the XLA level).
+        "chunked-attn": {"cfg": {"attn_chunk": 1024}},
+        # H2: 40 heads % 16 != 0 leaves the model axis idle through the
+        # whole attention path; sequence-parallel attention shards S=32768
+        # over the model axis instead (context parallelism).
+        "seq-parallel": {"rules": {"seq": ("model",)}},
+        # H3 = H1 + H2 composed.
+        "chunked+seqpar": {"cfg": {"attn_chunk": 1024},
+                           "rules": {"seq": ("model",)}},
+        # H4: prefill unembedded ALL 32k positions against V=152k and then
+        # sliced [-1] — 2·B·S·d·V useless flops. Unembed the last position
+        # only (adopted as the serving default after this measurement).
+        "chunked+seqpar+lastlogit": {"cfg": {"attn_chunk": 1024},
+                                     "rules": {"seq": ("model",)}},
+        # H5 (refuted): constrain K/V seq-replicated ("gather x once") —
+        # GSPMD materializes the constraint as the same all-gather, so
+        # bytes were unchanged; kept for the log.
+    },
+    "kimi": {
+        "baseline": {},
+        # H1: at decode, 128 tokens (1.8 MB) route to experts whose weights
+        # are 2 TB; the ZeRO-3 default (expert_embed -> data) forces a
+        # per-layer expert-weight all-gather over the data axis. Shard the
+        # expert FFN dim over data instead and GATHER THE TOKENS: weights
+        # never move, partial results psum.
+        "gather-tokens": {"rules": {"expert_embed": (), "expert_ffn": ("data",)}},
+        # H2: kv_heads=8 < 16 leaves the model axis idle for the KV cache;
+        # shard cache_seq over model too (decode reads the whole cache
+        # every step — that's the memory term).
+        "cache-seq-model": {"rules": {"cache_seq": ("data", "model")}},
+        # H3 composed.
+        "gather+cache": {"rules": {"expert_embed": (), "expert_ffn": ("data",),
+                                   "cache_seq": ("data", "model")}},
+        # H4: the fused entropy (eq. 8) all-gathers the unembed table's
+        # FSDP d-shard per vocab chunk; shard x_final's d instead ->
+        # partial [T, Vc] logits psum (5 MB vs 270 MB per chunk).
+        "gather+cache+psum": {"rules": {"expert_embed": (),
+                                        "expert_ffn": ("data",),
+                                        "cache_seq": ("data", "model"),
+                                        "unembed_d": ("data",)}},
+    },
+    "llama": {
+        "baseline": {},
+        # H1: no remat saves every per-layer activation for the backward
+        # pass (126 layers x ~2 GB/dev) — full remat trades ~33% more
+        # FLOPs for O(layers) less HBM-resident bytes.
+        "remat-full": {"remat": "full"},
+        # H2: remat dots-only (keep cheap elementwise, recompute matmuls'
+        # inputs) — the usual sweet spot.
+        "remat-dots": {"remat": "dots"},
+        # H3: ZeRO-1: shard AdamW mu/nu over BOTH mesh axes (embed already
+        # takes data; let opt state take model too via the ffn/heads dims
+        # it naturally has). Implemented as sharding the vocab/ffn dims of
+        # the opt state — rule override applies to the whole state tree.
+        "remat+zero": {"remat": "full",
+                       "rules": {"embed": ("data", "model")}},
+        # H4: gradient accumulation — activations scale with the
+        # microbatch, composing with remat (peak-memory knob #2).
+        "remat+micro16": {"remat": "full", "cfg": {"microbatches": 16}},
+        # H5: ZeRO + remat + microbatching together.
+        "remat+zero+micro16": {"remat": "full",
+                               "cfg": {"microbatches": 16},
+                               "rules": {"embed": ("data", "model")}},
+        # H6 (refuted): params FSDP-sharded over BOTH axes — SPMD hits
+        # "involuntary full rematerialization" on the scan's weight-slice
+        # reshard (b/433785288); depth scaling goes non-monotonic.
+        "remat+zero+micro16/2": {"remat": "full",
+                                 "cfg": {"microbatches": 16},
+                                 "rules": {"embed": ("data", "model")}},
+        # H6': ZeRO-1 instead — params keep the TP layout; only AdamW
+        # mu/nu shard over extra axes. The update (outside the layer scan)
+        # reduce-scatters grads into the opt shard; no scan resharding.
+        "multipod-zero1": {"remat": "full", "multi_pod": True,
+                           "cfg": {"microbatches": 32},
+                           "opt_rules": {"embed": ("pod", "data")}},
+    },
+}
+
+
+def run(pair: str, variant: str, out: str):
+    from repro.launch.dryrun import lower_combo
+    arch, shape = PAIRS[pair]
+    v = VARIANTS[pair][variant]
+    label = f"{pair}:{variant}"
+    res = lower_combo(arch, shape, v.get("multi_pod", False),
+                      remat=v.get("remat", "none"),
+                      rule_overrides=v.get("rules"),
+                      cfg_overrides=v.get("cfg"),
+                      opt_rule_overrides=v.get("opt_rules"),
+                      label=label, verbose=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "a") as f:
+        f.write(json.dumps(res) + "\n")
+    print(f"[hillclimb] {label}: compute={res['compute_s']:.4g}s "
+          f"memory={res['memory_s']:.4g}s collective={res['collective_s']:.4g}s "
+          f"dominant={res['dominant']} peak={res['peak_memory_bytes']/2**30:.1f}GiB "
+          f"fits={res['fits_hbm']}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/hillclimb.jsonl")
+    args = ap.parse_args()
+    if args.list or args.variant is None:
+        for k, v in VARIANTS[args.pair].items():
+            print(f"{k}: {v}")
+        return
+    run(args.pair, args.variant, args.out)
+
+
+if __name__ == "__main__":
+    main()

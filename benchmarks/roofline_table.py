@@ -1,0 +1,64 @@
+"""Render the §Dry-run/§Roofline markdown tables from dryrun jsonl files.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        benchmarks/results/dryrun.jsonl
+"""
+import json
+import sys
+from collections import OrderedDict
+
+
+def load(path):
+    rows = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r.get("remat", "none"))] = r
+    return list(rows.values())        # last write wins per combo
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.3g}us"
+    if x < 1:
+        return f"{x*1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def gb(x):
+    return f"{x/2**30:.1f}"
+
+
+def main(paths):
+    for path in paths:
+        rows = load(path)
+        print(f"\n### {path} ({len(rows)} combos)\n")
+        print("| arch | shape | compute | memory | collective | dominant |"
+              " useful-FLOPs | args GiB/dev | temp GiB/dev | fits 16G |"
+              " compile s |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"{r['dominant']} | {r['useful_flops_ratio']:.3g} | "
+                  f"{gb(r['arg_bytes'])} | {gb(r['temp_bytes'])} | "
+                  f"{'Y' if r.get('fits_hbm') else 'N'} | "
+                  f"{r.get('t_compile_s', 0):.0f} |")
+        # hillclimb candidate picks
+        worst_ratio = min((r for r in rows if r["useful_flops_ratio"] > 0),
+                          key=lambda r: r["useful_flops_ratio"], default=None)
+        coll = max(rows, key=lambda r: (r["collective_s"] /
+                                        max(r["compute_s"] + r["memory_s"],
+                                            1e-12)))
+        if worst_ratio:
+            print(f"\nworst useful-FLOPs ratio: {worst_ratio['arch']} x "
+                  f"{worst_ratio['shape']} ({worst_ratio['useful_flops_ratio']:.3g})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']} "
+              f"(coll/(comp+mem) = "
+              f"{coll['collective_s']/max(coll['compute_s']+coll['memory_s'],1e-12):.3g})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["benchmarks/results/dryrun.jsonl"])

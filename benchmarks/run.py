@@ -1,0 +1,69 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper figure/table:
+
+  fig4   — image-classification alpha sweep (paper Fig. 4/5, Figs 9-12)
+  fig6   — LM alpha sweep + prompting baselines (paper Fig. 6, App. B.2)
+  fig7   — VLM classification + captioning factuality (paper Fig. 7)
+  rawat  — static vs dynamic partition (paper §2 related work)
+  soft   — hard-label vs M_L-soft-target Gatekeeper (paper §3.2 ablation)
+  kernel — fused loss/entropy kernels vs naive paths
+
+`python -m benchmarks.run [--only fig4,...] [--fast]`
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig6,fig7,rawat,soft,kernel")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced budgets (CI smoke)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation_soft, bench_fig4_classification,
+                            bench_fig6_lm, bench_fig7_vlm, bench_kernels,
+                            bench_static_partition)
+
+    fast_kw = {
+        "fig4": dict(n_train=4000, n_test=1500, steps=200, gk_steps=150),
+        "fig6": dict(n_train=4000, n_test=1200, steps=250, gk_steps=150),
+        "fig7": dict(n_train=3000, n_test=1000, steps=200, gk_steps=120),
+        "rawat": dict(n_train=4000, n_test=1500, steps=200, ft_steps=150),
+        "soft": dict(n_train=3000, n_test=1500, steps=300, gk_steps=200),
+    }
+    suites = {
+        "fig4": lambda: bench_fig4_classification.run(
+            **(fast_kw["fig4"] if args.fast else {})),
+        "fig6": lambda: bench_fig6_lm.run(
+            **(fast_kw["fig6"] if args.fast else {})),
+        "fig7": lambda: bench_fig7_vlm.run(
+            **(fast_kw["fig7"] if args.fast else {})),
+        "rawat": lambda: bench_static_partition.run(
+            **(fast_kw["rawat"] if args.fast else {})),
+        "soft": lambda: bench_ablation_soft.run(
+            **(fast_kw["soft"] if args.fast else {})),
+        "kernel": bench_kernels.run,
+    }
+    only = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in only:
+        t0 = time.time()
+        try:
+            suites[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,96 @@
+"""Estimate the TPU-adjusted peak for hillclimb variants.
+
+The CPU backend has no native bf16 dot, so XLA materializes f32 copies of
+bf16 weights/caches (convert fusions). A TPU build feeds bf16 straight to
+the MXU — those temps don't exist there. This script sums the outputs of
+large convert-style ops and reports peak_measured - conversion_copies.
+
+CAVEAT: the sum counts every conversion buffer, not just those live at
+the peak point, so it is an UPPER bound on the conversion footprint and
+the adjusted peak is a LOWER bound (it can go negative when per-layer
+conversions that never coexist are all counted — qwen/llama). It is tight
+only when the conversions are loop-carried top-level tensors live for the
+whole while-loop (kimi decode: the 3x4.9 GiB expert-weight stacks + 2x3.3
+GiB cache copies). Pair it with the analytic state accounting in
+EXPERIMENTS.md §Perf; the defensible per-variant numbers quoted there are
+kimi ≈ 12-13 GiB (args+out+working set) and llama ≈ 12-14 GiB
+(state 7.9 GiB + micro32 remat residuals ≈ 4 GiB).
+
+    PYTHONPATH=src python -m benchmarks.tpu_adjusted_peak
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+import re
+
+
+def conversion_bytes(hlo: str, min_bytes: float = 64e6) -> float:
+    """Sum output bytes of f32 tensors produced by convert/copy fusions of
+    bf16 inputs (the CPU-backend artifact)."""
+    dt = {"f32": 4, "bf16": 2}
+    total = 0.0
+    pat = re.compile(r"= f32\[([\d,]+)\][^=]*"
+                     r"(wrapped_convert|convert\(|convert_|copy_convert)")
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        n = 1
+        for x in m.group(1).split(","):
+            if x:
+                n *= int(x)
+        b = n * 4
+        if b >= min_bytes:
+            total += b
+    return total
+
+
+def main():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.specs import adapt_for_shape
+    from repro.launch.dryrun import _lower_for
+    from repro.launch.mesh import make_production_mesh, make_context
+    from repro.sharding import rules_dict
+    from benchmarks.hillclimb import PAIRS, VARIANTS
+
+    finals = [("kimi", "gather+cache+psum"), ("qwen", "chunked+seqpar+lastlogit"),
+              ("llama", "multipod-zero1")]
+    out = {}
+    for pair, variant in finals:
+        arch, shape_name = PAIRS[pair]
+        v = VARIANTS[pair][variant]
+        shape = SHAPES[shape_name]
+        cfg = adapt_for_shape(get_config(arch), shape)
+        if v.get("remat"):
+            cfg = cfg.replace(remat=v["remat"])
+        if v.get("cfg"):
+            cfg = cfg.replace(**v["cfg"])
+        rules = rules_dict(v.get("rules") or {})
+        opt_rules = (rules_dict({**(v.get("rules") or {}), **v["opt_rules"]})
+                     if v.get("opt_rules") else None)
+        mesh = make_production_mesh(multi_pod=v.get("multi_pod", False))
+        ctx = dataclasses.replace(make_context(mesh), rules=rules)
+        compiled = _lower_for(cfg, shape, mesh, ctx, rules=rules,
+                              opt_rules=opt_rules).compile()
+        m = compiled.memory_analysis()
+        peak = (m.argument_size_in_bytes + m.output_size_in_bytes
+                + m.temp_size_in_bytes - m.alias_size_in_bytes)
+        conv = conversion_bytes(compiled.as_text())
+        adj = peak - conv
+        out[f"{pair}:{variant}"] = {
+            "peak_gib": peak / 2**30, "conversion_gib": conv / 2**30,
+            "tpu_adjusted_peak_gib": adj / 2**30,
+            "fits_16gib_adjusted": bool(adj <= 16 * 2**30),
+        }
+        print(f"{pair}:{variant}: peak={peak/2**30:.1f} GiB, "
+              f"f32-conversion copies={conv/2**30:.1f} GiB, "
+              f"TPU-adjusted={adj/2**30:.1f} GiB "
+              f"fits={adj <= 16*2**30}")
+    with open("benchmarks/results/tpu_adjusted_peak.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Token-level Gatekeeper on decoder LMs (paper §4.2 shape).
+
+Trains a 1-layer M_S and a 4-layer M_L on the synthetic closed-form QA task,
+fine-tunes M_S with the token-level Gatekeeper loss (eqs. 4-5), and compares
+the g_NENT deferral signal (eq. 8) before/after, including the App. B.2
+prompting baselines.
+
+    PYTHONPATH=src python examples/lm_cascade.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.baselines import PromptingBaseline
+from repro.core.deferral import sequence_negative_entropy
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.core.metrics import summarize_deferral
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import make_qa
+from repro.models import transformer as tfm
+from repro.sharding import ParallelContext
+from repro.training import optim
+from repro.training.loop import make_train_step, train
+
+CTX = ParallelContext()
+
+
+def mk_cfg(name, layers, d):
+    return ModelConfig(name=name, family="dense", n_layers=layers, d_model=d,
+                       n_heads=4, n_kv_heads=4, head_dim=d // 4, d_ff=4 * d,
+                       vocab_size=32, tie_embeddings=True)
+
+
+def fit(cfg, data, steps, *, loss="ce", alpha=None, init=None, lr=3e-3,
+        seed=0):
+    params = init if init is not None else tfm.init_params(
+        cfg, jax.random.PRNGKey(seed))
+    it = BatchIterator({"inputs": data.inputs, "targets": data.targets,
+                        "loss_mask": data.loss_mask}, 256,
+                       key=jax.random.PRNGKey(seed))
+    step = make_train_step(
+        lambda p, b: tfm.forward(p, cfg, b["inputs"], CTX),
+        optim.AdamWConfig(lr=lr, total_steps=steps), loss_kind=loss,
+        gk_cfg=GatekeeperConfig(alpha=alpha) if alpha else None)
+    return train(params, step, it.forever(), steps, log_every=10**9).params
+
+
+def answer_eval(cfg, params, data):
+    logits = tfm.forward(params, cfg, jnp.asarray(data.inputs), CTX)
+    pos = data.answer_pos - 1
+    preds = np.asarray(jnp.argmax(logits[:, pos, :], -1))
+    correct = (preds == data.targets[:, pos]).astype(float)
+    conf = np.asarray(sequence_negative_entropy(
+        logits, jnp.asarray(data.loss_mask)))
+    return conf, correct
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    tr = make_qa(key, 8000)
+    cal = make_qa(jax.random.fold_in(key, 7), 4000)
+    te = make_qa(jax.random.fold_in(key, 1), 3000)
+    s_cfg, l_cfg = mk_cfg("small", 1, 64), mk_cfg("large", 4, 192)
+
+    print("training M_S / M_L on closed-form QA ...")
+    small = fit(s_cfg, tr, 400)
+    large = fit(l_cfg, tr, 600, seed=1)
+    _, lcorr = answer_eval(l_cfg, large, te)
+    print(f"  acc(M_L) = {lcorr.mean():.3f}")
+
+    conf, corr = answer_eval(s_cfg, small, te)
+    base = summarize_deferral(conf, corr, lcorr)
+    print(f"  baseline: acc={base['acc_small']:.3f} s_d={base['s_d']:.3f} "
+          f"auroc={base['auroc']:.3f}")
+
+    for kind in ("reduce_confidence", "answer_n"):
+        pb = PromptingBaseline(kind)
+        logits = tfm.forward(small, s_cfg,
+                             pb.modify_inputs(jnp.asarray(te.inputs)), CTX)
+        pos = te.answer_pos - 1
+        preds = np.asarray(jnp.argmax(logits[:, pos, :], -1))
+        c = (preds == te.targets[:, pos]).astype(float)
+        conf_pb = np.asarray(pb.confidence_from_logits(logits[:, pos, :]))
+        m = summarize_deferral(conf_pb, c, lcorr)
+        print(f"  prompt '{kind}': acc={m['acc_small']:.3f} "
+              f"s_d={m['s_d']:.3f} auroc={m['auroc']:.3f}")
+
+    print("Gatekeeper token-level fine-tune (alpha=0.1) ...")
+    tuned = fit(s_cfg, cal, 300, loss="gatekeeper", alpha=0.1, init=small,
+                lr=1e-3)
+    conf, corr = answer_eval(s_cfg, tuned, te)
+    gk = summarize_deferral(conf, corr, lcorr)
+    print(f"  gatekeeper: acc={gk['acc_small']:.3f} s_d={gk['s_d']:.3f} "
+          f"auroc={gk['auroc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""End-to-end driver: train a ~100M-parameter decoder for a few hundred
+steps (Stage 1 CE + Stage 2 Gatekeeper) on the synthetic LM stream.
+
+This is the assignment's "train ~100M model for a few hundred steps" driver;
+on CPU it is slow but real. Reduce --steps for a quick look.
+
+    PYTHONPATH=src python examples/train_100m.py --stage1-steps 300 \
+        --stage2-steps 100
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage1-steps", type=int, default=300)
+    ap.add_argument("--stage2-steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+
+    argv = ["--preset", "100m", "--task", "stream",
+            "--stage1-steps", str(args.stage1_steps),
+            "--stage2-steps", str(args.stage2_steps),
+            "--batch", str(args.batch), "--seq-len", str(args.seq_len),
+            "--n-train", "512", "--log-every", "10",
+            "--ckpt", "/tmp/repro_100m_ckpt"]
+    sys.argv = ["train"] + argv
+    train_launch.main()
+
+
+if __name__ == "__main__":
+    main()

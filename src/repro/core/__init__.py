@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution (Gatekeeper) as composable pieces.
+
+Public API:
+  GatekeeperConfig, gatekeeper_loss, gatekeeper_token_loss, standard_ce_loss
+  deferral signals (max_softmax, negative_entropy, sequence_negative_entropy)
+  Cascade / CascadeResult
+  metrics (distributional_overlap s_o, deferral_performance s_d, auroc, ...)
+  calibration (threshold_for_deferral_ratio, threshold_for_accuracy)
+  baselines (static_partition_loss, PromptingBaseline)
+"""
+from repro.core.gatekeeper import (            # noqa: F401
+    GatekeeperConfig, gatekeeper_loss, gatekeeper_token_loss,
+    standard_ce_loss, cross_entropy, kl_to_uniform, predictive_entropy,
+    soft_cross_entropy)
+from repro.core.deferral import (              # noqa: F401
+    max_softmax, negative_entropy, sequence_negative_entropy,
+    margin_confidence, defer_mask, selective_predict, SIGNALS)
+from repro.core.cascade import Cascade, CascadeResult  # noqa: F401
+from repro.core.metrics import (               # noqa: F401
+    distributional_overlap, deferral_performance, ideal_deferral_curve,
+    random_deferral_curve, realized_deferral_curve, auroc,
+    pearson_correlation, expected_calibration_error, summarize_deferral)
+from repro.core.calibration import (           # noqa: F401
+    threshold_for_deferral_ratio, threshold_for_accuracy,
+    expected_compute_cost)

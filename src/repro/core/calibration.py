@@ -1,0 +1,61 @@
+"""Threshold calibration for the cascade gate (paper Stage 3).
+
+Given validation-set confidences, pick tau to hit a target deferral ratio or
+a target joint accuracy (the two practical deployment knobs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def threshold_for_deferral_ratio(confidence: np.ndarray, ratio: float) -> float:
+    """tau s.t. the fraction of examples with g(x) < tau is ~`ratio`.
+
+    ratio=0 -> never defer; ratio=1 -> always defer.
+    """
+    conf = np.asarray(confidence, np.float64).ravel()
+    if ratio <= 0.0:
+        return float(conf.min() - 1.0)
+    if ratio >= 1.0:
+        return float(conf.max() + 1.0)
+    return float(np.quantile(conf, ratio))
+
+
+def threshold_for_accuracy(confidence: np.ndarray,
+                           small_correct: np.ndarray,
+                           large_correct: np.ndarray,
+                           target_accuracy: float) -> Optional[float]:
+    """Smallest-deferral tau whose joint accuracy >= target on validation.
+
+    Returns None when the target exceeds what full deferral achieves.
+    """
+    conf = np.asarray(confidence, np.float64).ravel()
+    sc = np.asarray(small_correct, np.float64).ravel()
+    lc = np.asarray(large_correct, np.float64).ravel()
+    n = conf.size
+    order = np.argsort(conf)                       # least confident first
+    sc_s, lc_s = sc[order], lc[order]
+    prefix_lc = np.concatenate([[0.0], np.cumsum(lc_s)])
+    prefix_sc = np.concatenate([[0.0], np.cumsum(sc_s)])
+    total_sc = prefix_sc[-1]
+    joint = (prefix_lc + (total_sc - prefix_sc)) / n   # joint acc deferring k
+    ok = np.nonzero(joint >= target_accuracy)[0]
+    if ok.size == 0:
+        return None
+    k = int(ok[0])
+    if k == 0:
+        return float(conf.min() - 1.0)
+    if k >= n:
+        return float(conf.max() + 1.0)
+    sorted_conf = conf[order]
+    return float(0.5 * (sorted_conf[k - 1] + sorted_conf[k]))
+
+
+def expected_compute_cost(deferral_ratio: float,
+                          cost_small: float = 0.2,
+                          cost_large: float = 1.0) -> float:
+    """Compute budget of the cascade (paper Fig. 1): every request pays
+    cost_small; deferred requests additionally pay cost_large."""
+    return cost_small + deferral_ratio * cost_large

@@ -1,0 +1,148 @@
+"""Cascade orchestration: (M_S, M_L, g) of eq. (6) as a framework object.
+
+A `Cascade` wraps two predict functions (arbitrary pytree params + apply) and
+a deferral signal. It runs the small model on every request, gates on the
+confidence, and only evaluates the large model on the deferred subset.
+
+Two execution modes:
+  * `predict_dense`  — jit-friendly: evaluates both models on the full batch
+    and selects (used inside pjit programs and for evaluation sweeps where
+    M_L outputs are needed for metrics anyway).
+  * `predict_sparse` — host-mediated: only the deferred subset is sent to
+    M_L (the deployment path; M_L is typically remote — paper Fig. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deferral as deferral_lib
+from repro.core import calibration
+
+
+PredictFn = Callable[[Any, jnp.ndarray], jnp.ndarray]   # (params, x) -> logits
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    predictions: np.ndarray        # joint predictions after gating
+    confidence: np.ndarray         # g(x) per example
+    deferred: np.ndarray           # bool per example
+    small_predictions: np.ndarray
+    large_predictions: Optional[np.ndarray]
+    deferral_ratio: float
+    compute_cost: float            # in units of M_L cost (paper Fig. 1)
+
+
+@dataclasses.dataclass
+class Cascade:
+    """Two-model cascade with a confidence gate.
+
+    Attributes:
+      small_apply / large_apply: (params, inputs) -> logits.
+      signal: name in deferral_lib.SIGNALS (default per paper: max_softmax
+        for classifiers, seq_neg_entropy for token models).
+      tau: acceptance threshold (eq. 6); calibrate via `calibrate_tau`.
+      cost_small: relative cost of M_S (paper example: 0.2).
+    """
+
+    small_apply: PredictFn
+    large_apply: PredictFn
+    small_params: Any
+    large_params: Any
+    signal: str = "max_softmax"
+    tau: float = 0.5
+    cost_small: float = 0.2
+    cost_large: float = 1.0
+
+    def confidence(self, logits: jnp.ndarray,
+                   valid_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        fn = deferral_lib.SIGNALS[self.signal]
+        if self.signal == "seq_neg_entropy":
+            return fn(logits, valid_mask)
+        return fn(logits)
+
+    # ------------------------------------------------------------------
+    def predict_dense(self, inputs: jnp.ndarray,
+                      valid_mask: Optional[jnp.ndarray] = None) -> CascadeResult:
+        """Evaluate both models, gate, select (evaluation mode)."""
+        s_logits = self.small_apply(self.small_params, inputs)
+        conf = self.confidence(s_logits, valid_mask)
+        l_logits = self.large_apply(self.large_params, inputs)
+        s_pred = jnp.argmax(s_logits, axis=-1)
+        l_pred = jnp.argmax(l_logits, axis=-1)
+        joint = deferral_lib.selective_predict(s_pred, l_pred, conf, self.tau)
+        deferred = np.asarray(deferral_lib.defer_mask(conf, self.tau))
+        ratio = float(deferred.mean())
+        return CascadeResult(
+            predictions=np.asarray(joint),
+            confidence=np.asarray(conf),
+            deferred=deferred,
+            small_predictions=np.asarray(s_pred),
+            large_predictions=np.asarray(l_pred),
+            deferral_ratio=ratio,
+            compute_cost=calibration.expected_compute_cost(
+                ratio, self.cost_small, self.cost_large),
+        )
+
+    # ------------------------------------------------------------------
+    def predict_sparse(self, inputs: jnp.ndarray,
+                       valid_mask: Optional[jnp.ndarray] = None) -> CascadeResult:
+        """Deployment mode: M_L only sees the deferred subset (host gather)."""
+        s_logits = self.small_apply(self.small_params, inputs)
+        conf = np.asarray(self.confidence(s_logits, valid_mask))
+        s_pred = np.asarray(jnp.argmax(s_logits, axis=-1))
+        deferred = conf < self.tau
+        joint = s_pred.copy()
+        large_preds = None
+        if deferred.any():
+            idx = np.nonzero(deferred)[0]
+            sub = jnp.asarray(np.asarray(inputs)[idx])
+            l_logits = self.large_apply(self.large_params, sub)
+            lp = np.asarray(jnp.argmax(l_logits, axis=-1))
+            joint[idx] = lp
+            large_preds = lp
+        ratio = float(deferred.mean())
+        return CascadeResult(
+            predictions=joint,
+            confidence=conf,
+            deferred=deferred,
+            small_predictions=s_pred,
+            large_predictions=large_preds,
+            deferral_ratio=ratio,
+            compute_cost=calibration.expected_compute_cost(
+                ratio, self.cost_small, self.cost_large),
+        )
+
+    # ------------------------------------------------------------------
+    def calibrate_tau(self, val_inputs: jnp.ndarray, *,
+                      deferral_ratio: Optional[float] = None,
+                      target_accuracy: Optional[float] = None,
+                      val_labels: Optional[np.ndarray] = None,
+                      valid_mask: Optional[jnp.ndarray] = None) -> float:
+        """Set tau from a validation batch for a target ratio or accuracy."""
+        s_logits = self.small_apply(self.small_params, val_inputs)
+        conf = np.asarray(self.confidence(s_logits, valid_mask))
+        if deferral_ratio is not None:
+            self.tau = calibration.threshold_for_deferral_ratio(conf, deferral_ratio)
+            return self.tau
+        if target_accuracy is not None:
+            assert val_labels is not None, "target_accuracy needs val_labels"
+            s_pred = np.asarray(jnp.argmax(s_logits, axis=-1))
+            l_logits = self.large_apply(self.large_params, val_inputs)
+            l_pred = np.asarray(jnp.argmax(l_logits, axis=-1))
+            sc = (s_pred == val_labels).astype(np.float64)
+            lc = (l_pred == val_labels).astype(np.float64)
+            if sc.ndim > 1:   # token models: sequence-level exact match
+                sc = sc.all(axis=-1).astype(np.float64)
+                lc = lc.all(axis=-1).astype(np.float64)
+            tau = calibration.threshold_for_accuracy(conf, sc, lc, target_accuracy)
+            if tau is None:
+                tau = float(conf.max() + 1.0)   # full deferral
+            self.tau = tau
+            return self.tau
+        raise ValueError("specify deferral_ratio or target_accuracy")

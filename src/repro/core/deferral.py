@@ -1,0 +1,72 @@
+"""Deferral signals and selective prediction (paper §3.2 Stage 3, eqs. 6-8).
+
+The deferral function g maps an input to a scalar confidence; the cascade
+accepts M_S's answer when g(x) >= tau and defers to M_L otherwise (eq. 6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def max_softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    """g_CL(x) = max_c p(y=c|x) (eq. 7). logits [..., C] -> [...]."""
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1).max(axis=-1)
+
+
+def negative_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """-H(p) per position, stable from logits. Higher = more confident."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return (jnp.exp(logp) * logp).sum(axis=-1)
+
+
+def sequence_negative_entropy(logits: jnp.ndarray,
+                              valid_mask: Optional[jnp.ndarray] = None
+                              ) -> jnp.ndarray:
+    """g_NENT(x) = 1/T sum_t sum_c p log p (eq. 8).
+
+    logits: [..., T, V]; valid_mask: [..., T] (1 = real token). Returns [...]
+    — mean negative predictive entropy over valid positions.
+    """
+    nent = negative_entropy(logits)            # [..., T]
+    if valid_mask is None:
+        return nent.mean(axis=-1)
+    m = valid_mask.astype(jnp.float32)
+    return (nent * m).sum(axis=-1) / jnp.maximum(m.sum(axis=-1), 1.0)
+
+
+def margin_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """Beyond-paper signal: top-1/top-2 probability margin."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+SIGNALS = {
+    "max_softmax": max_softmax,
+    "neg_entropy": negative_entropy,
+    "seq_neg_entropy": sequence_negative_entropy,
+    "margin": margin_confidence,
+}
+
+
+def defer_mask(confidence: jnp.ndarray, tau: float | jnp.ndarray) -> jnp.ndarray:
+    """True where the cascade DEFERS to M_L (confidence < tau), eq. 6."""
+    return confidence < tau
+
+
+def selective_predict(small_preds: jnp.ndarray,
+                      large_preds: jnp.ndarray,
+                      confidence: jnp.ndarray,
+                      tau: float | jnp.ndarray) -> jnp.ndarray:
+    """(M_S, M_L, g)(x) of eq. 6, vectorized over a batch.
+
+    small_preds/large_preds may be class ids [N] or token arrays [N, T];
+    confidence is [N].
+    """
+    mask = defer_mask(confidence, tau)
+    while mask.ndim < small_preds.ndim:
+        mask = mask[..., None]
+    return jnp.where(mask, large_preds, small_preds)

@@ -1,0 +1,227 @@
+"""Synthetic task generators with *controllable difficulty*.
+
+The paper's experiments need tasks where M_S is genuinely weaker than M_L so
+that deferral has headroom (paper assumption: M_S strictly less capable).
+Everything is generated deterministically from PRNG keys — no downloads.
+
+Tasks:
+  * classification — C-class task with an "easy" linear subspace and a
+    "hard" parity/interaction subspace: small MLPs master the former,
+    larger MLPs also capture the latter (mirrors CIFAR easy/hard split).
+  * lm_qa — closed-form QA sequences [BOS, op, a, b, c, SEP, ans]: `copy`
+    is learnable by tiny models; `add`/`mul` (modular arithmetic) need
+    capacity (mirrors ARC-e vs ARC-c difficulty split).
+  * captions — VLM-style: stub patch embeddings encode a scene (class +
+    attribute); the decoder emits a short "caption" token sequence; a
+    programmatic factuality score replaces the paper's Gemini judge.
+  * lm_stream — Zipf-Markov token stream for the 100M-scale train driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Reserved token ids shared by all synthetic vocabularies
+PAD, TOK_REDUCE_CONF, TOK_ANSWER_N, TOK_N, BOS, SEP = 0, 1, 2, 3, 4, 5
+SYMBOL_BASE = 6
+
+
+# ---------------------------------------------------------------------------
+# Classification (paper §4.1 analogue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClassificationData:
+    x: np.ndarray          # [N, d]
+    y: np.ndarray          # [N]
+    is_hard: np.ndarray    # [N] bool — ground-truth difficulty (diagnostics)
+
+
+def make_classification(key, n: int, n_classes: int = 16,
+                        d_easy: int = 16, factors_per_bit: int = 3,
+                        hard_frac: float = 0.45,
+                        easy_margin: float = 3.0,
+                        noise: float = 1.0,
+                        task_seed: int = 1234) -> ClassificationData:
+    """Easy examples: class mean separated by `easy_margin` in the linear
+    subspace. Hard examples: linear subspace is pure noise; the class is
+    encoded as a PRODUCT-PARITY code — bit j of the class is the sign of
+    the product of `factors_per_bit` hard dims. With 3 factors, small MLPs
+    on small sample budgets memorize (becoming overconfidently wrong on
+    test data — the regime where cascades/Gatekeeper matter) while larger
+    MLPs with more data learn it exactly (verified in tests/benchmarks).
+
+    TASK parameters (class means) come from `task_seed`, SAMPLES from
+    `key` — train/val/test splits drawn with different keys share one task.
+    """
+    n_bits = int(np.ceil(np.log2(n_classes)))
+    d_hard = n_bits * factors_per_bit
+    tkey = jax.random.PRNGKey(task_seed)
+    means = jax.random.normal(tkey, (n_classes, d_easy)) * easy_margin
+
+    k1, k2, k4, k5, k6 = jax.random.split(key, 5)
+    y = jax.random.randint(k1, (n,), 0, n_classes)
+    hard = jax.random.uniform(k2, (n,)) < hard_frac
+    x_easy = means[y] + jax.random.normal(k4, (n, d_easy)) * noise
+    x_easy = jnp.where(hard[:, None],
+                       jax.random.normal(k5, (n, d_easy)) * noise, x_easy)
+    bits = (y[:, None] >> jnp.arange(n_bits)[None, :]) & 1      # [n, bits]
+    s = jnp.sign(jax.random.normal(k6, (n, n_bits, factors_per_bit)))
+    s = s + (s == 0)                                             # no zeros
+    prod = jnp.prod(s[:, :, :-1], axis=-1)
+    s = s.at[:, :, -1].set(prod * (2 * bits - 1))                # product=bit
+    mag = jnp.abs(jax.random.normal(jax.random.fold_in(k6, 1),
+                                    (n, n_bits, factors_per_bit))) + 0.5
+    x_hard = (s * mag).reshape(n, d_hard)
+    x_hard = jnp.where(hard[:, None], x_hard,
+                       jax.random.normal(jax.random.fold_in(k6, 2),
+                                         (n, d_hard)))
+    x = jnp.concatenate([x_easy, x_hard], axis=-1)
+    return ClassificationData(np.asarray(x, np.float32), np.asarray(y),
+                              np.asarray(hard))
+
+
+# ---------------------------------------------------------------------------
+# Closed-form QA sequences (paper §4.2 analogue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QAData:
+    tokens: np.ndarray       # [N, T] int32, next-token targets = tokens[:,1:]
+    answer_pos: int          # index of the answer token
+    loss_mask: np.ndarray    # [N, T-1] — 1 where next-token loss applies
+    op: np.ndarray           # [N] 0=copy 1=add 2=mul (difficulty)
+    n_symbols: int
+    vocab: int
+
+    @property
+    def inputs(self):
+        return self.tokens[:, :-1]
+
+    @property
+    def targets(self):
+        return self.tokens[:, 1:]
+
+
+def make_qa(key, n: int, n_symbols: int = 16,
+            op_probs=(0.4, 0.3, 0.3)) -> QAData:
+    """Sequences: [BOS, op_tok, a, b, c, SEP, ans, PAD].
+
+    ops: copy -> ans=a; add -> ans=(a+b) mod K; mul -> ans=(a*b+c) mod K.
+    """
+    K = n_symbols
+    k1, k2 = jax.random.split(key)
+    op = jax.random.choice(k1, 3, (n,), p=jnp.asarray(op_probs))
+    abc = jax.random.randint(k2, (n, 3), 0, K)
+    a, b, c = abc[:, 0], abc[:, 1], abc[:, 2]
+    ans = jnp.where(op == 0, a,
+                    jnp.where(op == 1, (a + b) % K, (a * b + c) % K))
+    op_tok = SYMBOL_BASE + K + op                 # 3 op tokens after symbols
+    toks = jnp.stack([
+        jnp.full((n,), BOS), op_tok, SYMBOL_BASE + a, SYMBOL_BASE + b,
+        SYMBOL_BASE + c, jnp.full((n,), SEP), SYMBOL_BASE + ans,
+        jnp.full((n,), PAD)], axis=1).astype(jnp.int32)
+    T = toks.shape[1]
+    answer_pos = 6
+    mask = np.zeros((n, T - 1), np.float32)
+    mask[:, answer_pos - 1] = 1.0                  # predict ans from SEP
+    return QAData(np.asarray(toks), answer_pos, mask, np.asarray(op),
+                  K, SYMBOL_BASE + K + 3)
+
+
+# ---------------------------------------------------------------------------
+# VLM captions (paper §4.3 analogue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CaptionData:
+    patches: np.ndarray      # [N, P, d_model] stub vision-frontend output
+    tokens: np.ndarray       # [N, T] caption token sequence (BOS ... )
+    classes: np.ndarray      # [N] latent scene class
+    attrs: np.ndarray        # [N] latent attribute
+    vocab: int
+
+    @property
+    def inputs(self):
+        return self.tokens[:, :-1]
+
+    @property
+    def targets(self):
+        return self.tokens[:, 1:]
+
+
+def make_captions(key, n: int, n_patches: int = 8, d_model: int = 64,
+                  n_classes: int = 12, n_attrs: int = 6,
+                  hard_frac: float = 0.4,
+                  task_seed: int = 1234) -> CaptionData:
+    """Patch embeddings = class embedding + attribute embedding + noise.
+    Caption = [BOS, class_tok, attr_tok, SEP]. "Hard" scenes get extra noise
+    so the attribute becomes ambiguous for low-capacity decoders.
+
+    TASK parameters (class/attr embeddings) come from `task_seed`; SAMPLES
+    from `key` — splits drawn with different keys share one task.
+    """
+    tkey = jax.random.PRNGKey(task_seed)
+    cls_emb = jax.random.normal(tkey, (n_classes, d_model))
+    attr_emb = jax.random.normal(jax.random.fold_in(tkey, 1),
+                                 (n_attrs, d_model))
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    cls = jax.random.randint(k1, (n,), 0, n_classes)
+    attr = jax.random.randint(k2, (n,), 0, n_attrs)
+    hard = jax.random.uniform(k3, (n,)) < hard_frac
+    noise_scale = jnp.where(hard, 5.0, 0.3)[:, None, None]
+    patches = (cls_emb[cls][:, None, :] + 0.5 * attr_emb[attr][:, None, :]
+               + jax.random.normal(k5, (n, n_patches, d_model)) * noise_scale)
+    cls_tok = SYMBOL_BASE + cls
+    attr_tok = SYMBOL_BASE + n_classes + attr
+    toks = jnp.stack([jnp.full((n,), BOS), cls_tok, attr_tok,
+                      jnp.full((n,), SEP)], axis=1).astype(jnp.int32)
+    return CaptionData(np.asarray(patches, np.float32), np.asarray(toks),
+                       np.asarray(cls), np.asarray(attr),
+                       SYMBOL_BASE + n_classes + n_attrs)
+
+
+def caption_factuality(pred_tokens: np.ndarray, data: CaptionData) -> np.ndarray:
+    """Programmatic stand-in for the paper's Gemini factuality judge:
+    graded score in [0,1] — 0.7 for the correct class token + 0.3 for the
+    correct attribute token (captions are 'semantically equivalent' when
+    they name the right scene; the attribute refines it)."""
+    cls_ok = (pred_tokens[:, 0] == SYMBOL_BASE + data.classes)
+    attr_ok = (pred_tokens[:, 1] == SYMBOL_BASE + data.vocab * 0
+               + SYMBOL_BASE + 0)  # placeholder, replaced below
+    n_classes = int(data.classes.max()) + 1
+    attr_ok = (pred_tokens[:, 1] == SYMBOL_BASE + n_classes + data.attrs)
+    return 0.7 * cls_ok.astype(np.float64) + 0.3 * attr_ok.astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Token stream for the large-scale train driver
+# ---------------------------------------------------------------------------
+
+def make_lm_stream(key, n_seqs: int, seq_len: int, vocab: int,
+                   order: int = 2) -> np.ndarray:
+    """Zipf-initialized order-`order` Markov chain token stream: cheap to
+    sample, non-trivial to model (bigram structure + Zipf unigram mix)."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    V = vocab
+    zipf = 1.0 / np.arange(1, V + 1)
+    zipf /= zipf.sum()
+    # hidden-state mixer: token ~ p(t | t-1) built from a small state machine
+    n_states = 64
+    state_next = rng.integers(0, n_states, size=(n_states, 8))
+    state_emit = rng.permutation(V)[:n_states * 8].reshape(n_states, 8) \
+        if V >= n_states * 8 else rng.integers(0, V, size=(n_states, 8))
+    out = np.empty((n_seqs, seq_len), np.int32)
+    state = rng.integers(0, n_states, size=n_seqs)
+    for t in range(seq_len):
+        branch = rng.integers(0, 8, size=n_seqs)
+        zipf_mask = rng.random(n_seqs) < 0.15
+        tok = state_emit[state, branch]
+        tok[zipf_mask] = rng.choice(V, size=zipf_mask.sum(), p=zipf)
+        out[:, t] = tok
+        state = state_next[state, branch]
+    return out

@@ -1,0 +1,89 @@
+"""Fused deferral-signal Pallas kernel (TPU target).
+
+Serving-time gate of eqs. (7)-(8): from decode logits [T, V] compute, in one
+streaming pass over vocab blocks, (neg_entropy, max_prob, argmax) per token —
+the cascade's deferral signal — without a second HBM pass over the logits.
+
+Grid: (token_blocks, vocab_blocks), vocab innermost with online
+max/sumexp/weighted-sum accumulators (H = lse - w/s, see gatekeeper_loss.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(logits_ref, nent_ref, mprob_ref, amax_ref,
+            m_ref, s_ref, w_ref, av_ref, ai_ref,
+            *, n_vb: int, vb_size: int, vocab: int):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        w_ref[...] = jnp.zeros_like(w_ref)
+        av_ref[...] = jnp.full_like(av_ref, NEG)
+        ai_ref[...] = jnp.zeros_like(ai_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)
+    col = vb * vb_size + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < vocab, logits, NEG)
+
+    bm = logits.max(axis=1)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, bm)
+    scale = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(col < vocab, p, 0.0)
+    s_ref[...] = s_ref[...] * scale + p.sum(axis=1)
+    w_ref[...] = w_ref[...] * scale + (p * logits).sum(axis=1)
+    m_ref[...] = m_new
+
+    bidx = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    better = bm > av_ref[...]
+    av_ref[...] = jnp.where(better, bm, av_ref[...])
+    ai_ref[...] = jnp.where(better, bidx + vb * vb_size, ai_ref[...])
+
+    @pl.when(vb == n_vb - 1)
+    def _final():
+        lse = m_ref[...] + jnp.log(s_ref[...])
+        ent = lse - w_ref[...] / s_ref[...]
+        nent_ref[...] = -ent
+        mprob_ref[...] = jnp.exp(av_ref[...] - lse)
+        amax_ref[...] = ai_ref[...]
+
+
+def deferral_entropy(logits: jnp.ndarray, *, tb: int = 128, vb: int = 2048,
+                     interpret: bool = False):
+    """(neg_entropy [T], max_prob [T], argmax [T]) from logits [T, V].
+    T must be a multiple of tb; vocab tail is padded/masked internally."""
+    T, V = logits.shape
+    assert T % tb == 0, (T, tb)
+    vb = min(vb, V)
+    n_vb = (V + vb - 1) // vb
+    Vpad = n_vb * vb
+    if Vpad != V:
+        logits = jnp.pad(logits, ((0, 0), (0, Vpad - V)))
+    kernel = functools.partial(_kernel, n_vb=n_vb, vb_size=vb, vocab=V)
+    f32 = jnp.float32
+    nent, mprob, amax = pl.pallas_call(
+        kernel,
+        grid=(T // tb, n_vb),
+        in_specs=[pl.BlockSpec((tb, vb), lambda t, v: (t, v))],
+        out_specs=[pl.BlockSpec((tb,), lambda t, v: (t,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((T,), f32),
+                   jax.ShapeDtypeStruct((T,), f32),
+                   jax.ShapeDtypeStruct((T,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((tb,), f32), pltpu.VMEM((tb,), f32),
+                        pltpu.VMEM((tb,), f32), pltpu.VMEM((tb,), f32),
+                        pltpu.VMEM((tb,), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return nent, mprob, amax

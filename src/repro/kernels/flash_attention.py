@@ -1,0 +1,115 @@
+"""Flash (block-wise online-softmax) attention Pallas kernel (TPU target).
+
+Prefill hot spot of the cascade's small model: causal (optionally
+sliding-window) GQA attention with (128, 128) q/kv tiles, fp32 online
+softmax accumulators in VMEM, never materializing [T, S] scores in HBM.
+
+Grid: (batch, heads, q_blocks, kv_blocks) — kv innermost; the kv loop
+carries (m, l, acc) scratch; the final kv step normalizes and writes the
+output tile. GQA: kv head index = q head // group.
+
+TPU adaptation vs CUDA flash-attention: tile sizes follow MXU 128-lane
+alignment; block-level causal skipping is expressed via masking here (a
+production grid would prune fully-masked kv blocks with a custom index
+map — measured in EXPERIMENTS.md §Perf as a compute-term lever).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_kb: int, qb: int, kb: int, causal: bool, window: int,
+            scale: float, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # [qb, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [kb, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    mask = (qpos < seq_q) & (kpos < seq_k)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    bm = s.max(axis=1)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, bm)
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kb - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None,
+                    qb: int = 128, kb: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [B,T,H,hd]; k,v [B,S,KV,hd] (H % KV == 0). Returns [B,T,H,hd]."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    group = H // KV
+    scale = scale or 1.0 / np.sqrt(hd)
+    qb = min(qb, T)
+    kb = min(kb, S)
+    n_qb = (T + qb - 1) // qb
+    n_kb = (S + kb - 1) // kb
+    Tp, Sp = n_qb * qb, n_kb * kb
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    kernel = functools.partial(_kernel, n_kb=n_kb, qb=qb, kb=kb,
+                               causal=causal, window=window, scale=scale,
+                               seq_q=T, seq_k=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, qb, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // group, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, H, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((qb,), jnp.float32),
+                        pltpu.VMEM((qb,), jnp.float32),
+                        pltpu.VMEM((qb, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :T]

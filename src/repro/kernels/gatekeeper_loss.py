@@ -1,0 +1,148 @@
+"""Fused Gatekeeper loss Pallas kernel (TPU target).
+
+Computes, in ONE pass over the vocabulary and fused with the unembedding
+matmul, the per-token quantities of eqs. (2)-(5):
+
+    ce_t   = logsumexp(l_t) - l_t[target]
+    kl_t   = log V - H(p_t)
+    corr_t = argmax(l_t) == target
+
+without materializing [T, V] logits in HBM. Entropy is accumulated online:
+with running max m, s = Σ e^{l-m}, w = Σ e^{l-m}·l we have
+H = (m + log s) - w/s — so one streaming pass suffices (the two-pass XLA
+fallback lives in repro/launch/steps.py).
+
+Grid: (token_blocks, vocab_blocks, d_blocks); d innermost accumulates the
+logits tile on the MXU; the vocab step folds the finished tile into the
+online accumulators; the last vocab step writes per-token outputs.
+
+Block shapes are 128-lane aligned for the MXU/VPU; VMEM footprint
+(TB=128, VB=512, DB=512, fp32):
+  x 256 KiB + table 1 MiB + logits scratch 256 KiB + row stats ~3 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(x_ref, tbl_ref, tgt_ref, ce_ref, kl_ref, corr_ref, ent_ref,
+            logits_ref, m_ref, s_ref, w_ref, amax_ref, aidx_ref, tl_ref,
+            *, n_vb: int, n_db: int, vb_size: int, vocab: int):
+    vb = pl.program_id(1)
+    db = pl.program_id(2)
+
+    # ---- accumulate logits tile over d blocks (MXU) ----
+    @pl.when(db == 0)
+    def _():
+        logits_ref[...] = jnp.zeros_like(logits_ref)
+    logits_ref[...] += jnp.dot(x_ref[...], tbl_ref[...].T,
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(db == n_db - 1)
+    def _fold():
+        # ---- online row update with the finished [TB, VB] tile ----
+        @pl.when(vb == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            s_ref[...] = jnp.zeros_like(s_ref)
+            w_ref[...] = jnp.zeros_like(w_ref)
+            amax_ref[...] = jnp.full_like(amax_ref, NEG)
+            aidx_ref[...] = jnp.zeros_like(aidx_ref)
+            tl_ref[...] = jnp.zeros_like(tl_ref)
+
+        logits = logits_ref[...]                     # [TB, VB] fp32
+        col = vb * vb_size + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        valid_col = col < vocab                      # tail padding guard
+        logits = jnp.where(valid_col, logits, NEG)
+
+        bm = logits.max(axis=1)                      # block max
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, bm)
+        scale = jnp.exp(m_old - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(valid_col, p, 0.0)
+        s_ref[...] = s_ref[...] * scale + p.sum(axis=1)
+        w_ref[...] = w_ref[...] * scale + (p * logits).sum(axis=1)
+        m_ref[...] = m_new
+
+        bidx = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        better = bm > amax_ref[...]
+        amax_ref[...] = jnp.where(better, bm, amax_ref[...])
+        aidx_ref[...] = jnp.where(better, bidx + vb * vb_size, aidx_ref[...])
+
+        tgt = tgt_ref[...]
+        loc = tgt - vb * vb_size
+        in_blk = (loc >= 0) & (loc < vb_size)
+        row = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0) * 0
+        sel = (col == (vb * vb_size + jnp.clip(loc, 0, vb_size - 1))[:, None])
+        got = jnp.where(sel, logits, 0.0).sum(axis=1)
+        tl_ref[...] = jnp.where(in_blk, got, tl_ref[...])
+
+        @pl.when(vb == n_vb - 1)
+        def _final():
+            lse = m_ref[...] + jnp.log(s_ref[...])
+            ent = lse - w_ref[...] / s_ref[...]
+            ce_ref[...] = lse - tl_ref[...]
+            kl_ref[...] = np.log(float(vocab)) - ent
+            ent_ref[...] = ent
+            corr_ref[...] = (aidx_ref[...] == tgt_ref[...]).astype(jnp.float32)
+
+
+def gatekeeper_loss_tokens(x: jnp.ndarray, table: jnp.ndarray,
+                           targets: jnp.ndarray, *,
+                           tb: int = 128, vb: int = 512, db: int = 512,
+                           interpret: bool = False):
+    """Per-token (ce, kl, correct, entropy) from hidden states.
+
+    x [T, d] (T padded to tb), table [V, d], targets [T] int32.
+    """
+    T, d = x.shape
+    V = table.shape[0]
+    assert T % tb == 0, (T, tb)
+    db = min(db, d)
+    while d % db != 0:
+        db //= 2
+    vb = min(vb, V)
+    n_vb = (V + vb - 1) // vb
+    Vpad = n_vb * vb
+    if Vpad != V:
+        table = jnp.pad(table, ((0, Vpad - V), (0, 0)))
+    n_db = d // db
+
+    grid = (T // tb, n_vb, n_db)
+    kernel = functools.partial(_kernel, n_vb=n_vb, n_db=n_db, vb_size=vb,
+                               vocab=V)
+    out_shapes = [jax.ShapeDtypeStruct((T,), jnp.float32) for _ in range(4)]
+    f32 = jnp.float32
+    ce, kl, corr, ent = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, db), lambda t, v, k: (t, k)),
+            pl.BlockSpec((vb, db), lambda t, v, k: (v, k)),
+            pl.BlockSpec((tb,), lambda t, v, k: (t,)),
+        ],
+        out_specs=[pl.BlockSpec((tb,), lambda t, v, k: (t,))] * 4,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((tb, vb), f32),     # logits tile
+            pltpu.VMEM((tb,), f32),        # m
+            pltpu.VMEM((tb,), f32),        # s
+            pltpu.VMEM((tb,), f32),        # w
+            pltpu.VMEM((tb,), f32),        # amax val
+            pltpu.VMEM((tb,), jnp.int32),  # amax idx
+            pltpu.VMEM((tb,), f32),        # target logit
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32), table.astype(jnp.float32),
+      targets.astype(jnp.int32))
+    return ce, kl, corr, ent

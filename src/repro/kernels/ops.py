@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) for compiled Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import deferral_entropy as _de
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gatekeeper_loss as _gk
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def _pad_tokens(x, tb):
+    T = x.shape[0]
+    Tp = ((T + tb - 1) // tb) * tb
+    if Tp == T:
+        return x, T
+    pad = [(0, Tp - T)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad), T
+
+
+@partial(jax.jit, static_argnames=("alpha", "interpret", "tb", "vb", "db"))
+def gatekeeper_loss_fused(x, table, targets, valid=None, *, alpha: float = 0.5,
+                          interpret: Optional[bool] = None,
+                          tb: int = 128, vb: int = 512, db: int = 512):
+    """Scalar Gatekeeper loss + per-token aux, via the fused Pallas kernel.
+
+    x [T, d] final hidden states; table [V, d]; targets [T]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, T = _pad_tokens(x, tb)
+    tp, _ = _pad_tokens(targets, tb)
+    ce, kl, corr, ent = _gk.gatekeeper_loss_tokens(
+        xp, table, tp, tb=tb, vb=vb, db=db, interpret=interpret)
+    ce, kl, corr, ent = (a[:T] for a in (ce, kl, corr, ent))
+    v = jnp.ones((T,), jnp.float32) if valid is None else valid.astype(jnp.float32)
+    denom = jnp.maximum(v.sum(), 1.0)
+    l_corr = (ce * corr * v).sum() / denom
+    l_incorr = (kl * (1 - corr) * v).sum() / denom
+    loss = alpha * l_corr + (1 - alpha) * l_incorr
+    return loss, {"ce": ce, "kl": kl, "correct": corr, "entropy": ent,
+                  "l_corr": l_corr, "l_incorr": l_incorr}
+
+
+@partial(jax.jit, static_argnames=("interpret", "tb", "vb"))
+def deferral_signal(logits, *, interpret: Optional[bool] = None,
+                    tb: int = 128, vb: int = 2048):
+    """(neg_entropy, max_prob, argmax) per row of logits [T, V] (eqs. 7-8)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lp, T = _pad_tokens(logits, tb)
+    nent, mprob, amax = _de.deferral_entropy(lp, tb=tb, vb=vb,
+                                             interpret=interpret)
+    return nent[:T], mprob[:T], amax[:T]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret", "qb", "kb"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: Optional[bool] = None,
+                    qb: int = 128, kb: int = 128):
+    """Block-wise online-softmax GQA attention (see flash_attention.py)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               qb=qb, kb=kb, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(q, k, v, logw, u, state0, *, chunk: int = 64,
+        interpret: Optional[bool] = None):
+    """RWKV6 chunked recurrence (see wkv_scan.py). The [K,V] state stays
+    in VMEM across chunk steps; oracle: models/ssm.linear_attention_scan
+    (mode="rwkv")."""
+    from repro.kernels import wkv_scan as _wkv
+    interpret = _default_interpret() if interpret is None else interpret
+    return _wkv.wkv_scan(q, k, v, logw, u, state0, chunk=chunk,
+                         interpret=interpret)

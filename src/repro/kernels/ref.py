@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These mirror repro.core math but are kept dependency-free so kernel tests
+compare against a single obvious implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gatekeeper_loss_ref(x: jnp.ndarray, table: jnp.ndarray,
+                        targets: jnp.ndarray, alpha: float,
+                        valid: jnp.ndarray):
+    """Per-token Gatekeeper terms from final hidden states.
+
+    x [T, d], table [V, d], targets [T], valid [T] in {0,1}.
+    Returns dict with per-token ce, kl, correct, and the scalar loss
+    (normalized by sum(valid), paper eqs. 1-5).
+    """
+    logits = jnp.einsum("td,vd->tv", x, table).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    V = table.shape[0]
+    ce = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    ent = -(jnp.exp(logp) * logp).sum(-1)
+    kl = jnp.log(float(V)) - ent
+    correct = (logits.argmax(-1) == targets).astype(jnp.float32)
+    v = valid.astype(jnp.float32)
+    denom = jnp.maximum(v.sum(), 1.0)
+    l_corr = (ce * correct * v).sum() / denom
+    l_incorr = (kl * (1 - correct) * v).sum() / denom
+    loss = alpha * l_corr + (1 - alpha) * l_incorr
+    return {"ce": ce, "kl": kl, "correct": correct, "entropy": ent,
+            "loss": loss, "l_corr": l_corr, "l_incorr": l_incorr}
+
+
+def deferral_entropy_ref(logits: jnp.ndarray):
+    """(neg_entropy [T], max_prob [T], argmax [T]) from logits [T, V]."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    neg_ent = (p * logp).sum(-1)
+    return neg_ent, p.max(-1), jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """Plain softmax attention. q [B,T,H,hd]; k,v [B,S,KV,hd] (GQA)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    scale = scale or 1.0 / np.sqrt(hd)
+    g = H // KV
+    qg = q.reshape(B, T, KV, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd)

@@ -1,0 +1,121 @@
+"""Chunked linear-recurrence (RWKV6 WKV / Mamba2 SSD) Pallas TPU kernel.
+
+The roofline table shows rwkv6-3b and zamba2's Mamba2 blocks are
+memory-bound in training/prefill and their per-token state read/write
+dominates decode: the recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)      (RWKV6: exclusive+bonus)
+    y_t = q_t^T S_t                                 (Mamba2: inclusive)
+
+is evaluated chunk-parallel (models/ssm.linear_attention_chunked); this
+kernel fuses one (batch*head) stream's whole scan into a single program:
+the [K, V] state lives in VMEM scratch across chunk grid steps, so HBM
+traffic is exactly q/k/v/w in + y out — no per-chunk state round-trips.
+
+Grid: (BH, n_chunks) with the chunk axis innermost (sequential); the
+decay algebra matches the pure-JAX chunked path: everything is
+exp(cum_t - cum_s) with t >= s, never a positive exponent.
+
+TPU tiling note: K = V = 64 for rwkv6-3b; on real hardware two heads
+would be fused per program to fill the 128-lane dimension (the oracle
+semantics are per-head, so that is a pure layout change). Validated in
+interpret mode against models/ssm.linear_attention_scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+            y_ref, sout_ref, state_ref, *, n_chunks: int, chunk: int,
+            mode: str):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)          # [c, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # [c, V]
+    lw = lw_ref[0].astype(jnp.float32)        # [c, K] (bcast if scalar)
+    u = u_ref[0].astype(jnp.float32)          # [K]
+    S = state_ref[...]                        # [K, V]
+
+    cum = jnp.cumsum(lw, axis=0)              # inclusive
+    cum_ex = cum - lw                         # exclusive
+    # rwkv reads S BEFORE the current token (exclusive); mamba after
+    out_cum = cum if mode == "mamba" else cum_ex
+    # inter-chunk: q decayed from chunk start against carried state
+    y = jnp.dot(q * jnp.exp(out_cum), S, preferred_element_type=jnp.float32)
+    # intra-chunk decay matrix A[t,s] = exp(out_cum_t - cum_s), t (>=|>) s
+    diff = out_cum[:, None, :] - cum[None, :, :]           # [c, c, K]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool),
+                   k=0 if mode == "mamba" else -1)
+    amat = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("tk,sk,tsk->ts", q, k, amat)
+    y = y + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    if mode == "rwkv":
+        # bonus (current token through diag(u))
+        y = y + ((q * u[None, :] * k).sum(axis=1))[:, None] * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state carry: S' = exp(cum_last) * S + sum_s exp(cum_last - cum_s) k v
+    last = cum[-1, :]                          # [K]
+    kdec = k * jnp.exp(last[None, :] - cum)
+    state_ref[...] = (jnp.exp(last)[:, None] * S
+                      + jnp.dot(kdec.T, v,
+                                preferred_element_type=jnp.float32))
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        sout_ref[0] = state_ref[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret", "mode"))
+def wkv_scan(q, k, v, logw, u, state0, *, chunk: int = 64,
+             interpret: bool = False, mode: str = "rwkv"):
+    """Chunked linear-recurrence kernel. q,k [B,T,H,K]; v [B,T,H,V];
+    logw broadcastable to [B,T,H,K]; u [H,K] (ignored for mode="mamba");
+    state0 [B,H,K,V]. mode: "rwkv" (exclusive + diag(u) bonus, RWKV6) or
+    "mamba" (inclusive, Mamba2/SSD scalar-decay broadcast over K).
+    Returns (y [B,T,H,V], state [B,H,K,V])."""
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    while T % chunk:
+        chunk //= 2
+    nc = T // chunk
+    BH = B * H
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(BH, T, x.shape[-1])
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    lwf = flat(jnp.broadcast_to(logw, (B, T, H, K)))
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(BH, K)
+    s0 = state0.reshape(BH, K, V)
+
+    seq_spec = lambda d: pl.BlockSpec((1, chunk, d),
+                                      lambda bh, i: (bh, i, 0))
+    y, sout = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc, chunk=chunk, mode=mode),
+        grid=(BH, nc),
+        in_specs=[seq_spec(K), seq_spec(K), seq_spec(V), seq_spec(K),
+                  pl.BlockSpec((1, K), lambda bh, i: (bh, 0)),
+                  pl.BlockSpec((1, K, V), lambda bh, i: (bh, 0, 0))],
+        out_specs=[seq_spec(V),
+                   pl.BlockSpec((1, K, V), lambda bh, i: (bh, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BH, T, V), jnp.float32),
+                   jax.ShapeDtypeStruct((BH, K, V), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, lwf, uf, s0)
+    y = y.reshape(B, H, T, V).transpose(0, 2, 1, 3)
+    return y, sout.reshape(B, H, K, V)

@@ -1,0 +1,38 @@
+"""Production mesh construction (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS host-device-count=512 before importing
+jax; smoke tests and benches see the real (1-device) platform.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding import ParallelContext
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_context(mesh: Mesh) -> ParallelContext:
+    pod = "pod" if "pod" in mesh.axis_names else None
+    return ParallelContext(mesh=mesh, data_axis="data", model_axis="model",
+                           pod_axis=pod)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for CPU smoke runs through the same code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~)
+HBM_BYTES = 16 * 2**30          # 16 GiB

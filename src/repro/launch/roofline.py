@@ -1,0 +1,181 @@
+"""Roofline-term extraction from compiled dry-run artifacts (TPU v5e target).
+
+    compute term    = HLO_FLOPs(per device) / peak_FLOP/s
+    memory term     = HLO_bytes(per device) / HBM_bw
+    collective term = collective_bytes(per device) / link_bw
+
+`cost_analysis()` is per-partition post-SPMD (verified in-container), so its
+flops/bytes are already per device. Collective bytes are parsed from the
+per-partition optimized HLO: we sum result sizes of all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute ops with ring-algorithm
+byte factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.configs import ModelConfig, InputShape
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW, HBM_BYTES
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))       # [n_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved over ICI, by collective type (ring factors)."""
+    out: Dict[str, float] = {"all-reduce": 0.0, "all-gather": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if op == "all-reduce":
+            moved = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            moved = size * (g - 1) / g           # result = gathered
+        elif op == "reduce-scatter":
+            moved = size * (g - 1)               # result = scattered shard
+        elif op == "all-to-all":
+            moved = size * (g - 1) / g
+        else:                                     # collective-permute
+            moved = size
+        out[op] += moved
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k not in ("count", "total"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_flops_ratio: float        # MODEL_FLOPS / (HLO_FLOPs * n_devices)
+    peak_memory_bytes: Optional[float] = None
+    fits_hbm: Optional[bool] = None
+    collectives: Optional[Dict] = None
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},"
+                f"{self.compute_s:.6g},{self.memory_s:.6g},"
+                f"{self.collective_s:.6g},{self.dominant},"
+                f"{self.useful_flops_ratio:.4g}")
+
+
+def make_report(arch: str, shape: str, mesh_name: str, n_devices: int,
+                cost: Dict, hlo_text: str, model_flops: float,
+                memory_stats=None) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    ratio = model_flops / max(flops * n_devices, 1.0)
+    peak = None
+    fits = None
+    if memory_stats is not None:
+        peak = float(memory_stats.argument_size_in_bytes
+                     + memory_stats.output_size_in_bytes
+                     + memory_stats.temp_size_in_bytes
+                     - memory_stats.alias_size_in_bytes)
+        fits = peak <= HBM_BYTES
+    return RooflineReport(arch, shape, mesh_name, flops, byts, coll["total"],
+                          compute_s, memory_s, collective_s, dominant,
+                          model_flops, ratio, peak, fits, coll)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS: 6·N·D (train) / 2·N·D (inference), N = active
+# matmul params (MoE counts top-k routed + shared experts; the embedding
+# gather table is excluded, the unembed projection included). A causal
+# attention term is added since 32k-prefill score FLOPs are material.
+# ---------------------------------------------------------------------------
+
+def active_matmul_params(cfg: ModelConfig) -> float:
+    from repro.models import transformer as tfm
+    from repro.sharding import param_count
+    params = tfm.init_params(cfg, None, abstract=True)
+    total = param_count(params)
+    # exclude the gather-only embedding table (unembed tied: the same table
+    # does participate in a matmul — count it once, which `total` already
+    # does when untied; subtract the gather copy otherwise)
+    if "unembed" in params:
+        total -= cfg.vocab_size * cfg.d_model
+    if cfg.moe is not None:
+        n_moe = cfg.n_layers - cfg.moe.n_dense_layers
+        per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert
+        routed_total = n_moe * cfg.moe.n_experts * per_expert
+        routed_active = n_moe * cfg.moe.top_k * per_expert
+        total = total - routed_total + routed_active
+    return float(total)
+
+
+def analytic_model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n = active_matmul_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n * tokens
+    # attention score+value FLOPs (causal): 2*2*S_kv/2 per token per layer*H*hd
+    if cfg.family not in ("ssm_rwkv",):
+        S_kv = shape.seq_len
+        if cfg.sliding_window:
+            S_kv = min(S_kv, cfg.sliding_window)
+        hH = cfg.n_heads * cfg.head_dim
+        if shape.kind == "decode":
+            att = 4.0 * shape.global_batch * S_kv * cfg.n_layers * hH
+        else:
+            att = 2.0 * shape.global_batch * shape.seq_len * S_kv * \
+                cfg.n_layers * hH
+        flops += att * (3.0 if shape.kind == "train" else 1.0)
+    return flops

@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input-shape) combo —
+weak-type-correct, sharded, zero allocation. The dry-run lowers against
+these; the trainer/server build real arrays of the same shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs import ModelConfig, InputShape
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.sharding import (AbstractParam, logical_to_spec, tree_shardings,
+                            tree_shape_structs)
+from repro.training import optim
+
+
+def _sds(shape, dtype, logical_axes, mesh: Mesh, rules=None):
+    spec = logical_to_spec(logical_axes, shape, mesh, rules)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_to_sds(tree: Any, mesh: Mesh, rules=None) -> Any:
+    """AbstractParam tree -> ShapeDtypeStruct tree with shardings attached."""
+    def conv(l: AbstractParam):
+        return _sds(l.shape, l.dtype, l.logical_axes, mesh, rules)
+    return jax.tree.map(conv, tree,
+                        is_leaf=lambda x: isinstance(x, AbstractParam))
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-assignment policy: long_500k requires sub-quadratic attention —
+    SSM/hybrid run natively; full-attention archs run the implemented
+    sliding-window variant (window 4096). Training/decode use the arch's
+    native attention; PREFILL defaults to chunked online-softmax attention
+    (adopted from the §Perf hillclimb: kills the S² score HBM wall, no
+    backward pass to worry about)."""
+    cfg = cfg.replace(param_dtype="bfloat16", compute_dtype="bfloat16")
+    if shape.name == "long_500k" and cfg.family not in ("ssm_rwkv", "hybrid"):
+        cfg = cfg.replace(sliding_window=4096)
+    if shape.kind == "prefill" and cfg.family != "ssm_rwkv":
+        cfg = cfg.replace(attn_chunk=1024)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                rules=None) -> Dict:
+    """Model-input ShapeDtypeStructs for a training/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        P = cfg.vision.n_patches
+        batch["tokens"] = _sds((B, S - P), jnp.int32, ("batch", None), mesh,
+                               rules)
+        batch["patches"] = _sds((B, P, cfg.d_model), jnp.bfloat16,
+                                ("batch", None, "act_embed"), mesh, rules)
+    elif cfg.family == "encdec":
+        batch["tokens"] = _sds((B, S), jnp.int32, ("batch", None), mesh,
+                               rules)
+        batch["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model),
+                               jnp.bfloat16, ("batch", None, "act_embed"),
+                               mesh, rules)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, ("batch", None), mesh,
+                               rules)
+    if shape.kind == "train":
+        batch["targets"] = _sds((B, S), jnp.int32, ("batch", None), mesh,
+                                rules)
+    return batch
+
+
+def model_state_specs(cfg: ModelConfig, mesh: Mesh,
+                      with_opt: bool, rules=None,
+                      opt_rules=None) -> Tuple[Any, Any]:
+    """(params, opt_state) as sharded SDS trees (abstract init, no alloc).
+
+    opt_rules: separate rule table for AdamW mu/nu — ZeRO-1: shard the
+    optimizer state over MORE axes than the params (e.g. the pod axis);
+    GSPMD then reduce-scatters grads into the opt shard at the update and
+    all-gathers fresh params after, with no per-layer scan resharding."""
+    params_abs = tfm.init_params(cfg, None, abstract=True)
+    params = abstract_to_sds(params_abs, mesh, rules)
+    opt = None
+    if with_opt:
+        opt_abs = optim.adamw_init(params_abs)
+        orl = opt_rules if opt_rules is not None else rules
+        opt = optim.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=abstract_to_sds(opt_abs.mu, mesh, orl),
+            nu=abstract_to_sds(opt_abs.nu, mesh, orl))
+    return params, opt
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                rules=None) -> Any:
+    B, S = shape.global_batch, shape.seq_len
+    init = (encdec_lib.init_cache if cfg.family == "encdec"
+            else tfm.init_cache)
+    cache_abs = init(cfg, B, S, abstract=True)
+    return abstract_to_sds(cache_abs, mesh, rules)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 rules=None):
+    """(token, position) stand-ins for serve_step."""
+    B = shape.global_batch
+    token = _sds((B,), jnp.int32, ("batch",), mesh, rules)
+    position = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, position

@@ -1,0 +1,505 @@
+"""Attention blocks: GQA (optional QKV bias / sliding window / cross-attn)
+and DeepSeek-style MLA (multi-head latent attention, kv_lora compression with
+decoupled RoPE and weight-absorbed decode).
+
+All functions operate on ONE layer's params (scan slices stacked trees).
+Caches are dicts of arrays; decode uses dynamic_update_slice at `position`.
+
+Sharding: head dims carry logical axis "heads"/"kv_heads" (→ `model`);
+the output projection contracts the sharded head axis, so XLA inserts the
+canonical tensor-parallel all-reduce after each attention block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (ParamFactory, apply_rope, make_causal_mask,
+                                 make_sliding_mask, rms_norm)
+from repro.sharding import ParallelContext
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None     # None = full causal
+    causal: bool = True                      # False for encoder self-attn
+    attn_chunk: Optional[int] = None         # online-softmax KV chunking
+    # MLA fields (used only by the mla_* functions)
+    q_lora: int = 0
+    kv_lora: int = 0
+    rope_dim: int = 64
+    v_head_dim: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(pf: ParamFactory, cfg: AttnConfig, stacked: int = 0) -> dict:
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": pf.param("wq", L + (d, H, hd), LA + ("embed", "heads", "head_dim"),
+                       fan_in=d),
+        "wk": pf.param("wk", L + (d, KV, hd), LA + ("embed", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wv": pf.param("wv", L + (d, KV, hd), LA + ("embed", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wo": pf.param("wo", L + (H, hd, d), LA + ("heads", "head_dim", "embed"),
+                       fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pf.param("bq", L + (H, hd), LA + ("heads", "head_dim"), init="zeros")
+        p["bk"] = pf.param("bk", L + (KV, hd), LA + ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = pf.param("bv", L + (KV, hd), LA + ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def init_gqa_cache(cfg: AttnConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, stacked: int = 0, abstract=False) -> dict:
+    from repro.sharding import AbstractParam
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    shape = L + (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = LA + ("batch", "cache_seq", "kv_heads", "head_dim")
+    if abstract:
+        return {"k": AbstractParam(shape, dtype, axes),
+                "v": AbstractParam(shape, dtype, axes)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _attend(q, k, v, mask, scale, ctx: ParallelContext,
+            chunk: Optional[int] = None):
+    """q [B,Tq,H,hd]; k,v [B,Tk,KV,hd]; mask [Tq,Tk] or [B,Tq,Tk] bool.
+
+    If `chunk` is set and divides Tk, runs the online-softmax KV-chunked
+    schedule (flash-attention dataflow at the XLA level): the [Tq, Tk]
+    score tensor is never live in full — only one [Tq, chunk] tile per
+    scan step. This is the XLA analogue of kernels/flash_attention.py and
+    is what the TPU kernel does inside VMEM.
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    qg = q.reshape(B, Tq, KV, group, hd)
+    if chunk:
+        while k.shape[1] % chunk:
+            chunk //= 2
+    if chunk and chunk >= 128 and k.shape[1] > chunk:
+        return _attend_chunked(qg, k, v, mask, scale, chunk
+                               ).reshape(B, Tq, H, v.shape[-1]).astype(q.dtype)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        m = mask[None, None, None, :, :]
+    else:
+        m = mask[:, None, None, :, :]
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Tq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _attend_chunked(qg, k, v, mask, scale, chunk: int):
+    """Online-softmax over KV chunks. qg [B,Tq,KV,g,hd]; returns
+    [B,Tq,KV,g,hd] fp32-accumulated. Masked-out rows produce zeros."""
+    B, Tq, KV, g, hd = qg.shape
+    Tk = k.shape[1]
+    nc = Tk // chunk
+    neg = jnp.float32(-jnp.inf)
+
+    def body(carry, i):
+        m, l, acc = carry                            # [B,KV,g,Tq](x2), [B,KV,g,Tq,hd]
+        ks = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, 1)
+        mk = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, mask.ndim - 1)
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, ks,
+                       preferred_element_type=jnp.float32) * scale
+        mb = (mk[None, None, None, :, :] if mk.ndim == 2
+              else mk[:, None, None, :, :])
+        s = jnp.where(mb, s, neg)
+        cm = s.max(-1)                               # [B,KV,g,Tq]
+        nm = jnp.maximum(m, cm)
+        # exp(-inf - -inf) guards: fully-masked rows stay at zero weight
+        safe = jnp.isfinite(nm)
+        p = jnp.where(safe[..., None], jnp.exp(s - nm[..., None]), 0.0)
+        alpha = jnp.where(safe, jnp.exp(jnp.minimum(m - nm, 0.0)), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), alpha, 0.0)
+        l = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgts,bskh->bkgth", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (nm, l, acc), None
+
+    init = (jnp.full((B, KV, g, Tq), neg, jnp.float32),
+            jnp.zeros((B, KV, g, Tq), jnp.float32),
+            jnp.zeros((B, KV, g, Tq, v.shape[-1]), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,KV,g,Tq,hd]
+    return out.transpose(0, 3, 1, 2, 4)
+
+
+def gqa_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, ctx: ParallelContext,
+                cache: Optional[dict] = None,
+                cache_offset=0) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence self-attention (training / prefill).
+
+    If `cache` is given, writes K/V at [cache_offset, cache_offset+T) and
+    attends over the written prefix (prefill); else attends in-sequence.
+    """
+    B, T, d = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = ctx.constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    v = ctx.constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+
+    new_cache = None
+    if cache is not None and cache["k"].shape[1] < T:
+        # windowed ring-buffer cache smaller than the prompt: attend
+        # IN-SEQUENCE (sliding mask) and store only the last `window`
+        # tokens at their ring slots (slot = position % window).
+        S = cache["k"].shape[1]
+        k_last = k[:, T - S:]
+        v_last = v[:, T - S:]
+        shift = (T - S) % S
+        ck = jnp.roll(k_last.astype(cache["k"].dtype), shift, axis=1)
+        cv = jnp.roll(v_last.astype(cache["v"].dtype), shift, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        window = cfg.sliding_window or S
+        mask = make_sliding_mask(T, T, cache_offset, window)
+        out = _attend(q, k, v, mask, scale, ctx, cfg.attn_chunk)
+    elif cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_offset, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        S = ck.shape[1]
+        if cfg.sliding_window:
+            mask = make_sliding_mask(T, S, cache_offset, cfg.sliding_window)
+        else:
+            mask = make_causal_mask(T, S, cache_offset)
+        out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, scale,
+                      ctx, cfg.attn_chunk)
+    else:
+        if not cfg.causal:
+            mask = jnp.ones((T, T), bool)
+        elif cfg.sliding_window:
+            mask = make_sliding_mask(T, T, 0, cfg.sliding_window)
+        else:
+            mask = make_causal_mask(T, T, 0)
+        out = _attend(q, k, v, mask, scale, ctx, cfg.attn_chunk)
+
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = ctx.constrain(y, ("batch", "seq", "act_embed"))
+    return y, new_cache
+
+
+def _flash_decode_sharded(q, ck, cv, mask, scale, ctx: ParallelContext):
+    """Decode attention over a sequence-sharded KV cache WITHOUT gathering
+    the cache (flash-decode): each shard computes a partial
+    (row-max, lse, p@v) over its local seq chunk, then psum-combines.
+
+    Returns None when the cache's seq dim is not sharded (caller falls
+    back to the dense path)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import logical_to_spec
+    mesh = ctx.mesh
+    cache_spec = logical_to_spec(("batch", "cache_seq", "kv_heads", None),
+                                 ck.shape, mesh, ctx.rules)
+    if cache_spec[1] is None or mask.ndim != 2:
+        return None
+    seq_axes = (cache_spec[1],) if isinstance(cache_spec[1], str) \
+        else tuple(cache_spec[1])
+    qspec = P(cache_spec[0], None, None, None)
+    kvspec = P(cache_spec[0], cache_spec[1], cache_spec[2], None)
+    mspec = P(None, cache_spec[1])
+
+    def body(ql, kl, vl, ml):
+        B, Tq, H, hd = ql.shape
+        KV = kl.shape[2]
+        g = H // KV
+        qg = ql.reshape(B, Tq, KV, g, hd)
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, kl,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(ml[None, None, None, :, :], s, -jnp.inf)
+        m = s.max(-1)                                   # local row max
+        M = jax.lax.pmax(m, seq_axes)                   # global row max
+        safe = jnp.isfinite(M)
+        p = jnp.where(safe[..., None], jnp.exp(s - M[..., None]), 0.0)
+        l = jax.lax.psum(p.sum(-1), seq_axes)
+        pv = jnp.einsum("bkgts,bskh->bkgth", p.astype(vl.dtype), vl,
+                        preferred_element_type=jnp.float32)
+        pv = jax.lax.psum(pv, seq_axes)
+        out = pv / jnp.maximum(l, 1e-30)[..., None]
+        return (out.transpose(0, 3, 1, 2, 4)
+                .reshape(B, Tq, H, hd).astype(ql.dtype))
+
+    return jax.shard_map(body, mesh=mesh,
+                         in_specs=(qspec, kvspec, kvspec, mspec),
+                         out_specs=qspec, check_vma=False)(q, ck, cv, mask)
+
+
+def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
+               position, cache: dict, ctx: ParallelContext
+               ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x [B,1,d]; position scalar int (same for batch —
+    the serving engine uses per-request masks for ragged batches).
+
+    For sliding-window configs the cache is a ring buffer of size `window`;
+    the write slot is position % window and relative order is handled by
+    the positional mask below.
+    """
+    B, T, d = x.shape
+    assert T == 1
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    pos = jnp.asarray(position)[None]
+    q = apply_rope(q, pos[None, :], cfg.rope_theta)
+    k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    S = cache["k"].shape[1]
+    ring = cfg.sliding_window is not None and S <= cfg.sliding_window
+    if ring:
+        slot = jnp.mod(position, S)
+    else:
+        slot = position
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if ring:
+        # ring buffer: slot s holds absolute position p iff p % S == s and
+        # p in (position - S, position]; every slot written so far is valid
+        # once position >= S - 1. Mask = slots with abs pos > position - S.
+        idx = jnp.arange(S)
+        abs_pos = position - jnp.mod(position - idx, S)
+        mask = (abs_pos >= 0)[None, :]                     # [1, S]
+    else:
+        mask = (jnp.arange(S) <= position)[None, :]
+        if cfg.sliding_window:
+            # linear cache larger than the window: restrict attendance
+            mask = mask & (jnp.arange(S) > position - cfg.sliding_window)[None, :]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = None
+    if ctx.mesh is not None:
+        out = _flash_decode_sharded(q, ck.astype(q.dtype),
+                                    cv.astype(q.dtype), mask, scale, ctx)
+    if out is None:
+        out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, scale,
+                      ctx)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec): KV computed once from encoder output
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(pf: ParamFactory, cfg: AttnConfig, stacked: int = 0) -> dict:
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": pf.param("xwq", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wk": pf.param("xwk", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wv": pf.param("xwv", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wo": pf.param("xwo", L + (H, hd, d), LA + ("heads", "head_dim", "embed"),
+                       fan_in=H * hd),
+    }
+
+
+def cross_attn_kv(params: dict, enc_out: jnp.ndarray) -> dict:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_attn_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
+                       kv: dict, ctx: ParallelContext) -> jnp.ndarray:
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    S = kv["k"].shape[1]
+    mask = jnp.ones((x.shape[1], S), bool)
+    out = _attend(q, kv["k"].astype(q.dtype), kv["v"].astype(q.dtype), mask,
+                  1.0 / np.sqrt(cfg.head_dim), ctx)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(pf: ParamFactory, cfg: AttnConfig, stacked: int = 0) -> dict:
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
+    qr, kvr = cfg.q_lora, cfg.kv_lora
+    p = {
+        "wdq": pf.param("wdq", L + (d, qr), LA + ("embed", "q_lora"), fan_in=d),
+        "q_norm": pf.param("q_norm", L + (qr,), LA + ("q_lora",), init="zeros"),
+        "wuq": pf.param("wuq", L + (qr, H, dn + dr), LA + ("q_lora", "heads", "head_dim"),
+                        fan_in=qr),
+        "wdkv": pf.param("wdkv", L + (d, kvr), LA + ("embed", "kv_lora"), fan_in=d),
+        "kv_norm": pf.param("kv_norm", L + (kvr,), LA + ("kv_lora",), init="zeros"),
+        "wkr": pf.param("wkr", L + (d, dr), LA + ("embed", "head_dim"), fan_in=d),
+        "wuk": pf.param("wuk", L + (kvr, H, dn), LA + ("kv_lora", "heads", "head_dim"),
+                        fan_in=kvr),
+        "wuv": pf.param("wuv", L + (kvr, H, dv), LA + ("kv_lora", "heads", "head_dim"),
+                        fan_in=kvr),
+        "wo": pf.param("wo", L + (H, dv, d), LA + ("heads", "head_dim", "embed"),
+                       fan_in=H * dv),
+    }
+    return p
+
+
+def init_mla_cache(cfg: AttnConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, stacked: int = 0, abstract=False) -> dict:
+    """MLA caches the COMPRESSED kv (kv_lora) + shared rope key — this is the
+    architecture's memory win (cache is head-count independent)."""
+    from repro.sharding import AbstractParam
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    ckv_shape = L + (batch, max_len, cfg.kv_lora)
+    kr_shape = L + (batch, max_len, cfg.rope_dim)
+    ckv_axes = LA + ("batch", "cache_seq", "kv_lora")
+    kr_axes = LA + ("batch", "cache_seq", "head_dim")
+    if abstract:
+        return {"ckv": AbstractParam(ckv_shape, dtype, ckv_axes),
+                "kr": AbstractParam(kr_shape, dtype, kr_axes)}
+    return {"ckv": jnp.zeros(ckv_shape, dtype), "kr": jnp.zeros(kr_shape, dtype)}
+
+
+def _mla_qkr(params, cfg, x, positions):
+    cq = jnp.einsum("btd,dr->btr", x, params["wdq"])
+    cq = rms_norm(cq, params["q_norm"])
+    q = jnp.einsum("btr,rhk->bthk", cq, params["wuq"])
+    dn = cfg.head_dim
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, ctx: ParallelContext,
+                cache: Optional[dict] = None, cache_offset=0
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Training / prefill path: materializes per-head K/V (compute-friendly);
+    the cache still stores only (ckv, kr)."""
+    B, T, d = x.shape
+    dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
+    q_nope, q_rope = _mla_qkr(params, cfg, x, positions)
+    ckv = jnp.einsum("btd,dr->btr", x, params["wdkv"])
+    kr = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
+                    positions, cfg.rope_theta)[:, :, 0, :]
+    new_cache = None
+    if cache is not None:
+        cckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_offset, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_offset, 0))
+        new_cache = {"ckv": cckv, "kr": ckr}
+        ckv_all, kr_all = cckv.astype(x.dtype), ckr.astype(x.dtype)
+        S = ckv_all.shape[1]
+        mask = make_causal_mask(T, S, cache_offset)
+    else:
+        ckv_all, kr_all, S = ckv, kr, T
+        mask = make_causal_mask(T, T, 0)
+    ckv_n = rms_norm(ckv_all, params["kv_norm"])
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_n, params["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv_n, params["wuv"])
+    k_nope = ctx.constrain(k_nope, ("batch", "seq", "heads", "head_dim"))
+    v = ctx.constrain(v, ("batch", "seq", "heads", "head_dim"))
+    scale = 1.0 / np.sqrt(dn + dr)
+    if cfg.attn_chunk:
+        # chunked (online-softmax) path: the two-term MLA score equals one
+        # GQA score over concatenated (nope || rope) head dims — the
+        # [T, S] tensor is never live (same schedule as _attend_chunked).
+        H = q_nope.shape[2]
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      k_nope.shape[:3] + (dr,))], axis=-1)
+        out = _attend(q_cat, k_cat, v, mask, scale, ctx,
+                      cfg.attn_chunk).astype(x.dtype)
+    else:
+        scores = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bthk,bsk->bhts", q_rope, kr_all,
+                               preferred_element_type=jnp.float32)) * scale
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhts,bshk->bthk", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return ctx.constrain(y, ("batch", "seq", "act_embed")), new_cache
+
+
+def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
+               position, cache: dict, ctx: ParallelContext
+               ) -> Tuple[jnp.ndarray, dict]:
+    """Weight-absorbed decode: scores/values computed directly against the
+    compressed cache — per-step FLOPs and cache reads are O(kv_lora), not
+    O(heads*head_dim). This is the TPU-friendly MLA inference form."""
+    B, T, d = x.shape
+    assert T == 1
+    dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
+    pos = jnp.asarray(position)[None]
+    q_nope, q_rope = _mla_qkr(params, cfg, x, pos[None, :])
+    ckv_new = jnp.einsum("btd,dr->btr", x, params["wdkv"])
+    kr_new = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
+                        pos[None, :], cfg.rope_theta)[:, :, 0, :]
+    cckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, position, 0))
+    ckr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, position, 0))
+    S = cckv.shape[1]
+    ckv_n = rms_norm(cckv.astype(x.dtype), params["kv_norm"])
+    # absorb W_uk into q: q_abs [B,1,H,kv_lora]
+    q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["wuk"])
+    scale = 1.0 / np.sqrt(dn + dr)
+    scores = (jnp.einsum("bthr,bsr->bhts", q_abs, ckv_n,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bthk,bsk->bhts", q_rope, ckr.astype(x.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    mask = (jnp.arange(S) <= position)[None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhts,bsr->bthr", probs.astype(x.dtype), ckv_n,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bthr,rhk->bthk", ctx_lat, params["wuv"])
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"ckv": cckv, "kr": ckr}

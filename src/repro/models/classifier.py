@@ -1,0 +1,55 @@
+"""Small classifiers for the paper's encoder-only experiments (§4.1).
+
+The paper uses a custom CNN / MobileNet as M_S and ResNets as M_L on image
+data. Our CPU-scale repro uses feature-vector tasks (data/synthetic.py), so
+M_S / M_L are MLPs of different capacity — the cascade dynamics (capacity
+gap, confidence tuning) are what matter, not the conv stem.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory
+from repro.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPClassifierConfig:
+    d_in: int
+    n_classes: int
+    hidden: Tuple[int, ...] = (128, 128)
+    dropout: float = 0.0
+
+
+def init_classifier(cfg: MLPClassifierConfig, key, abstract: bool = False):
+    pf = ParamFactory(None if abstract else key, jnp.float32, abstract)
+    dims = (cfg.d_in,) + cfg.hidden + (cfg.n_classes,)
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = pf.param(f"w{i}", (a, b), ("embed", "ffn"), fan_in=a)
+        params[f"b{i}"] = pf.param(f"b{i}", (b,), ("ffn",), init="zeros")
+    return params
+
+
+def classifier_forward(params, cfg: MLPClassifierConfig, x: jnp.ndarray,
+                       *, key=None) -> jnp.ndarray:
+    n = len(cfg.hidden) + 1
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+            if cfg.dropout > 0 and key is not None:
+                keep = jax.random.bernoulli(jax.random.fold_in(key, i),
+                                            1 - cfg.dropout, x.shape)
+                x = jnp.where(keep, x / (1 - cfg.dropout), 0.0)
+    return x
+
+
+def make_apply(cfg: MLPClassifierConfig):
+    def apply(params, x):
+        return classifier_forward(params, cfg, x)
+    return jax.jit(apply)

@@ -1,0 +1,433 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both are linear recurrences over a per-head matrix state S in R^{K x V}:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = q_t^T S_t                     (Mamba2, inclusive)
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)   (RWKV6, exclusive + bonus)
+
+with data-dependent decay w_t — scalar per head for Mamba2 (the SSD case),
+per key-channel for RWKV6. We implement one chunked kernel-style algorithm
+for both (TPU adaptation: chunk-parallel matmuls feed the MXU; the only
+sequential dependency is the O(T/chunk) state carry through `lax.scan`).
+
+Stability: decay products are evaluated strictly as exp(cum_t - cum_s) with
+t >= s (always <= 1); nothing is exponentiated positively, so no overflow.
+The per-channel (RWKV) path materializes the [c, c, K] decay tensor per
+chunk; the scalar (Mamba) path needs only [c, c].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamFactory, rms_norm
+from repro.sharding import ParallelContext
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear attention core
+# ---------------------------------------------------------------------------
+
+def linear_attention_scan(q, k, v, logw, state0, *, mode="mamba", u=None):
+    """Naive per-step scan — the oracle for the chunked path and tests.
+
+    q,k: [B,T,H,K]; v: [B,T,H,V]; logw broadcastable to [B,T,H,K];
+    state0: [B,H,K,V]. Returns (y [B,T,H,V], state [B,H,K,V]).
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    logw = jnp.broadcast_to(logw, (B, T, H, K)).astype(jnp.float32)
+
+    def step(S, xs):
+        qt, kt, vt, lw = xs
+        w = jnp.exp(lw)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        if mode == "mamba":
+            S = w[..., None] * S + kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt, S)
+        else:   # rwkv
+            Su = S + u[None, :, :, None] * kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt, Su)
+            S = w[..., None] * S + kv
+        return S, y
+
+    xs = (q.astype(jnp.float32).transpose(1, 0, 2, 3),
+          k.astype(jnp.float32).transpose(1, 0, 2, 3),
+          v.astype(jnp.float32).transpose(1, 0, 2, 3),
+          logw.transpose(1, 0, 2, 3))
+    S, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), S
+
+
+def linear_attention_chunked(q, k, v, logw, state0, *, mode="mamba",
+                             u=None, chunk: int = 64):
+    """Chunk-parallel evaluation of the recurrences above.
+
+    Shapes as in `linear_attention_scan`; `logw` may be [B,T,H,1] (scalar
+    decay, Mamba/SSD) or [B,T,H,K] (per-channel, RWKV6). T must be divisible
+    by `chunk` (configs pad; decode uses `linear_attention_step`).
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    NC, c = T // chunk, chunk
+    scalar_decay = (logw.shape[-1] == 1)
+
+    def reshape(x):
+        return x.astype(jnp.float32).reshape(B, NC, c, H, x.shape[-1]) \
+                .transpose(1, 0, 2, 3, 4)  # [NC, B, c, H, *]
+
+    qc, kc, vc = reshape(q), reshape(k), reshape(v)
+    lw = reshape(jnp.broadcast_to(
+        logw, (B, T, H, logw.shape[-1])))
+
+    tri_incl = jnp.tril(jnp.ones((c, c), bool))
+    tri_strict = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def chunk_step(S, xs):
+        qt, kt, vt, lwt = xs                       # [B,c,H,*]
+        cum = jnp.cumsum(lwt, axis=1)              # inclusive [B,c,H,Kw]
+        cum_ex = cum - lwt                         # exclusive
+        last = cum[:, -1:, :, :]                   # [B,1,H,Kw]
+        out_cum = cum if mode == "mamba" else cum_ex
+        # inter-chunk: q decayed from chunk start against carried state
+        qdec = qt * jnp.exp(_expand(out_cum, K))
+        y = jnp.einsum("bthk,bhkv->bthv", qdec, S)
+        # intra-chunk
+        if scalar_decay:
+            # A[t,s] = exp(out_cum_t - cum_s) — [B,H,c,c]
+            diff = out_cum[:, :, None, :, 0] - cum[:, None, :, :, 0]
+            tri = tri_incl if mode == "mamba" else tri_strict
+            amat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+            scores = jnp.einsum("bthk,bshk->btsh", qt, kt) * amat
+        else:
+            diff = out_cum[:, :, None, :, :] - cum[:, None, :, :, :]
+            tri = tri_incl if mode == "mamba" else tri_strict
+            amat = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+            scores = jnp.einsum("bthk,bshk,btshk->btsh", qt, kt, amat)
+        y = y + jnp.einsum("btsh,bshv->bthv", scores, vt)
+        if mode == "rwkv":
+            y = y + jnp.einsum("bthk,bthk,bthv->bthv",
+                               qt * u[None, None, :, :], kt, vt)
+        # state update: S' = exp(cum_last) * S + sum_s exp(cum_last-cum_s) k v
+        kdec = kt * jnp.exp(_expand(last - cum, K))
+        S = (jnp.exp(_expand(last, K))[:, 0, :, :, None] * S
+             + jnp.einsum("bshk,bshv->bhkv", kdec, vt))
+        return S, y
+
+    S, ys = jax.lax.scan(chunk_step, state0.astype(jnp.float32),
+                         (qc, kc, vc, lw))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, V)
+    return y, S
+
+
+def _expand(cum, K):
+    """Broadcast a [..., Kw] decay (Kw in {1, K}) to [..., K]."""
+    if cum.shape[-1] == 1:
+        return jnp.broadcast_to(cum, cum.shape[:-1] + (K,))
+    return cum
+
+
+def linear_attention_step(qt, kt, vt, logw_t, S, *, mode="mamba", u=None):
+    """Single decode step. qt,kt [B,H,K]; vt [B,H,V]; logw_t [B,H,Kw];
+    S [B,H,K,V] fp32. Returns (y [B,H,V], S')."""
+    K = qt.shape[-1]
+    w = jnp.exp(_expand(logw_t.astype(jnp.float32), K))
+    kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                    vt.astype(jnp.float32))
+    if mode == "mamba":
+        S = w[..., None] * S + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), S)
+    else:
+        Su = S + u[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), Su)
+        S = w[..., None] * S + kv
+    return y, S
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time mix + channel mix)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_mix: int = 32
+    lora_decay: int = 64
+    chunk: int = 32
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv_block(pf: ParamFactory, cfg: RWKVConfig, stacked: int = 0) -> dict:
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    r = cfg.lora_mix
+    p = {
+        # data-dependent lerp (ddlerp) mixing: 5 streams (r,k,v,g,w)
+        "mu_base": pf.param("mu_base", L + (5, d), LA + (None, "act_embed"),
+                            init="uniform", scale=0.5),
+        "mix_A": pf.param("mix_A", L + (d, 5 * r), LA + ("embed", None), fan_in=d),
+        "mix_B": pf.param("mix_B", L + (5, r, d), LA + (None, None, "embed"),
+                          fan_in=r),
+        # projections
+        "wr": pf.param("wr", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wk": pf.param("wk", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wv": pf.param("wv", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wg": pf.param("wg", L + (d, H, hd), LA + ("embed", "heads", "head_dim"), fan_in=d),
+        "wo": pf.param("wo", L + (H, hd, d), LA + ("heads", "head_dim", "embed"),
+                       fan_in=H * hd),
+        # data-dependent decay: logw = -exp(w0 + tanh(x A_w) B_w)
+        "w0": pf.param("w0", L + (H, hd), LA + ("heads", "head_dim"),
+                       init="constant", scale=-0.6),
+        "decay_A": pf.param("decay_A", L + (d, cfg.lora_decay), LA + ("embed", None),
+                            fan_in=d),
+        "decay_B": pf.param("decay_B", L + (cfg.lora_decay, H, hd),
+                            LA + (None, "heads", "head_dim"), fan_in=cfg.lora_decay),
+        "u": pf.param("u", L + (H, hd), LA + ("heads", "head_dim"),
+                      init="uniform", scale=0.5),
+        "ln_x": pf.param("ln_x", L + (H, hd), LA + ("heads", "head_dim"),
+                         init="zeros"),
+        # channel mix
+        "cm_mu": pf.param("cm_mu", L + (2, d), LA + (None, "act_embed"),
+                          init="uniform", scale=0.5),
+        "cm_wk": pf.param("cm_wk", L + (d, cfg.d_ff), LA + ("embed", "ffn"), fan_in=d),
+        "cm_wr": pf.param("cm_wr", L + (d, d), LA + ("embed", "embed"), fan_in=d),
+        "cm_wv": pf.param("cm_wv", L + (cfg.d_ff, d), LA + ("ffn", "embed"),
+                          fan_in=cfg.d_ff),
+        "norm1": pf.param("norm1", L + (d,), LA + ("act_embed",), init="zeros"),
+        "norm2": pf.param("norm2", L + (d,), LA + ("act_embed",), init="zeros"),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (carry from previous segment)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_mix_streams(p, x, shifted):
+    """ddlerp: per-stream mixing coefficients with a low-rank data path."""
+    d = x.shape[-1]
+    r = p["mix_B"].shape[1]
+    base = jnp.tanh(jnp.einsum("btd,dr->btr", x, p["mix_A"]))  # [B,T,5r]
+    base = base.reshape(base.shape[:-1] + (5, r))
+    delta = jnp.einsum("btsr,srd->btsd", base, p["mix_B"])
+    mu = p["mu_base"][None, None] + delta                      # [B,T,5,d]
+    xx = shifted - x
+    return x[:, :, None, :] + xx[:, :, None, :] * jax.nn.sigmoid(mu)
+
+
+def _rwkv_time_mix_inputs(p, cfg: RWKVConfig, x, shifted):
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    mixed = _rwkv_mix_streams(p, x, shifted)      # [B,T,5,d]
+    xr, xk, xv, xg, xw = [mixed[:, :, i, :] for i in range(5)]
+    rr = jnp.einsum("btd,dhk->bthk", xr, p["wr"])
+    kk = jnp.einsum("btd,dhk->bthk", xk, p["wk"])
+    vv = jnp.einsum("btd,dhk->bthk", xv, p["wv"])
+    gg = jax.nn.silu(jnp.einsum("btd,dhk->bthk", xg, p["wg"]))
+    dec = jnp.einsum("btr,rhk->bthk",
+                     jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["decay_A"])),
+                     p["decay_B"])
+    logw = -jnp.exp(p["w0"][None, None].astype(jnp.float32)
+                    + dec.astype(jnp.float32))          # [B,T,H,hd], < 0
+    return rr, kk, vv, gg, logw
+
+
+def rwkv_block_forward(p: dict, cfg: RWKVConfig, x: jnp.ndarray,
+                       ctx: ParallelContext,
+                       state: Optional[dict] = None
+                       ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence RWKV6 block (time mix + channel mix), pre-norm residual.
+    `state` (decode/carry): {"shift1","shift2" [B,d], "S" [B,H,K,V] fp32}."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    h = rms_norm(x, p["norm1"])
+    last1 = state["shift1"] if state is not None else jnp.zeros((B, d), x.dtype)
+    shifted = _token_shift(h, last1.astype(h.dtype))
+    rr, kk, vv, gg, logw = _rwkv_time_mix_inputs(p, cfg, h, shifted)
+    rr = ctx.constrain(rr, ("batch", "seq", "heads", "head_dim"))
+    kk = ctx.constrain(kk, ("batch", "seq", "heads", "head_dim"))
+    vv = ctx.constrain(vv, ("batch", "seq", "heads", "head_dim"))
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    chunk = cfg.chunk if T % cfg.chunk == 0 else 1
+    if chunk > 1:
+        y, S = linear_attention_chunked(rr, kk, vv, logw, S0, mode="rwkv",
+                                        u=p["u"].astype(jnp.float32),
+                                        chunk=chunk)
+    else:
+        y, S = linear_attention_scan(rr, kk, vv, logw, S0, mode="rwkv",
+                                     u=p["u"].astype(jnp.float32))
+    # per-head group norm, gate, project out
+    y = rms_norm(y.astype(x.dtype), p["ln_x"]) * gg
+    y = jnp.einsum("bthk,hkd->btd", y, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    x = x + ctx.constrain(y, ("batch", "seq", "act_embed"))
+
+    # channel mix
+    h2 = rms_norm(x, p["norm2"])
+    last2 = state["shift2"] if state is not None else jnp.zeros((B, d), x.dtype)
+    sh2 = _token_shift(h2, last2.astype(h2.dtype))
+    mu = jax.nn.sigmoid(p["cm_mu"][None, None])
+    xk2 = h2 + (sh2 - h2) * mu[:, :, 0, :]
+    xr2 = h2 + (sh2 - h2) * mu[:, :, 1, :]
+    kk2 = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk2, p["cm_wk"])))
+    kk2 = ctx.constrain(kk2, ("batch", "seq", "ffn"))
+    vv2 = jnp.einsum("btf,fd->btd", kk2, p["cm_wv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    y2 = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr2, p["cm_wr"])) * vv2
+    x = x + ctx.constrain(y2, ("batch", "seq", "act_embed"))
+
+    new_state = {"shift1": h[:, -1, :], "shift2": h2[:, -1, :], "S": S}
+    return x, new_state
+
+
+def init_rwkv_state(cfg: RWKVConfig, batch: int, dtype=jnp.bfloat16,
+                    stacked: int = 0, abstract=False) -> dict:
+    from repro.sharding import AbstractParam
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    specs = {
+        "shift1": (L + (batch, d), dtype, LA + ("batch", "act_embed")),
+        "shift2": (L + (batch, d), dtype, LA + ("batch", "act_embed")),
+        "S": (L + (batch, H, hd, hd), jnp.float32,
+              LA + ("batch", "heads", "head_dim", "state")),
+    }
+    if abstract:
+        return {k: AbstractParam(s, dt, ax) for k, (s, dt, ax) in specs.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt, ax) in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2_block(pf: ParamFactory, cfg: Mamba2Config, stacked: int = 0) -> dict:
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    conv_ch = di + 2 * N
+    return {
+        "norm": pf.param("norm", L + (d,), LA + ("act_embed",), init="zeros"),
+        "in_proj": pf.param("in_proj", L + (d, 2 * di + 2 * N + H),
+                            LA + ("embed", "d_inner"), fan_in=d),
+        "conv_w": pf.param("conv_w", L + (cfg.conv_width, conv_ch),
+                           LA + ("conv", "d_inner"), init="normal",
+                           fan_in=cfg.conv_width),
+        "conv_b": pf.param("conv_b", L + (conv_ch,), LA + ("d_inner",),
+                           init="zeros"),
+        "A_log": pf.param("A_log", L + (H,), LA + ("heads",),
+                          init="constant", scale=0.0),
+        "dt_bias": pf.param("dt_bias", L + (H,), LA + ("heads",),
+                            init="constant", scale=-1.0),
+        "D": pf.param("D", L + (H,), LA + ("heads",), init="ones"),
+        "out_norm": pf.param("out_norm", L + (di,), LA + ("d_inner",),
+                             init="zeros"),
+        "out_proj": pf.param("out_proj", L + (di, d), LA + ("d_inner", "embed"),
+                             fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv. x [B,T,C]; w [W,C]; carry [B,W-1,C] history.
+    Returns (y [B,T,C], new_carry)."""
+    W = w.shape[0]
+    B, T, C = x.shape
+    if carry is None:
+        carry = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + T, :] * w[i][None, None, :] for i in range(W))
+    new_carry = xp[:, T:, :] if T >= 1 else carry
+    new_carry = xp[:, -(W - 1):, :]
+    return y + b[None, None, :], new_carry
+
+
+def mamba2_block_forward(p: dict, cfg: Mamba2Config, x: jnp.ndarray,
+                         ctx: ParallelContext,
+                         state: Optional[dict] = None
+                         ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence Mamba2 block. state: {"conv" [B,W-1,C], "S" [B,H,N,P]}."""
+    B, T, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    h = rms_norm(x, p["norm"])
+    zxbcdt = jnp.einsum("btd,de->bte", h, p["in_proj"])
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_carry = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_carry)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    xc = ctx.constrain(xc, ("batch", "seq", "d_inner"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [H] negative
+    logw = (dt * A[None, None, :])[..., None]             # [B,T,H,1]
+    xh = xc.reshape(B, T, H, P)
+    v = xh * dt[..., None]
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, T, H, N))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, T, H, N))
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((B, H, N, P), jnp.float32))
+    chunk = cfg.chunk if T % cfg.chunk == 0 else 1
+    if chunk > 1:
+        y, S = linear_attention_chunked(q, k, v, logw, S0, mode="mamba",
+                                        chunk=chunk)
+    else:
+        y, S = linear_attention_scan(q, k, v, logw, S0, mode="mamba")
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    y = jnp.einsum("bte,ed->btd", y, p["out_proj"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    x = x + ctx.constrain(y, ("batch", "seq", "act_embed"))
+    return x, {"conv": new_conv, "S": S}
+
+
+def init_mamba2_state(cfg: Mamba2Config, batch: int, dtype=jnp.bfloat16,
+                      stacked: int = 0, abstract=False) -> dict:
+    from repro.sharding import AbstractParam
+    L = (stacked,) if stacked else ()
+    LA = ("layers",) if stacked else ()
+    C = cfg.d_inner + 2 * cfg.d_state
+    specs = {
+        "conv": (L + (batch, cfg.conv_width - 1, C), dtype,
+                 LA + ("batch", "conv", "d_inner")),
+        "S": (L + (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32,
+              LA + ("batch", "heads", "state", "head_dim")),
+    }
+    if abstract:
+        return {k: AbstractParam(s, dt, ax) for k, (s, dt, ax) in specs.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt, ax) in specs.items()}

@@ -1,0 +1,57 @@
+"""Checkpointing without orbax: pytree -> (structure json, npz of leaves).
+
+Host-gathered (this container is single-host); sharded restore re-places
+leaves with the provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None):
+    os.makedirs(path, exist_ok=True)
+    names, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"names": names, "step": step,
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves]}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Optionally device_put with `shardings`."""
+    names, like_leaves, treedef = _flatten_with_paths(like)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["names"] == names, "checkpoint/model structure mismatch"
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(names))]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(shardings)
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, sh_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> Optional[int]:
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

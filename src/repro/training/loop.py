@@ -1,0 +1,105 @@
+"""Training loops: Stage-1 standard training and Stage-2 Gatekeeper
+fine-tuning (the paper's two-stage recipe, §3.2), for classifiers and
+token models alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gatekeeper import (GatekeeperConfig, gatekeeper_loss,
+                                   standard_ce_loss)
+from repro.core.baselines import static_partition_loss
+from repro.sharding import ParallelContext
+from repro.training import optim
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    history: Dict[str, list]
+
+
+def make_train_step(apply_fn: Callable, opt_cfg: optim.AdamWConfig,
+                    loss_kind: str = "ce",
+                    gk_cfg: Optional[GatekeeperConfig] = None,
+                    aux_weight: float = 0.0):
+    """Build a jitted (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    apply_fn(params, batch) must return either logits or (logits, aux_loss).
+    batch: {"inputs": ..., "targets": ..., optional "loss_mask", "easy_mask"}.
+    loss_kind: "ce" (Stage 1) | "gatekeeper" (Stage 2) | "static_partition".
+    """
+
+    def loss_fn(params, batch):
+        out = apply_fn(params, batch)
+        model_aux = jnp.zeros((), jnp.float32)
+        if isinstance(out, tuple):
+            logits, model_aux = out
+        else:
+            logits = out
+        mask = batch.get("loss_mask")
+        if loss_kind == "ce":
+            loss, aux = standard_ce_loss(logits, batch["targets"], mask)
+        elif loss_kind == "gatekeeper":
+            loss, aux = gatekeeper_loss(logits, batch["targets"], gk_cfg, mask)
+        elif loss_kind == "static_partition":
+            loss, aux = static_partition_loss(
+                logits, batch["targets"], batch["easy_mask"],
+                alpha=gk_cfg.alpha if gk_cfg else 0.5, valid_mask=mask)
+        else:
+            raise ValueError(loss_kind)
+        total = loss + aux_weight * model_aux
+        aux = dict(aux)
+        aux["model_aux"] = model_aux
+        return total, aux
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = optim.adamw_update(opt_cfg, grads, opt_state,
+                                                   params)
+        metrics = {**aux, **om, "total_loss": loss}
+        return params, opt_state, metrics
+
+    return step
+
+
+def train(params, step_fn, batches, n_steps: int,
+          log_every: int = 50, log_fn=None) -> TrainResult:
+    """Generic loop over an (infinite) batch iterator."""
+    opt_state = optim.adamw_init(params)
+    history: Dict[str, list] = {}
+    it = iter(batches)
+    for i in range(n_steps):
+        batch = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()
+                 if jnp.ndim(v) == 0}
+            for k, v in m.items():
+                history.setdefault(k, []).append(v)
+            history.setdefault("step", []).append(i + 1)
+            if log_fn:
+                log_fn(i + 1, m)
+    return TrainResult(params=params, history=history)
+
+
+def evaluate_classifier(apply_fn, params, x, y, batch: int = 4096):
+    """Returns (predictions, max-softmax confidence, correctness)."""
+    preds, confs = [], []
+    for i in range(0, len(x), batch):
+        logits = apply_fn(params, jnp.asarray(x[i:i + batch]))
+        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        preds.append(np.asarray(p.argmax(-1)))
+        confs.append(np.asarray(p.max(-1)))
+    preds = np.concatenate(preds)
+    confs = np.concatenate(confs)
+    return preds, confs, (preds == np.asarray(y)).astype(np.float64)

@@ -1,0 +1,135 @@
+"""Optimizers in pure JAX (optax is not installed in this container).
+
+AdamW with decoupled weight decay, global-norm clipping, and cosine/linear
+schedules. Optimizer state mirrors the param pytree, so it inherits param
+shardings (ZeRO-style: FSDP-sharded params → FSDP-sharded moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import AbstractParam
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"        # constant | cosine | linear
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Any) -> AdamWState:
+    def zeros_like(p):
+        if isinstance(p, AbstractParam):
+            # moments kept in fp32 regardless of param dtype (bf16-safe)
+            return AbstractParam(p.shape, jnp.float32, p.logical_axes)
+        return jnp.zeros(p.shape, jnp.float32)
+    is_leaf = lambda x: isinstance(x, AbstractParam)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros_like, params, is_leaf=is_leaf),
+        nu=jax.tree.map(zeros_like, params, is_leaf=is_leaf),
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return (new_params, AdamWState(step, new_mu, new_nu),
+            {"lr": lr, "grad_norm": gnorm})
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+
+def sgd_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd_update(cfg: SGDConfig, grads, vel, params):
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+        v = cfg.momentum * v + g32
+        return (p.astype(jnp.float32) - cfg.lr * v).astype(p.dtype), v
+    flat = jax.tree.map(upd, grads, vel, params)
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_v

@@ -1,0 +1,107 @@
+"""Cascade orchestration tests (eq. 6) + calibration + baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import (PromptingBaseline, compute_static_partition,
+                                  static_partition_loss)
+from repro.core.cascade import Cascade
+from repro.core.calibration import (expected_compute_cost,
+                                    threshold_for_accuracy,
+                                    threshold_for_deferral_ratio)
+from repro.core.deferral import (defer_mask, max_softmax, selective_predict,
+                                 sequence_negative_entropy)
+
+
+def _mk_cascade(seed=0, n_classes=5, d=8):
+    k = jax.random.PRNGKey(seed)
+    ws = jax.random.normal(k, (d, n_classes)) * 0.3          # weak
+    wl = jax.random.normal(jax.random.fold_in(k, 1), (d, n_classes))
+    return Cascade(
+        small_apply=lambda p, x: x @ p, large_apply=lambda p, x: x @ p,
+        small_params=ws, large_params=wl, signal="max_softmax", tau=0.5)
+
+
+def test_dense_sparse_equivalent():
+    c = _mk_cascade()
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 8))
+    dense = c.predict_dense(x)
+    sparse = c.predict_sparse(x)
+    np.testing.assert_array_equal(dense.predictions, sparse.predictions)
+    np.testing.assert_array_equal(dense.deferred, sparse.deferred)
+    assert dense.compute_cost == pytest.approx(sparse.compute_cost)
+
+
+def test_tau_extremes():
+    c = _mk_cascade()
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 8))
+    c.tau = -1e9
+    assert c.predict_dense(x).deferral_ratio == 0.0
+    c.tau = 1e9
+    assert c.predict_dense(x).deferral_ratio == 1.0
+
+
+def test_calibrate_ratio():
+    c = _mk_cascade()
+    x = jax.random.normal(jax.random.PRNGKey(4), (500, 8))
+    c.calibrate_tau(x, deferral_ratio=0.25)
+    r = c.predict_dense(x).deferral_ratio
+    assert abs(r - 0.25) < 0.05
+
+
+def test_threshold_for_accuracy_monotone():
+    rng = np.random.default_rng(0)
+    n = 1000
+    sc = (rng.random(n) < 0.6).astype(float)
+    lc = np.maximum(sc, (rng.random(n) < 0.9).astype(float))
+    conf = sc + rng.random(n) * 0.1
+    tau_low = threshold_for_accuracy(conf, sc, lc, 0.7)
+    tau_high = threshold_for_accuracy(conf, sc, lc, 0.85)
+    assert tau_low is not None and tau_high is not None
+    assert tau_high >= tau_low
+    assert threshold_for_accuracy(conf, sc, lc, 0.999) is None
+
+
+def test_compute_cost_formula():
+    assert expected_compute_cost(0.0, 0.2) == pytest.approx(0.2)
+    assert expected_compute_cost(1.0, 0.2) == pytest.approx(1.2)
+
+
+def test_selective_predict_tokens():
+    small = jnp.zeros((4, 6), jnp.int32)
+    large = jnp.ones((4, 6), jnp.int32)
+    conf = jnp.array([0.9, 0.1, 0.9, 0.1])
+    out = selective_predict(small, large, conf, 0.5)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.zeros(6))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.ones(6))
+
+
+def test_sequence_neg_entropy_mask():
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (3, 10, 7))
+    mask = jnp.zeros((3, 10)).at[:, :4].set(1.0)
+    g1 = sequence_negative_entropy(logits, mask)
+    g2 = sequence_negative_entropy(logits[:, :4])
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5)
+
+
+def test_static_partition_baseline():
+    k = jax.random.PRNGKey(1)
+    logits = jax.random.normal(k, (32, 5))
+    targets = jax.random.randint(k, (32,), 0, 5)
+    ref_logits = jax.random.normal(jax.random.fold_in(k, 1), (32, 5))
+    easy = compute_static_partition(ref_logits, targets)
+    loss, aux = static_partition_loss(logits, targets, easy, alpha=0.5)
+    assert np.isfinite(float(loss))
+
+
+def test_prompting_baseline_prepends():
+    pb = PromptingBaseline("answer_n")
+    toks = jnp.arange(10)[None, :]
+    out = pb.modify_inputs(toks)
+    assert out.shape == toks.shape
+    assert int(out[0, 0]) == 2          # ANSWER_N token
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    conf = pb.confidence_from_logits(logits)
+    assert conf.shape == (4,)

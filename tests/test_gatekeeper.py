@@ -1,0 +1,154 @@
+"""Unit + property tests for the Gatekeeper loss (paper eqs. 1-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gatekeeper import (GatekeeperConfig, cross_entropy,
+                                   gatekeeper_loss, kl_to_uniform,
+                                   predictive_entropy, soft_cross_entropy,
+                                   standard_ce_loss)
+
+
+def _logits_labels(seed, n=64, c=10):
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.normal(k, (n, c)) * 2,
+            jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, c))
+
+
+def test_kl_to_uniform_zero_for_uniform():
+    logits = jnp.zeros((8, 12))
+    assert float(jnp.abs(kl_to_uniform(logits)).max()) < 1e-6
+
+
+def test_kl_to_uniform_positive():
+    logits, _ = _logits_labels(0)
+    assert float(kl_to_uniform(logits).min()) >= -1e-6
+
+
+def test_ce_matches_nll():
+    logits, labels = _logits_labels(1)
+    ce = cross_entropy(logits, labels)
+    ref = -jax.nn.log_softmax(logits)[jnp.arange(64), labels]
+    np.testing.assert_allclose(np.asarray(ce), np.asarray(ref), rtol=1e-6)
+
+
+def test_loss_decomposition():
+    """alpha interpolates between the two branches (eq. 1)."""
+    logits, labels = _logits_labels(2)
+    losses = {}
+    for alpha in (0.1, 0.5, 0.9):
+        loss, aux = gatekeeper_loss(logits, labels,
+                                    GatekeeperConfig(alpha=alpha))
+        losses[alpha] = (float(loss), float(aux["l_corr"]),
+                         float(aux["l_incorr"]))
+    for alpha, (l, lc, li) in losses.items():
+        assert abs(l - (alpha * lc + (1 - alpha) * li)) < 1e-5
+    # branch terms are alpha-independent
+    assert abs(losses[0.1][1] - losses[0.9][1]) < 1e-6
+    assert abs(losses[0.1][2] - losses[0.9][2]) < 1e-6
+
+
+def test_all_correct_reduces_to_ce_branch():
+    """If every prediction is correct, loss = alpha * mean CE."""
+    logits = jnp.eye(8) * 10.0
+    labels = jnp.arange(8)
+    loss, aux = gatekeeper_loss(logits, labels, GatekeeperConfig(alpha=0.7))
+    assert float(aux["frac_correct"]) == 1.0
+    assert float(aux["l_incorr"]) == 0.0
+    ce = cross_entropy(logits, labels).mean()
+    np.testing.assert_allclose(float(loss), 0.7 * float(ce), rtol=1e-5)
+
+
+def test_all_incorrect_reduces_to_kl_branch():
+    logits = jnp.eye(8) * 10.0
+    labels = (jnp.arange(8) + 1) % 8
+    loss, aux = gatekeeper_loss(logits, labels, GatekeeperConfig(alpha=0.7))
+    assert float(aux["frac_correct"]) == 0.0
+    assert float(aux["l_corr"]) == 0.0
+    kl = kl_to_uniform(logits).mean()
+    np.testing.assert_allclose(float(loss), 0.3 * float(kl), rtol=1e-5)
+
+
+def test_gradient_pushes_incorrect_to_uniform():
+    """One gradient step on an incorrect example raises its entropy."""
+    logits = jnp.array([[4.0, 0.0, 0.0]])
+    labels = jnp.array([1])           # predicted 0, incorrect
+
+    def loss_fn(l):
+        return gatekeeper_loss(l, labels, GatekeeperConfig(alpha=0.5))[0]
+
+    g = jax.grad(loss_fn)(logits)
+    new_logits = logits - 0.5 * g
+    assert float(predictive_entropy(new_logits)[0]) > \
+        float(predictive_entropy(logits)[0])
+
+
+def test_gradient_sharpens_correct():
+    logits = jnp.array([[1.0, 0.5, 0.0]])
+    labels = jnp.array([0])           # predicted 0, correct
+
+    def loss_fn(l):
+        return gatekeeper_loss(l, labels, GatekeeperConfig(alpha=0.5))[0]
+
+    g = jax.grad(loss_fn)(logits)
+    new_logits = logits - 0.5 * g
+    assert float(predictive_entropy(new_logits)[0]) < \
+        float(predictive_entropy(logits)[0])
+
+
+def test_token_level_shape():
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (4, 9, 17))
+    targets = jax.random.randint(k, (4, 9), 0, 17)
+    loss, aux = gatekeeper_loss(logits, targets, GatekeeperConfig(alpha=0.4))
+    assert np.isfinite(float(loss))
+
+
+def test_pad_mask_excluded():
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (4, 9, 17))
+    targets = jax.random.randint(k, (4, 9), 1, 17)
+    targets = targets.at[:, -3:].set(0)   # pad id 0
+    cfg = GatekeeperConfig(alpha=0.5, mask_pad=0)
+    loss_pad, _ = gatekeeper_loss(logits, targets, cfg)
+    # corrupting pad-position logits must not change the loss
+    logits2 = logits.at[:, -3:, :].set(99.0)
+    loss_pad2, _ = gatekeeper_loss(logits2, targets, cfg)
+    np.testing.assert_allclose(float(loss_pad), float(loss_pad2), rtol=1e-6)
+
+
+def test_soft_targets():
+    k = jax.random.PRNGKey(3)
+    logits = jax.random.normal(k, (16, 6))
+    teacher = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 1),
+                                               (16, 6)) * 2)
+    cfg = GatekeeperConfig(alpha=0.5, soft_targets=True)
+    loss, aux = gatekeeper_loss(logits, teacher, cfg)
+    assert np.isfinite(float(loss))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 10000), st.floats(0.05, 0.95),
+       st.integers(2, 32), st.integers(1, 64))
+def test_property_loss_finite_nonneg(seed, alpha, c, n):
+    k = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(k, (n, c)) * 3
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, c)
+    loss, aux = gatekeeper_loss(logits, labels, GatekeeperConfig(alpha=alpha))
+    assert np.isfinite(float(loss))
+    assert float(loss) >= -1e-6
+    assert float(aux["l_incorr"]) >= -1e-6     # KL >= 0
+    # entropy bounded by log C
+    assert float(aux["mean_entropy"]) <= np.log(c) + 1e-4
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10000))
+def test_property_ce_loss_accuracy_consistent(seed):
+    k = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(k, (32, 7))
+    labels = jnp.argmax(logits, -1)
+    _, aux = standard_ce_loss(logits, labels)
+    assert float(aux["accuracy"]) == 1.0

@@ -1,0 +1,241 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import (deferral_entropy_ref, flash_attention_ref,
+                               gatekeeper_loss_ref)
+from repro.kernels.gatekeeper_loss import gatekeeper_loss_tokens
+from repro.kernels.deferral_entropy import deferral_entropy
+from repro.kernels.flash_attention import flash_attention
+
+
+# ---------------------------------------------------------------------------
+# gatekeeper_loss kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d,V,tb,vb,db", [
+    (128, 32, 256, 64, 128, 32),
+    (128, 64, 300, 128, 128, 16),      # non-multiple vocab (padding path)
+    (256, 48, 512, 128, 512, 48),      # single vocab block
+    (64, 128, 128, 64, 64, 64),
+])
+def test_gatekeeper_kernel_shapes(T, d, V, tb, vb, db):
+    k = jax.random.PRNGKey(T + V)
+    x = jax.random.normal(k, (T, d))
+    table = jax.random.normal(jax.random.fold_in(k, 1), (V, d))
+    tgt = jax.random.randint(k, (T,), 0, V)
+    ce, kl, corr, ent = gatekeeper_loss_tokens(x, table, tgt, tb=tb, vb=vb,
+                                               db=db, interpret=True)
+    ref = gatekeeper_loss_ref(x, table, tgt, 0.5, jnp.ones((T,)))
+    np.testing.assert_allclose(ce, ref["ce"], atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(kl, ref["kl"], atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(ent, ref["entropy"], atol=2e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(corr), np.asarray(ref["correct"]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gatekeeper_kernel_dtypes(dtype):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (128, 32)).astype(dtype)
+    table = jax.random.normal(jax.random.fold_in(k, 1), (200, 32)).astype(dtype)
+    tgt = jax.random.randint(k, (128,), 0, 200)
+    ce, kl, corr, ent = gatekeeper_loss_tokens(x, table, tgt, tb=64, vb=64,
+                                               db=32, interpret=True)
+    ref = gatekeeper_loss_ref(x.astype(jnp.float32),
+                              table.astype(jnp.float32), tgt, 0.5,
+                              jnp.ones((128,)))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(ce, ref["ce"], atol=tol, rtol=tol)
+
+
+def test_gatekeeper_fused_wrapper_scalar():
+    k = jax.random.PRNGKey(1)
+    T, d, V = 100, 24, 333            # ragged T (token padding path)
+    x = jax.random.normal(k, (T, d))
+    table = jax.random.normal(jax.random.fold_in(k, 1), (V, d))
+    tgt = jax.random.randint(k, (T,), 0, V)
+    loss, aux = ops.gatekeeper_loss_fused(x, table, tgt, alpha=0.25,
+                                          tb=64, vb=128, db=24, interpret=True)
+    ref = gatekeeper_loss_ref(x, table, tgt, 0.25, jnp.ones((T,)))
+    np.testing.assert_allclose(float(loss), float(ref["loss"]), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# deferral_entropy kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,V,tb,vb", [
+    (128, 512, 64, 128), (64, 1000, 64, 256), (128, 50, 128, 64),
+])
+def test_deferral_entropy_shapes(T, V, tb, vb):
+    k = jax.random.PRNGKey(T * V)
+    logits = jax.random.normal(k, (T, V)) * 4
+    ne, mp, am = deferral_entropy(logits, tb=tb, vb=vb, interpret=True)
+    rne, rmp, ram = deferral_entropy_ref(logits)
+    np.testing.assert_allclose(ne, rne, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(mp, rmp, atol=1e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(ram))
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 9999), st.integers(2, 600))
+def test_property_deferral_entropy(seed, V):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (64, V)) * 3
+    ne, mp, am = deferral_entropy(logits, tb=64, vb=128, interpret=True)
+    # neg entropy in [-log V, 0]; max prob in (0, 1]
+    assert float(ne.max()) <= 1e-5
+    assert float(ne.min()) >= -np.log(V) - 1e-4
+    assert 0 < float(mp.min()) and float(mp.max()) <= 1 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,S,H,KV,hd,causal,win", [
+    (2, 64, 64, 4, 2, 32, True, 0),
+    (1, 96, 96, 4, 4, 64, True, 32),       # sliding window
+    (2, 128, 128, 8, 2, 64, False, 0),     # bidirectional (encoder)
+    (1, 70, 70, 2, 1, 16, True, 0),        # ragged (padding path), MQA
+])
+def test_flash_attention_shapes(B, T, S, H, KV, hd, causal, win):
+    ks = jax.random.split(jax.random.PRNGKey(B * T + H), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    o = flash_attention(q, k, v, causal=causal, window=win, qb=32, kb=32,
+                        interpret=True)
+    r = flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    o = flash_attention(q, k, v, causal=True, qb=32, kb=32, interpret=True)
+    r = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(r),
+                               atol=tol, rtol=tol)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 9999), st.sampled_from([16, 32, 64]),
+       st.booleans())
+def test_property_flash_attention(seed, hd, causal):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, hd))
+    k = jax.random.normal(ks[1], (1, 64, 2, hd))
+    v = jax.random.normal(ks[2], (1, 64, 2, hd))
+    o = flash_attention(q, k, v, causal=causal, qb=32, kb=32, interpret=True)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# XLA-level chunked (online-softmax) attention — the flash dataflow used by
+# the qwen prefill hillclimb — must match dense _attend exactly.
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 9999), st.sampled_from([128, 256]),
+       st.sampled_from(["causal", "sliding", "cache"]))
+def test_property_chunked_attend_matches_dense(seed, chunk, mode):
+    from repro.models.attention import _attend
+    from repro.models.common import make_causal_mask, make_sliding_mask
+    from repro.sharding import ParallelContext
+    ctx = ParallelContext(mesh=None)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, Tq, H, KV, hd = 2, 512, 8, 4, 32
+    Tk = 1024 if mode == "cache" else Tq
+    q = jax.random.normal(ks[0], (B, Tq, H, hd))
+    k = jax.random.normal(ks[1], (B, Tk, KV, hd))
+    v = jax.random.normal(ks[2], (B, Tk, KV, hd))
+    if mode == "causal":
+        mask = make_causal_mask(Tq, Tk, 0)
+    elif mode == "sliding":
+        mask = make_sliding_mask(Tq, Tk, 0, 128)
+    else:
+        mask = make_causal_mask(Tq, Tk, 100)
+    ref = _attend(q, k, v, mask, 0.125, ctx)
+    got = _attend(q, k, v, mask, 0.125, ctx, chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=3e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# WKV (RWKV6 chunked recurrence) Pallas kernel vs the naive scan oracle
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 9999), st.sampled_from([16, 32]),
+       st.sampled_from([32, 64]), st.sampled_from([64, 96]))
+def test_property_wkv_kernel_matches_scan(seed, dim, chunk, T):
+    from repro.kernels.wkv_scan import wkv_scan
+    from repro.models.ssm import linear_attention_scan
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    B, H, K, V = 2, 2, dim, dim
+    q = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, V)) * 0.5
+    logw = -jax.random.uniform(ks[3], (B, T, H, K), minval=0.05, maxval=1.0)
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, K, V)) * 0.2
+    y_ref, s_ref = linear_attention_scan(q, k, v, logw, s0, mode="rwkv", u=u)
+    y, s = wkv_scan(q, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_mla_chunked_matches_dense():
+    """Chunked MLA (concat nope||rope trick) == the dense two-term score."""
+    import dataclasses
+    from repro.models.attention import AttnConfig, init_mla, mla_forward
+    from repro.models.common import ParamFactory
+    from repro.sharding import ParallelContext
+    cfg = AttnConfig(d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                     q_lora=24, kv_lora=32, rope_dim=8, v_head_dim=16)
+    pf = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    params = init_mla(pf, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 64))
+    pos = jnp.arange(512)[None, :]
+    ctx = ParallelContext()
+    y_ref, _ = mla_forward(params, cfg, x, pos, ctx)
+    y_chk, _ = mla_forward(params, dataclasses.replace(cfg, attn_chunk=128),
+                           x, pos, ctx)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 9999), st.sampled_from([16, 32]))
+def test_property_ssd_kernel_matches_scan(seed, dim):
+    """mode="mamba" (inclusive, scalar decay) of the same kernel."""
+    from repro.kernels.wkv_scan import wkv_scan
+    from repro.models.ssm import linear_attention_scan
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, T, H, K = 2, 64, 2, dim
+    q = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    logw_s = -jax.random.uniform(ks[3], (B, T, H, 1), minval=0.05,
+                                 maxval=1.0)
+    s0 = jax.random.normal(ks[4], (B, H, K, K)) * 0.2
+    y_ref, s_ref = linear_attention_scan(q, k, v, logw_s, s0, mode="mamba")
+    y, s = wkv_scan(q, k, v, jnp.broadcast_to(logw_s, (B, T, H, K)),
+                    jnp.zeros((H, K)), s0, chunk=32, interpret=True,
+                    mode="mamba")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=5e-4, rtol=5e-4)

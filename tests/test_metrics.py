@@ -1,0 +1,141 @@
+"""Tests for deferral metrics: s_o, s_d, AUROC, ideal curve (paper §4.1,
+App. A.2/B.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (auroc, deferral_performance,
+                                distributional_overlap, ideal_deferral_curve,
+                                pearson_correlation, random_deferral_curve,
+                                realized_deferral_curve, summarize_deferral)
+
+
+def test_ideal_curve_piecewise():
+    """eq. (11): linear to the knee at r = 1 - p_s, then flat at p_l."""
+    r = np.linspace(0, 1, 101)
+    c = ideal_deferral_curve(r, 0.6, 0.9)
+    assert c[0] == pytest.approx(0.6)
+    knee = 1 - 0.6
+    assert c[r <= knee][-1] == pytest.approx(0.9, abs=0.02)
+    assert np.all(c[r > knee] == pytest.approx(0.9))
+    assert np.all(np.diff(c) >= -1e-12)
+
+
+def test_ideal_dominates_random():
+    r = np.linspace(0, 1, 101)
+    assert np.all(ideal_deferral_curve(r, 0.5, 0.9)
+                  >= random_deferral_curve(r, 0.5, 0.9) - 1e-12)
+
+
+def test_sd_oracle_is_one():
+    """A confidence that exactly ranks M_S mistakes lowest achieves s_d≈1."""
+    rng = np.random.default_rng(0)
+    n = 2000
+    sc = (rng.random(n) < 0.7).astype(float)
+    lc = (rng.random(n) < 0.95).astype(float)
+    conf = sc + rng.random(n) * 0.01        # oracle ordering
+    res = deferral_performance(conf, sc, lc)
+    assert res["s_d"] > 0.97
+
+
+def test_sd_random_is_zero():
+    rng = np.random.default_rng(1)
+    n = 4000
+    sc = (rng.random(n) < 0.7).astype(float)
+    lc = (rng.random(n) < 0.95).astype(float)
+    conf = rng.random(n)                     # independent of correctness
+    res = deferral_performance(conf, sc, lc)
+    assert abs(res["s_d"]) < 0.1
+
+
+def test_sd_anti_oracle_negative():
+    rng = np.random.default_rng(2)
+    n = 2000
+    sc = (rng.random(n) < 0.7).astype(float)
+    lc = np.ones(n)
+    conf = -sc + rng.random(n) * 0.01        # defer the CORRECT ones first
+    res = deferral_performance(conf, sc, lc)
+    assert res["s_d"] < -0.5
+
+
+def test_realized_curve_endpoints():
+    rng = np.random.default_rng(3)
+    n = 500
+    sc = (rng.random(n) < 0.6).astype(float)
+    lc = (rng.random(n) < 0.9).astype(float)
+    conf = rng.random(n)
+    r, acc = realized_deferral_curve(conf, sc, lc)
+    assert acc[0] == pytest.approx(sc.mean())
+    assert acc[-1] == pytest.approx(lc.mean())
+
+
+def test_auroc_perfect_and_random():
+    pos = np.linspace(0.6, 1.0, 100)
+    neg = np.linspace(0.0, 0.4, 100)
+    assert auroc(pos, neg) == pytest.approx(1.0)
+    assert auroc(neg, pos) == pytest.approx(0.0)
+    rng = np.random.default_rng(4)
+    a = rng.random(3000)
+    b = rng.random(3000)
+    assert auroc(a, b) == pytest.approx(0.5, abs=0.03)
+
+
+def test_auroc_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    pos = rng.normal(1, 1, 80)
+    neg = rng.normal(0, 1, 60)
+    brute = np.mean([(p > n) + 0.5 * (p == n) for p in pos for n in neg])
+    assert auroc(pos, neg) == pytest.approx(brute, abs=1e-9)
+
+
+def test_overlap_bounds_and_separation():
+    rng = np.random.default_rng(6)
+    same_a = rng.normal(0, 1, 2000)
+    same_b = rng.normal(0, 1, 2000)
+    far_b = rng.normal(10, 1, 2000)
+    s_same = distributional_overlap(same_a, same_b)
+    s_far = distributional_overlap(same_a, far_b)
+    assert 0.8 < s_same <= 1.05
+    assert s_far < 0.02
+
+
+def test_pearson():
+    x = np.arange(100, dtype=float)
+    assert pearson_correlation(x, 2 * x + 1) == pytest.approx(1.0)
+    assert pearson_correlation(x, -x) == pytest.approx(-1.0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 9999), st.floats(0.2, 0.9), st.floats(0.0, 0.3))
+def test_property_realized_below_empirical_oracle(seed, ps, gap):
+    """True invariant: for every deferral count k, the realized joint
+    accuracy (defer the k LEAST confident) cannot exceed the empirical
+    oracle (defer the k examples with the largest lc - sc gain). The
+    analytic eq.-(11) ideal is NOT a finite-n upper bound when lc
+    correlates with the signal, so we check against the oracle instead."""
+    rng = np.random.default_rng(seed)
+    n = 800
+    pl_ = min(ps + gap, 1.0)
+    sc = (rng.random(n) < ps).astype(float)
+    lc = np.maximum(sc, (rng.random(n) < pl_).astype(float))
+    conf = sc * rng.random(n) + rng.random(n) * 0.5   # partially informative
+
+    order = np.argsort(conf)                   # realized: least confident first
+    gain = lc - sc
+    real_acc = sc.sum() + np.concatenate([[0.0], np.cumsum(gain[order])])
+    orac_acc = sc.sum() + np.concatenate([[0.0], np.cumsum(np.sort(gain)[::-1])])
+    assert np.all(real_acc <= orac_acc + 1e-9)
+
+    # s_d itself stays finite/sane whenever there is useful headroom
+    res = deferral_performance(conf, sc, lc)
+    if np.isfinite(res["s_d"]) and res["p_l"] - res["p_s"] > 0.1:
+        assert -1.0 <= res["s_d"] <= 1.5
+
+
+def test_summarize_keys():
+    rng = np.random.default_rng(7)
+    res = summarize_deferral(rng.random(300),
+                             (rng.random(300) < 0.6).astype(float),
+                             (rng.random(300) < 0.9).astype(float))
+    for k in ("s_d", "s_o", "auroc", "acc_small", "acc_large"):
+        assert k in res

@@ -1,0 +1,152 @@
+"""MoE tests: local sort+ragged_dot path vs a brute-force oracle, capacity
+semantics, and the distributed scatter/decode paths vs the local oracle
+(via an 8-device subprocess — shard_map + all_to_all + psum)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ParamFactory
+from repro.models.ffn import (MoEConfig, _moe_local_math, _route, init_moe,
+                              moe_forward)
+from repro.sharding import ParallelContext
+
+
+def _setup(seed=0, T=32, d=16, E=4, k=2, f=8):
+    cfg = MoEConfig(d_model=d, d_ff=f, n_experts=E, top_k=k)
+    pf = ParamFactory(jax.random.PRNGKey(seed), jnp.float32)
+    params = init_moe(pf, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, d))
+    return cfg, params, x
+
+
+def _brute_force(params, cfg, x2d):
+    """Explicit per-token loop over its top-k experts."""
+    gates, idx, _ = _route(params["router"], x2d, cfg)
+    T, d = x2d.shape
+    out = np.zeros((T, d), np.float32)
+    for t in range(T):
+        for j in range(cfg.top_k):
+            e = int(idx[t, j])
+            h = jax.nn.silu(x2d[t] @ params["w_gate"][e]) * \
+                (x2d[t] @ params["w_up"][e])
+            out[t] += float(gates[t, j]) * np.asarray(h @ params["w_down"][e])
+    return out
+
+
+def test_local_path_matches_bruteforce():
+    cfg, params, x = _setup()
+    y, aux = _moe_local_math(x, params["router"], params["w_gate"],
+                             params["w_up"], params["w_down"], cfg)
+    ref = _brute_force(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4, rtol=1e-3)
+
+
+def test_router_topk_normalized():
+    cfg, params, x = _setup()
+    gates, idx, aux = _route(params["router"], x, cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)),
+                               np.ones(x.shape[0]), atol=1e-5)
+    assert float(aux) >= 0.9   # E * sum f_e P_e ~ 1 for near-uniform routing
+
+
+def test_moe_forward_with_shared_expert():
+    cfg = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=2,
+                    n_shared_experts=1, shared_d_ff=8)
+    pf = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    params = init_moe(pf, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = moe_forward(params, cfg, x, ParallelContext())
+    assert y.shape == x.shape and not bool(jnp.isnan(y).any())
+
+
+def test_grad_flows_through_moe():
+    cfg, params, x = _setup()
+
+    def loss(params):
+        y, aux = _moe_local_math(x, params["router"], params["w_gate"],
+                                 params["w_up"], params["w_down"], cfg)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    for name in ("router", "w_gate", "w_up", "w_down"):
+        assert float(jnp.abs(g[name]).sum()) > 0, name
+
+
+_DISTRIBUTED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.common import ParamFactory
+    from repro.models.ffn import MoEConfig, init_moe, moe_forward
+    from repro.sharding import ParallelContext
+
+    cfg = MoEConfig(d_model=16, d_ff=8, n_experts=8, top_k=2,
+                    capacity_factor=8.0)   # high capacity => no drops
+    pf = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    params = init_moe(pf, cfg)
+    B, T, d = 4, 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, d))
+
+    y_ref, aux_ref = moe_forward(params, cfg, x, ParallelContext())
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ParallelContext(mesh=mesh)
+    y_scatter, aux_s = jax.jit(
+        lambda p, x: moe_forward(p, cfg, x, ctx, decode=False))(params, x)
+    np.testing.assert_allclose(np.asarray(y_scatter), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    y_decode, aux_d = jax.jit(
+        lambda p, x: moe_forward(p, cfg, x, ctx, decode=True))(params, x)
+    np.testing.assert_allclose(np.asarray(y_decode), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+
+    # decode with expert_ffn sharded over data ("gather tokens, not
+    # weights" — the kimi-k2 decode hillclimb layout) == same oracle
+    from repro.sharding import rules_dict
+    rules = rules_dict({"expert_embed": (), "expert_ffn": ("data",)})
+    ctx_f = ParallelContext(mesh=mesh, rules=rules)
+    y_fsh, _ = jax.jit(
+        lambda p, x: moe_forward(p, cfg, x, ctx_f, decode=True))(params, x)
+    np.testing.assert_allclose(np.asarray(y_fsh), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+
+    # and the scatter path under the same override (falls back to
+    # gathering f) == oracle
+    y_ssh, _ = jax.jit(
+        lambda p, x: moe_forward(p, cfg, x, ctx_f, decode=False))(params, x)
+    np.testing.assert_allclose(np.asarray(y_ssh), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    print("DISTRIBUTED_MOE_OK")
+""")
+
+
+def test_distributed_paths_match_local_oracle():
+    """scatter (all_to_all) and decode (psum) paths == single-device math."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", _DISTRIBUTED_SCRIPT],
+                         capture_output=True, text=True, timeout=300,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         env=env)
+    assert "DISTRIBUTED_MOE_OK" in res.stdout, res.stderr[-2000:]
+
+
+def test_capacity_drops_bounded():
+    """With tiny capacity, output stays finite and drops are partial."""
+    cfg = MoEConfig(d_model=8, d_ff=8, n_experts=2, top_k=2,
+                    capacity_factor=0.25)
+    pf = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    params = init_moe(pf, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+    y, _ = moe_forward(params, cfg, x, ParallelContext())
+    assert not bool(jnp.isnan(y).any())

@@ -1,0 +1,63 @@
+"""Serving-engine tests: generation, calibration, deferral routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import make_lm_stream
+from repro.models import transformer as tfm
+from repro.serving.engine import CascadeEngine, ModelRunner
+
+
+@pytest.fixture(scope="module")
+def runners():
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 1)))
+    prompts = make_lm_stream(jax.random.fold_in(key, 2), 16, 8,
+                             s_cfg.vocab_size)
+    return small, large, prompts
+
+
+def test_generate_shapes(runners):
+    small, _, prompts = runners
+    toks, conf = small.generate(prompts, 8, 4)
+    assert toks.shape == (16, 4)
+    assert conf.shape == (16,)
+    assert np.isfinite(conf).all()
+    assert (conf <= 1e-6).all()        # neg entropy <= 0
+
+
+def test_generate_deterministic(runners):
+    small, _, prompts = runners
+    t1, c1 = small.generate(prompts, 8, 4)
+    t2, c2 = small.generate(prompts, 8, 4)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+
+
+def test_cascade_deferral_ratio_calibrated(runners):
+    small, large, prompts = runners
+    engine = CascadeEngine(small, large)
+    engine.calibrate(prompts, 8, 4, deferral_ratio=0.5)
+    res = engine.serve(prompts, 8, 4)
+    assert 0.2 <= res.deferral_ratio <= 0.8
+    assert res.tokens.shape == (16, 4)
+    # deferred rows replaced by large-model generations; kept rows untouched
+    kept = ~res.deferred
+    np.testing.assert_array_equal(res.tokens[kept], res.small_tokens[kept])
+    assert res.compute_cost == pytest.approx(0.2 + res.deferral_ratio)
+
+
+def test_full_and_no_deferral(runners):
+    small, large, prompts = runners
+    engine = CascadeEngine(small, large, tau=-1e9)
+    res = engine.serve(prompts, 8, 4)
+    assert res.deferral_ratio == 0.0
+    engine.tau = 1e9
+    res = engine.serve(prompts, 8, 4)
+    assert res.deferral_ratio == 1.0

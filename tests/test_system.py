@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claim (paper Figs. 4-6): Gatekeeper fine-tuning at low alpha
+improves deferral performance s_d and correct/incorrect separation (AUROC up,
+s_o down) relative to the untuned baseline, at some cost in raw accuracy.
+We verify this end-to-end at CPU scale on the synthetic classification task.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import Cascade
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.core.metrics import summarize_deferral
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import make_classification
+from repro.models.classifier import (MLPClassifierConfig, classifier_forward,
+                                     init_classifier)
+from repro.training import optim
+from repro.training.loop import evaluate_classifier, make_train_step, train
+
+
+@pytest.fixture(scope="module")
+def cascade_setup():
+    """M_S: small MLP trained to interpolation on few samples (overconfident
+    on test errors); M_L: larger MLP + more data (learns the parity tier).
+    Stage-2 Gatekeeper uses a held-out calibration split (see
+    bench_fig4_classification.py docstring for the rationale)."""
+    key = jax.random.PRNGKey(0)
+    train_small = make_classification(key, 2000, n_classes=8, hard_frac=0.45)
+    train_large = make_classification(jax.random.fold_in(key, 5), 12000,
+                                      n_classes=8, hard_frac=0.45)
+    cal_data = make_classification(jax.random.fold_in(key, 7), 3000,
+                                   n_classes=8, hard_frac=0.45)
+    test_data = make_classification(jax.random.fold_in(key, 1), 3000,
+                                    n_classes=8, hard_frac=0.45)
+    d_in = train_small.x.shape[1]
+    s_cfg = MLPClassifierConfig(d_in=d_in, n_classes=8, hidden=(64, 64))
+    l_cfg = MLPClassifierConfig(d_in=d_in, n_classes=8, hidden=(256, 256))
+
+    def make(cfg, data, seed, steps):
+        params = init_classifier(cfg, jax.random.PRNGKey(seed))
+        apply_fn = lambda p, b: classifier_forward(p, cfg, b["inputs"])
+        it = BatchIterator({"inputs": data.x, "targets": data.y},
+                           256, key=jax.random.PRNGKey(seed))
+        step = make_train_step(apply_fn,
+                               optim.AdamWConfig(lr=3e-3, total_steps=steps),
+                               loss_kind="ce")
+        return train(params, step, it.forever(), steps, log_every=1000).params
+
+    small = make(s_cfg, train_small, 1, 1500)
+    large = make(l_cfg, train_large, 2, 2500)
+    return dict(train=train_small, cal=cal_data, test=test_data,
+                s_cfg=s_cfg, l_cfg=l_cfg, small=small, large=large)
+
+
+def _deferral_metrics(setup, small_params):
+    s_cfg, l_cfg = setup["s_cfg"], setup["l_cfg"]
+    test = setup["test"]
+    sp, sconf, scorr = evaluate_classifier(
+        lambda p, x: classifier_forward(p, s_cfg, x), small_params,
+        test.x, test.y)
+    lp, _, lcorr = evaluate_classifier(
+        lambda p, x: classifier_forward(p, l_cfg, x), setup["large"],
+        test.x, test.y)
+    return summarize_deferral(sconf, scorr, lcorr)
+
+
+def test_capacity_gap_exists(cascade_setup):
+    """Setup sanity: M_L is genuinely stronger than M_S (paper assumption)."""
+    base = _deferral_metrics(cascade_setup, cascade_setup["small"])
+    assert base["acc_large"] > base["acc_small"] + 0.1
+
+
+def test_gatekeeper_improves_deferral(cascade_setup):
+    """Gatekeeper (alpha=0.2) improves s_d and AUROC, reduces s_o vs the
+    untuned baseline — the paper's central claim."""
+    setup = cascade_setup
+    base = _deferral_metrics(setup, setup["small"])
+
+    s_cfg = setup["s_cfg"]
+    apply_fn = lambda p, b: classifier_forward(p, s_cfg, b["inputs"])
+    it = BatchIterator({"inputs": setup["cal"].x,
+                        "targets": setup["cal"].y}, 256,
+                       key=jax.random.PRNGKey(7))
+    step = make_train_step(apply_fn,
+                           optim.AdamWConfig(lr=5e-3, total_steps=1500),
+                           loss_kind="gatekeeper",
+                           gk_cfg=GatekeeperConfig(alpha=0.1))
+    tuned = train(setup["small"], step, it.forever(), 1500,
+                  log_every=10000).params
+    gk = _deferral_metrics(setup, tuned)
+
+    assert gk["s_d"] > base["s_d"], (gk["s_d"], base["s_d"])
+    assert gk["auroc"] > base["auroc"]
+    assert gk["s_o"] < base["s_o"]
+
+
+def test_cascade_end_to_end_cost_accuracy(cascade_setup):
+    """At a 30% deferral budget the cascade beats M_S alone on accuracy and
+    costs less than always calling M_L."""
+    setup = cascade_setup
+    s_cfg, l_cfg = setup["s_cfg"], setup["l_cfg"]
+    test = setup["test"]
+    c = Cascade(
+        small_apply=lambda p, x: classifier_forward(p, s_cfg, x),
+        large_apply=lambda p, x: classifier_forward(p, l_cfg, x),
+        small_params=setup["small"], large_params=setup["large"],
+        signal="max_softmax", cost_small=0.2)
+    c.calibrate_tau(jnp.asarray(test.x[:1000]), deferral_ratio=0.3)
+    res = c.predict_sparse(jnp.asarray(test.x[1000:]))
+    y = test.y[1000:]
+    acc_joint = (res.predictions == y).mean()
+    acc_small = (res.small_predictions == y).mean()
+    assert acc_joint > acc_small
+    assert res.compute_cost < 1.0

@@ -1,0 +1,126 @@
+"""Training substrate tests: optimizer, schedules, checkpointing, loop."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gatekeeper import GatekeeperConfig
+from repro.data.pipeline import BatchIterator
+from repro.data.synthetic import (make_captions, make_classification,
+                                  make_lm_stream, make_qa)
+from repro.models.classifier import (MLPClassifierConfig, classifier_forward,
+                                     init_classifier)
+from repro.training import checkpoint, optim
+from repro.training.loop import evaluate_classifier, make_train_step, train
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant",
+                            warmup_steps=0, clip_norm=None)
+    state = optim.adamw_init(params)
+    for _ in range(300):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state, _ = optim.adamw_update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_schedule_shapes():
+    cfg = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            schedule="cosine", min_lr_ratio=0.1)
+    lrs = [float(optim.schedule_lr(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5, abs=0.01)
+    assert lrs[2] == pytest.approx(1.0, abs=0.01)
+    assert lrs[4] == pytest.approx(0.1, abs=0.01)
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    cfg = optim.AdamWConfig(clip_norm=1.0)
+    state = optim.adamw_init(params)
+    grads = {"w": jnp.full(4, 100.0)}
+    _, _, m = optim.adamw_update(cfg, grads, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_classifier_trains_on_synthetic():
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, 2000, n_classes=4, hard_frac=0.0)
+    cfg = MLPClassifierConfig(d_in=data.x.shape[1], n_classes=4,
+                              hidden=(32,))
+    params = init_classifier(cfg, key)
+    step = make_train_step(lambda p, b: classifier_forward(p, cfg, b["inputs"]),
+                           optim.AdamWConfig(lr=1e-2, total_steps=100),
+                           loss_kind="ce")
+    it = BatchIterator({"inputs": data.x, "targets": data.y}, 128)
+    res = train(params, step, it.forever(), 100, log_every=100)
+    _, _, correct = evaluate_classifier(
+        lambda p, x: classifier_forward(p, cfg, x), res.params,
+        data.x, data.y)
+    assert correct.mean() > 0.9         # easy-only data is learnable
+
+
+def test_gatekeeper_stage_reduces_incorrect_confidence():
+    """Stage-2 fine-tuning raises entropy on incorrect predictions."""
+    key = jax.random.PRNGKey(1)
+    data = make_classification(key, 3000, n_classes=8, hard_frac=0.5)
+    cfg = MLPClassifierConfig(d_in=data.x.shape[1], n_classes=8, hidden=(16,))
+    params = init_classifier(cfg, key)
+    apply_fn = lambda p, b: classifier_forward(p, cfg, b["inputs"])
+    it = BatchIterator({"inputs": data.x, "targets": data.y}, 256)
+    step1 = make_train_step(apply_fn, optim.AdamWConfig(lr=1e-2,
+                                                        total_steps=150),
+                            loss_kind="ce")
+    params = train(params, step1, it.forever(), 150, log_every=200).params
+    step2 = make_train_step(apply_fn,
+                            optim.AdamWConfig(lr=3e-3, total_steps=100),
+                            loss_kind="gatekeeper",
+                            gk_cfg=GatekeeperConfig(alpha=0.2))
+    metrics_before = None
+    opt = optim.adamw_init(params)
+    batch = {"inputs": jnp.asarray(data.x[:512]),
+             "targets": jnp.asarray(data.y[:512])}
+    _, _, m0 = step2(params, opt, batch)
+    params2 = train(params, step2, it.forever(), 100, log_every=200).params
+    _, _, m1 = step2(params2, optim.adamw_init(params2), batch)
+    assert float(m1["mean_entropy_incorrect"]) > \
+        float(m0["mean_entropy_incorrect"])
+
+
+def test_checkpoint_roundtrip():
+    key = jax.random.PRNGKey(2)
+    tree = {"a": jax.random.normal(key, (4, 5)),
+            "nested": {"b": jnp.arange(7, dtype=jnp.int32)}}
+    with tempfile.TemporaryDirectory() as tmp:
+        checkpoint.save_checkpoint(tmp, tree, step=42)
+        restored = checkpoint.restore_checkpoint(tmp, tree)
+        assert checkpoint.checkpoint_step(tmp) == 42
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_generators_shapes():
+    key = jax.random.PRNGKey(3)
+    qa = make_qa(key, 100)
+    assert qa.tokens.shape == (100, 8)
+    assert qa.loss_mask.sum() == 100          # one answer position each
+    caps = make_captions(key, 50, n_patches=4, d_model=16)
+    assert caps.patches.shape == (50, 4, 16)
+    assert caps.tokens.shape[1] == 4
+    stream = make_lm_stream(key, 10, 64, 512)
+    assert stream.shape == (10, 64) and stream.max() < 512
+
+
+def test_batch_iterator_deterministic():
+    data = {"x": np.arange(100)}
+    it1 = BatchIterator(data, 10, key=jax.random.PRNGKey(0))
+    it2 = BatchIterator(data, 10, key=jax.random.PRNGKey(0))
+    b1 = next(iter(it1.epoch()))
+    b2 = next(iter(it2.epoch()))
+    np.testing.assert_array_equal(b1["x"], b2["x"])
+    assert len(it1) == 10
