@@ -7,6 +7,7 @@
   rawat  — static vs dynamic partition (paper §2 related work)
   soft   — hard-label vs M_L-soft-target Gatekeeper (paper §3.2 ablation)
   kernel — fused loss/entropy kernels vs naive paths
+  serving— static vs continuous-batching cascade engines (tok/s, latency)
 
 `python -m benchmarks.run [--only fig4,...] [--fast]`
 """
@@ -19,14 +20,15 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig6,fig7,rawat,soft,kernel")
+                    help="comma list: fig4,fig6,fig7,rawat,soft,kernel,"
+                         "serving")
     ap.add_argument("--fast", action="store_true",
                     help="reduced budgets (CI smoke)")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation_soft, bench_fig4_classification,
                             bench_fig6_lm, bench_fig7_vlm, bench_kernels,
-                            bench_static_partition)
+                            bench_serving, bench_static_partition)
 
     fast_kw = {
         "fig4": dict(n_train=4000, n_test=1500, steps=200, gk_steps=150),
@@ -34,6 +36,7 @@ def main() -> None:
         "fig7": dict(n_train=3000, n_test=1000, steps=200, gk_steps=120),
         "rawat": dict(n_train=4000, n_test=1500, steps=200, ft_steps=150),
         "soft": dict(n_train=3000, n_test=1500, steps=300, gk_steps=200),
+        "serving": dict(n_requests=16, max_new=12, slots=4),
     }
     suites = {
         "fig4": lambda: bench_fig4_classification.run(
@@ -47,6 +50,8 @@ def main() -> None:
         "soft": lambda: bench_ablation_soft.run(
             **(fast_kw["soft"] if args.fast else {})),
         "kernel": bench_kernels.run,
+        "serving": lambda: bench_serving.run(
+            **(fast_kw["serving"] if args.fast else {})),
     }
     only = args.only.split(",") if args.only else list(suites)
 

@@ -9,14 +9,13 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
-from repro.sharding import ParallelContext
+from repro.sharding import ParallelContext, make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_context(mesh: Mesh) -> ParallelContext:
@@ -27,8 +26,7 @@ def make_context(mesh: Mesh) -> ParallelContext:
 
 def make_host_mesh() -> Mesh:
     """1-device mesh for CPU smoke runs through the same code paths."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.

@@ -1,57 +1,105 @@
-"""Cascade serving driver: small + large model, batched requests, Gatekeeper
-deferral (CPU-scale demonstration of the deployment path).
+"""Cascade serving driver: small + large model, Gatekeeper deferral
+(CPU-scale demonstration of the deployment path).
+
+Two engines (see repro.serving):
+  * static      — lock-step batches, full max_new decode before deferral
+  * continuous  — slot-based KV pool, continuous batching, in-flight
+                  deferral once the running mean confidence drops below
+                  tau - margin (saves the remaining M_S steps)
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --requests 32 --max-new 8 --deferral-ratio 0.3
+        --requests 32 --max-new 8 --deferral-ratio 0.3 \
+        --engine continuous --slots 8 --arrival-rate 50 \
+        --audit-log /tmp/serve_audit.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.synthetic import make_lm_stream
 from repro.models import transformer as tfm
-from repro.serving.engine import CascadeEngine, ModelRunner
-from repro.sharding import ParallelContext
+from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
+                           ModelRunner, make_requests, poisson_arrivals)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--deferral-ratio", type=float, default=0.3)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    key = jax.random.PRNGKey(args.seed)
-    small_cfg = reduced(get_config(args.arch))
+def build_runners(arch: str, seed: int):
+    key = jax.random.PRNGKey(seed)
+    small_cfg = reduced(get_config(arch))
     large_cfg = small_cfg.replace(name=small_cfg.name + "-large",
                                   n_layers=4, d_model=small_cfg.d_model * 2,
                                   n_heads=8, d_ff=small_cfg.d_ff * 2)
     small = ModelRunner(small_cfg, tfm.init_params(small_cfg, key))
     large = ModelRunner(large_cfg,
                         tfm.init_params(large_cfg, jax.random.fold_in(key, 1)))
+    return small, large, small_cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--deferral-ratio", type=float, default=0.3)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--min-tokens", type=int, default=2)
+    ap.add_argument("--margin", type=float, default=0.0)
+    ap.add_argument("--no-early-exit", action="store_true")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals/s; 0 = all at t=0")
+    ap.add_argument("--audit-log", default=None,
+                    help="JSONL audit log path (continuous engine)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    small, large, small_cfg = build_runners(args.arch, args.seed)
 
     prompts = make_lm_stream(jax.random.fold_in(key, 2),
                              args.requests * 2, args.prompt_len,
                              small_cfg.vocab_size)
     cal, live = prompts[:args.requests], prompts[args.requests:]
 
-    engine = CascadeEngine(small, large)
+    if args.engine == "static":
+        engine = CascadeEngine(small, large)
+        tau = engine.calibrate(cal, args.prompt_len, args.max_new,
+                               args.deferral_ratio)
+        print(f"calibrated tau={tau:.4f} for target deferral "
+              f"{args.deferral_ratio}")
+        res = engine.serve(live, args.prompt_len, args.max_new)
+        print(f"served {len(live)} requests: deferral_ratio="
+              f"{res.deferral_ratio:.3f}, compute_cost={res.compute_cost:.3f}x,"
+              f" mean_confidence={res.confidence.mean():.4f}")
+        print("first tokens:", res.tokens[:4].tolist())
+        return
+
+    engine = ContinuousCascadeEngine(
+        small, large, n_slots=args.slots, min_tokens=args.min_tokens,
+        margin=args.margin, early_exit=not args.no_early_exit)
     tau = engine.calibrate(cal, args.prompt_len, args.max_new,
                            args.deferral_ratio)
     print(f"calibrated tau={tau:.4f} for target deferral "
           f"{args.deferral_ratio}")
-    res = engine.serve(live, args.prompt_len, args.max_new)
-    print(f"served {len(live)} requests: deferral_ratio="
-          f"{res.deferral_ratio:.3f}, compute_cost={res.compute_cost:.3f}x, "
-          f"mean_confidence={res.confidence.mean():.4f}")
+    arrivals = (poisson_arrivals(len(live), args.arrival_rate, args.seed)
+                if args.arrival_rate > 0 else None)
+    reqs = make_requests(live, args.max_new, arrivals)
+    res = engine.run(reqs, args.prompt_len, args.max_new,
+                     audit_path=args.audit_log)
+    print(f"served {len(live)} requests on {args.slots} slots in "
+          f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "
+          f"early_exits={int(res.early_exited.sum())}, "
+          f"saved_M_S_steps={res.saved_steps}")
+    print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                      for k, v in res.stats.items()}, indent=1))
+    if args.audit_log:
+        print(f"audit log written to {args.audit_log}")
     print("first tokens:", res.tokens[:4].tolist())
 
 

@@ -228,7 +228,7 @@ def _flash_decode_sharded(q, ck, cv, mask, scale, ctx: ParallelContext):
     Returns None when the cache's seq dim is not sharded (caller falls
     back to the dense path)."""
     from jax.sharding import PartitionSpec as P
-    from repro.sharding import logical_to_spec
+    from repro.sharding import logical_to_spec, shard_map
     mesh = ctx.mesh
     cache_spec = logical_to_spec(("batch", "cache_seq", "kv_heads", None),
                                  ck.shape, mesh, ctx.rules)
@@ -260,16 +260,19 @@ def _flash_decode_sharded(q, ck, cv, mask, scale, ctx: ParallelContext):
         return (out.transpose(0, 3, 1, 2, 4)
                 .reshape(B, Tq, H, hd).astype(ql.dtype))
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(qspec, kvspec, kvspec, mspec),
-                         out_specs=qspec, check_vma=False)(q, ck, cv, mask)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(qspec, kvspec, kvspec, mspec),
+                     out_specs=qspec, check_vma=False)(q, ck, cv, mask)
 
 
 def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                position, cache: dict, ctx: ParallelContext
                ) -> Tuple[jnp.ndarray, dict]:
-    """One-token decode. x [B,1,d]; position scalar int (same for batch —
-    the serving engine uses per-request masks for ragged batches).
+    """One-token decode. x [B,1,d]; position is either a scalar int (whole
+    batch at the same depth — the static serving engine) or an int vector
+    [B] of per-row depths (continuous batching: each slot of the KV pool
+    decodes at its own position; writes become row scatters and the
+    validity mask becomes per-row).
 
     For sliding-window configs the cache is a ring buffer of size `window`;
     the write slot is position % window and relative order is handled by
@@ -284,31 +287,44 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
         q = q + params["bq"]
         k = k + params["bk"]
         v = v + params["bv"]
-    pos = jnp.asarray(position)[None]
-    q = apply_rope(q, pos[None, :], cfg.rope_theta)
-    k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    pos = jnp.asarray(position)
+    per_row = pos.ndim == 1                    # [B] per-slot positions
+    pos_bt = pos[:, None] if per_row else pos[None, None]   # [B,1] / [1,1]
+    q = apply_rope(q, pos_bt, cfg.rope_theta)
+    k = apply_rope(k, pos_bt, cfg.rope_theta)
     S = cache["k"].shape[1]
     ring = cfg.sliding_window is not None and S <= cfg.sliding_window
-    if ring:
-        slot = jnp.mod(position, S)
+    slot = jnp.mod(pos, S) if ring else pos
+    if per_row:
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     else:
-        slot = position
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    idx = jnp.arange(S)
     if ring:
         # ring buffer: slot s holds absolute position p iff p % S == s and
         # p in (position - S, position]; every slot written so far is valid
         # once position >= S - 1. Mask = slots with abs pos > position - S.
-        idx = jnp.arange(S)
-        abs_pos = position - jnp.mod(position - idx, S)
-        mask = (abs_pos >= 0)[None, :]                     # [1, S]
+        if per_row:
+            abs_pos = pos[:, None] - jnp.mod(pos[:, None] - idx[None, :], S)
+            mask = (abs_pos >= 0)[:, None, :]              # [B, 1, S]
+        else:
+            abs_pos = pos - jnp.mod(pos - idx, S)
+            mask = (abs_pos >= 0)[None, :]                 # [1, S]
+    elif per_row:
+        mask = idx[None, :] <= pos[:, None]                # [B, S]
+        if cfg.sliding_window:
+            mask = mask & (idx[None, :] > pos[:, None] - cfg.sliding_window)
+        mask = mask[:, None, :]                            # [B, 1, S]
     else:
-        mask = (jnp.arange(S) <= position)[None, :]
+        mask = (idx <= pos)[None, :]
         if cfg.sliding_window:
             # linear cache larger than the window: restrict attendance
-            mask = mask & (jnp.arange(S) > position - cfg.sliding_window)[None, :]
+            mask = mask & (idx > pos - cfg.sliding_window)[None, :]
     scale = 1.0 / np.sqrt(cfg.head_dim)
     out = None
     if ctx.mesh is not None:
@@ -472,19 +488,31 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                ) -> Tuple[jnp.ndarray, dict]:
     """Weight-absorbed decode: scores/values computed directly against the
     compressed cache — per-step FLOPs and cache reads are O(kv_lora), not
-    O(heads*head_dim). This is the TPU-friendly MLA inference form."""
+    O(heads*head_dim). This is the TPU-friendly MLA inference form.
+
+    `position` is a scalar or an int vector [B] of per-row depths
+    (continuous batching), mirroring `gqa_decode`."""
     B, T, d = x.shape
     assert T == 1
     dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
-    pos = jnp.asarray(position)[None]
-    q_nope, q_rope = _mla_qkr(params, cfg, x, pos[None, :])
+    pos = jnp.asarray(position)
+    per_row = pos.ndim == 1
+    pos_bt = pos[:, None] if per_row else pos[None, None]
+    q_nope, q_rope = _mla_qkr(params, cfg, x, pos_bt)
     ckv_new = jnp.einsum("btd,dr->btr", x, params["wdkv"])
     kr_new = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
-                        pos[None, :], cfg.rope_theta)[:, :, 0, :]
-    cckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, position, 0))
-    ckr = jax.lax.dynamic_update_slice(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, position, 0))
+                        pos_bt, cfg.rope_theta)[:, :, 0, :]
+    if per_row:
+        rows = jnp.arange(B)
+        cckv = cache["ckv"].at[rows, pos].set(
+            ckv_new[:, 0].astype(cache["ckv"].dtype))
+        ckr = cache["kr"].at[rows, pos].set(
+            kr_new[:, 0].astype(cache["kr"].dtype))
+    else:
+        cckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
     S = cckv.shape[1]
     ckv_n = rms_norm(cckv.astype(x.dtype), params["kv_norm"])
     # absorb W_uk into q: q_abs [B,1,H,kv_lora]
@@ -494,7 +522,10 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bthk,bsk->bhts", q_rope, ckr.astype(x.dtype),
                            preferred_element_type=jnp.float32)) * scale
-    mask = (jnp.arange(S) <= position)[None, None, None, :]
+    if per_row:
+        mask = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+    else:
+        mask = (jnp.arange(S) <= pos)[None, None, None, :]
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bhts,bsr->bthr", probs.astype(x.dtype), ckv_n,

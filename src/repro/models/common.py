@@ -9,6 +9,7 @@ in one of two modes through `ParamFactory`:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -40,7 +41,10 @@ class ParamFactory:
         return child
 
     def _key_for(self, name: str) -> jax.Array:
-        h = np.uint32(abs(hash("/".join(self._path + [name]))) % (2**31))
+        # stable across processes (builtin hash() is salted per process,
+        # which made init — and every downstream metric — unreproducible)
+        path = "/".join(self._path + [name]).encode()
+        h = np.uint32(zlib.crc32(path) % (2**31))
         return jax.random.fold_in(self.key, h)
 
     # -- creators ---------------------------------------------------------

@@ -402,12 +402,15 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: ParallelContext,
 
 def decode_step(params, cfg: ModelConfig, token, position, cache,
                 ctx: ParallelContext):
-    """One-token decode. token [B] or [B,1]; position scalar. Returns
+    """One-token decode. token [B] or [B,1]; position scalar OR int vector
+    [B] of per-row decode depths (continuous batching over a slot pool —
+    each row attends/writes at its own position). Returns
     (logits [B, V], cache)."""
     if token.ndim == 1:
         token = token[:, None]
     x = _embed_inputs(params, cfg, token, None, ctx)
-    positions = jnp.full((1, 1), position)
+    pos = jnp.asarray(position)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((1, 1), position)
     x, new_cache, _ = _trunk(params, cfg, x, positions, ctx, cache=cache,
                              decode=True, position=position)
     logits = _logits(params, cfg, x, ctx)

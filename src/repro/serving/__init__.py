@@ -1,0 +1,60 @@
+"""Cascade serving subsystem (paper Fig. 1: M_S local, M_L remote, gate g).
+
+Architecture
+------------
+
+::
+
+    arrivals ──> request.ArrivalQueue ──> scheduler.SlotScheduler
+                                              │ admit (FIFO, free slots)
+                                              ▼
+                  cache_pool.SlotCachePool  [slot 0 | slot 1 | ... ]
+                                              │ jitted batched step:
+                                              │ decode all slots at
+                                              │ per-slot positions,
+                                              │ eq.-8 confidence summed
+                                              │ on device
+                                              ▼
+                  engine.ContinuousCascadeEngine
+                      │ retire: finished … keep M_S output
+                      │         in-flight deferral (running mean conf
+                      │         < tau - margin after min_tokens): evict,
+                      │         saving the remaining M_S steps
+                      ▼
+                  batched M_L regeneration ──> telemetry.ServingTelemetry
+                                               (tokens/s, latency pXX,
+                                                deferral ratio, savings,
+                                                JSONL audit log)
+
+`engine.CascadeEngine` is the static lock-step reference path; with
+`early_exit=False` the continuous engine reproduces it token-for-token
+under greedy decoding.
+
+Modules
+-------
+request     Request lifecycle (PENDING/RUNNING/DEFERRED/DONE) + arrival
+            queue with delayed visibility + Poisson arrival helper.
+cache_pool  Slot-based KV/state cache pool, preallocated once and reused
+            across request generations; batch axes discovered from the
+            abstract cache.
+scheduler   FIFO admission into free slots, retirement, invariants.
+engine      ModelRunner (on-device greedy loop), static CascadeEngine,
+            ContinuousCascadeEngine (continuous batching + in-flight
+            deferral).
+telemetry   Event stream, JSONL audit log, throughput/latency summary.
+"""
+from repro.serving.cache_pool import SlotCachePool
+from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
+                                  ContinuousServeResult, ModelRunner,
+                                  ServeResult)
+from repro.serving.request import (ArrivalQueue, Request, make_requests,
+                                   poisson_arrivals)
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.telemetry import ServingTelemetry
+
+__all__ = [
+    "ArrivalQueue", "CascadeEngine", "ContinuousCascadeEngine",
+    "ContinuousServeResult", "ModelRunner", "Request", "ServeResult",
+    "ServingTelemetry", "SlotCachePool", "SlotScheduler", "make_requests",
+    "poisson_arrivals",
+]

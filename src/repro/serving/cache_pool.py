@@ -1,0 +1,104 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+One cache tree is allocated ONCE with batch = n_slots and lives for the
+engine's lifetime; requests borrow a slot (one batch row across every
+leaf) and return it on retirement. Admission overwrites the whole row
+with a freshly prefilled cache, so stale K/V from the previous tenant
+never leaks (decode additionally masks positions > the row's depth).
+
+Leaves differ per model family (GQA k/v, MLA compressed kv + rope key,
+RWKV/Mamba recurrent states) and carry their batch dim at different axes
+(stacked layer groups lead with a `layers` axis). The batch axis of each
+leaf is discovered once from the abstract cache's logical axes rather
+than hard-coded per family.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import transformer as tfm
+from repro.sharding import AbstractParam
+
+
+def _is_abstract(x: Any) -> bool:
+    return isinstance(x, AbstractParam)
+
+
+def cache_batch_axes(cfg: ModelConfig, max_len: int) -> Any:
+    """Tree (same structure as the cache) of ints: the batch axis of each
+    leaf, read off the abstract cache's logical axes."""
+    abstract = tfm.init_cache(cfg, 1, max_len, abstract=True)
+    return jax.tree.map(lambda a: a.logical_axes.index("batch"), abstract,
+                        is_leaf=_is_abstract)
+
+
+def scatter_rows(pool_cache: Any, row_cache: Any, slots: jnp.ndarray,
+                 batch_axes: Any) -> Any:
+    """Write `row_cache` (batch = k) into rows `slots` [k] of `pool_cache`
+    (batch = n_slots), leaf-wise along each leaf's batch axis. Pure /
+    jittable."""
+    def put(pool_leaf, row_leaf, ax):
+        idx = (slice(None),) * ax + (slots,)
+        return pool_leaf.at[idx].set(row_leaf.astype(pool_leaf.dtype))
+    return jax.tree.map(put, pool_cache, row_cache, batch_axes)
+
+
+class SlotCachePool:
+    """Preallocated per-slot KV/state cache + free-slot bookkeeping.
+
+    The device tree is exposed as `.cache` (replaced functionally after
+    each jitted step — jax arrays are immutable); `alloc`/`release`
+    manage slot ids on the host.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 dtype=None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = tfm.init_cache(cfg, n_slots, max_len,
+                                    dtype=dtype or cfg.cdtype())
+        self.batch_axes = cache_batch_axes(cfg, max_len)
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._in_use: set = set()
+        # lifetime counters: how many requests each slot has hosted
+        self.generations = [0] * n_slots
+
+    # -- slot bookkeeping --------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> frozenset:
+        return frozenset(self._in_use)
+
+    def alloc(self) -> int:
+        """Lowest-numbered free slot (deterministic placement)."""
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        slot = self._free.pop()
+        self._in_use.add(slot)
+        self.generations[slot] += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._in_use:
+            raise RuntimeError(f"releasing slot {slot} that is not in use")
+        self._in_use.remove(slot)
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    # -- device-side row writes -------------------------------------------
+    def write_rows(self, row_cache: Any, slots) -> None:
+        """Host-side convenience: scatter prefilled rows into the pool
+        (the engine normally fuses this into its jitted admit step via
+        `scatter_rows`)."""
+        self.cache = scatter_rows(self.cache, row_cache,
+                                  jnp.asarray(slots), self.batch_axes)

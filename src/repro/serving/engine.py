@@ -1,31 +1,58 @@
-"""Cascade serving engine: batched decode on M_S with per-request Gatekeeper
-deferral; deferred requests are re-generated by M_L (the paper's deployment
-topology: M_S local, M_L remote — Fig. 1).
+"""Cascade serving engines (paper Fig. 1 deployment: M_S local, M_L remote,
+confidence gate g).
 
-Flow per batch of requests:
-  1. M_S prefill over the (right-padded) prompts.
-  2. M_S greedy decode up to max_new_tokens, accumulating the per-step
-     negative predictive entropy (eq. 8) of the generated continuation.
-  3. Requests whose mean confidence < tau are deferred; M_L regenerates
-     them from scratch (prefill + decode).
+Two engines share the same models and calibration:
 
-Metrics returned mirror the paper: deferral ratio, per-request confidence,
-and the compute-budget estimate cost_small + r * cost_large.
+`CascadeEngine` — the static reference path. Lock-step batches: M_S
+prefills + greedy-decodes every request for the full `max_new` tokens
+(now in a single on-device `fori_loop`, one host transfer per batch),
+then requests whose mean eq.-8 negative predictive entropy falls below
+tau are regenerated from scratch by M_L.
+
+`ContinuousCascadeEngine` — the continuous-batching serving subsystem.
+A slot-based KV-cache pool (`cache_pool.SlotCachePool`) is allocated once;
+a scheduler (`scheduler.SlotScheduler`) admits pending requests into free
+slots every step and retires finished or deferred ones. The jitted step
+decodes ALL slots at once at per-slot positions (ragged depths — see
+`models.attention.gqa_decode`) and accumulates the confidence sum on
+device; only tiny per-slot control vectors cross to host each step.
+**In-flight deferral**: once a request has decoded `min_tokens` tokens,
+a running mean confidence below `tau - margin` evicts it from M_S
+immediately — the remaining M_S decode steps are saved — and queues it
+for batched M_L regeneration. With `early_exit=False` the continuous
+engine is token-for-token identical to the static engine under greedy
+decoding (pinned by tests/test_serving_continuous.py).
+
+Metrics mirror the paper (deferral ratio, per-request confidence,
+cost_small + r * cost_large) plus serving telemetry (tokens/s, latency
+percentiles, early-exit savings) from `telemetry.ServingTelemetry`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
-from repro.core.calibration import expected_compute_cost
-from repro.models import encdec as encdec_lib
+from repro.core.calibration import (expected_compute_cost,
+                                    threshold_for_deferral_ratio)
 from repro.models import transformer as tfm
+from repro.serving.cache_pool import SlotCachePool, scatter_rows
+from repro.serving.request import DONE, ArrivalQueue, Request, make_requests
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.telemetry import ServingTelemetry
 from repro.sharding import ParallelContext
+
+
+def _neg_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 confidence: negative predictive entropy, computed in fp32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.sum(jnp.exp(logp) * logp, axis=-1)
 
 
 @dataclasses.dataclass
@@ -40,7 +67,13 @@ class ServeResult:
 
 
 class ModelRunner:
-    """Jit-compiled prefill + decode for one model."""
+    """Jit-compiled prefill + decode for one model.
+
+    `generate` runs the whole greedy loop on device (`lax.fori_loop` over
+    decode steps, tokens accumulated into a preallocated buffer) and
+    transfers the token matrix + confidence vector to host ONCE — the old
+    implementation round-tripped every token.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any,
                  ctx: Optional[ParallelContext] = None,
@@ -49,45 +82,53 @@ class ModelRunner:
         self.params = params
         self.ctx = ctx or ParallelContext()
         self.max_len = max_len
+        self._gen_fns: Dict[Tuple[int, int], Any] = {}
 
-        def _prefill(params, tokens, cache):
-            return tfm.prefill(params, cfg, tokens, cache, self.ctx)
+    def _generate_impl(self, params, prompts, *, prompt_len: int,
+                       max_new: int):
+        cfg, ctx = self.cfg, self.ctx
+        B = prompts.shape[0]
+        cache = tfm.init_cache(cfg, B, prompt_len + max_new,
+                               dtype=cfg.cdtype())
+        logits, cache = tfm.prefill(params, cfg, prompts, cache, ctx,
+                                    last_only=True)
+        last = logits[:, -1, :]
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        conf_sum = _neg_entropy(last)
+        buf = jnp.zeros((B, max_new), jnp.int32).at[:, 0].set(tok)
 
-        def _decode(params, token, position, cache):
-            logits, cache = tfm.decode_step(params, cfg, token, position,
-                                            cache, self.ctx)
-            logits = logits.astype(jnp.float32)
-            logp = jax.nn.log_softmax(logits, axis=-1)
-            neg_ent = jnp.sum(jnp.exp(logp) * logp, axis=-1)
-            return jnp.argmax(logits, axis=-1), neg_ent, cache
+        def body(i, carry):
+            tok, conf_sum, cache, buf = carry
+            step_logits, cache = tfm.decode_step(params, cfg, tok,
+                                                 prompt_len + i, cache, ctx)
+            tok = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+            conf_sum = conf_sum + _neg_entropy(step_logits)
+            buf = buf.at[:, i + 1].set(tok)
+            return tok, conf_sum, cache, buf
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+        _, conf_sum, _, buf = jax.lax.fori_loop(
+            0, max_new - 1, body, (tok, conf_sum, cache, buf))
+        return buf, conf_sum / max_new
 
     def generate(self, prompts: np.ndarray, prompt_len: int,
                  max_new: int) -> Tuple[np.ndarray, np.ndarray]:
         """Greedy generation. prompts [B, prompt_len]. Returns
-        (tokens [B, max_new], mean_neg_entropy [B])."""
-        B = prompts.shape[0]
-        cache = tfm.init_cache(self.cfg, B, prompt_len + max_new,
-                               dtype=self.cfg.cdtype())
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
-        last = logits[:, -1, :].astype(jnp.float32)
-        logp = jax.nn.log_softmax(last, axis=-1)
-        tok = jnp.argmax(last, axis=-1)
-        conf_sum = jnp.sum(jnp.exp(logp) * logp, axis=-1)
-        outs = [np.asarray(tok)]
-        for i in range(max_new - 1):
-            tok, neg_ent, cache = self._decode(
-                self.params, tok, prompt_len + i, cache)
-            conf_sum = conf_sum + neg_ent
-            outs.append(np.asarray(tok))
-        tokens = np.stack(outs, axis=1)
-        return tokens, np.asarray(conf_sum / max_new)
+        (tokens [B, max_new], mean_neg_entropy [B]) — one device->host
+        transfer for the whole batch."""
+        key = (prompt_len, max_new)
+        fn = self._gen_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._generate_impl,
+                                           prompt_len=prompt_len,
+                                           max_new=max_new))
+            self._gen_fns[key] = fn
+        tokens, conf = fn(self.params, jnp.asarray(prompts))
+        return np.asarray(tokens), np.asarray(conf)
 
 
 class CascadeEngine:
-    """Two-ModelRunner cascade with a calibrated threshold."""
+    """Two-ModelRunner cascade with a calibrated threshold (static,
+    lock-step batches — the reference path)."""
 
     def __init__(self, small: ModelRunner, large: ModelRunner,
                  tau: float = -1.0, cost_small: float = 0.2,
@@ -101,7 +142,10 @@ class CascadeEngine:
     def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
                   max_new: int, deferral_ratio: float) -> float:
         _, conf = self.small.generate(val_prompts, prompt_len, max_new)
-        self.tau = float(np.quantile(conf, deferral_ratio))
+        # shared Stage-3 helper: consistent `deferred = conf < tau`
+        # semantics (incl. the ratio<=0 / ratio>=1 sentinels) with
+        # core.calibration users.
+        self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
         return self.tau
 
     def serve(self, prompts: np.ndarray, prompt_len: int,
@@ -121,3 +165,287 @@ class CascadeEngine:
             compute_cost=expected_compute_cost(ratio, self.cost_small,
                                                self.cost_large),
             steps=max_new)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContinuousServeResult:
+    requests: List[Request]
+    tokens: np.ndarray            # [N, max_new] final tokens, rid order
+    confidence: np.ndarray        # [N] mean neg entropy at retirement
+    deferred: np.ndarray          # [N] bool
+    early_exited: np.ndarray      # [N] bool (in-flight deferrals)
+    deferral_ratio: float
+    saved_steps: int              # M_S decode steps skipped via early exit
+    steps: int                    # engine decode steps executed
+    stats: Dict[str, Any]         # telemetry summary
+
+
+class ContinuousCascadeEngine:
+    """Continuous-batching cascade over a slot-based KV pool.
+
+    Per-slot device state (all [n_slots] unless noted):
+      last_tok  — input token for the next decode step
+      pos       — absolute decode position (per-slot ragged depths)
+      n_gen     — tokens generated so far (prefill token counts as 1)
+      budget    — per-slot token budget (request's max_new); a slot
+                  self-deactivates on device when n_gen reaches it
+      conf_sum  — running eq.-8 negative-entropy sum (ON DEVICE)
+      active    — slot currently hosts a running request
+      tokens    — [n_slots, max_new] output buffer, transferred at retire
+
+    `large_batch=None` defers M_L regeneration to end-of-run exact-size
+    batches (bit-identical to the static path); an int flushes padded
+    batches of that size as soon as enough deferrals accumulate.
+
+    `steps_per_sync` > 1 enables multi-step scheduling: the jitted step
+    runs that many decode steps before the host syncs the control
+    vectors, amortizing dispatch overhead. Admission, retirement, and
+    eviction then happen at chunk granularity (greedy outputs are
+    unchanged — finished slots self-deactivate on device).
+    """
+
+    def __init__(self, small: ModelRunner, large: ModelRunner,
+                 n_slots: int = 8, tau: float = -1.0,
+                 margin: float = 0.0, min_tokens: int = 2,
+                 early_exit: bool = True,
+                 large_batch: Optional[int] = None,
+                 steps_per_sync: int = 1,
+                 cost_small: float = 0.2, cost_large: float = 1.0):
+        self.small = small
+        self.large = large
+        self.n_slots = n_slots
+        self.tau = tau
+        self.margin = margin
+        self.min_tokens = max(1, min_tokens)
+        self.early_exit = early_exit
+        self.large_batch = large_batch
+        self.steps_per_sync = max(1, steps_per_sync)
+        self.cost_small = cost_small
+        self.cost_large = cost_large
+        self._fns: Dict[Tuple[int, int], Tuple[Any, Any]] = {}
+
+    # -- calibration (same Stage-3 helper as the static engine) -----------
+    def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
+                  max_new: int, deferral_ratio: float) -> float:
+        _, conf = self.small.generate(val_prompts, prompt_len, max_new)
+        self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
+        return self.tau
+
+    # -- jitted device programs -------------------------------------------
+    def _build_fns(self, prompt_len: int, max_new: int, pool: SlotCachePool):
+        cfg, ctx = self.small.cfg, self.small.ctx
+        n_slots, pool_len = pool.n_slots, pool.max_len
+        batch_axes = pool.batch_axes
+
+        def admit_fn(params, prompts, slots, budgets, cache, state):
+            """Batched prefill of newly admitted prompts into a fresh
+            cache, scattered into the pool rows `slots`."""
+            k = prompts.shape[0]
+            fresh = tfm.init_cache(cfg, k, pool_len, dtype=cfg.cdtype())
+            logits, fresh = tfm.prefill(params, cfg, prompts, fresh, ctx,
+                                        last_only=True)
+            last = logits[:, -1, :]
+            tok0 = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            conf0 = _neg_entropy(last)
+            cache = scatter_rows(cache, fresh, slots, batch_axes)
+            row0 = jnp.zeros((k, max_new), jnp.int32).at[:, 0].set(tok0)
+            state = {
+                "last_tok": state["last_tok"].at[slots].set(tok0),
+                "pos": state["pos"].at[slots].set(prompt_len),
+                "n_gen": state["n_gen"].at[slots].set(1),
+                "budget": state["budget"].at[slots].set(budgets),
+                "conf_sum": state["conf_sum"].at[slots].set(conf0),
+                "active": state["active"].at[slots].set(budgets > 1),
+                "tokens": state["tokens"].at[slots].set(row0),
+            }
+            return cache, state
+
+        def one_step(carry, _):
+            """One decode step over ALL slots at per-slot positions;
+            inactive slots compute but their state/cache rows are inert
+            (overwritten on next admission). Slots self-deactivate when
+            n_gen reaches their budget so multi-step chunks never decode
+            past a request's max_new."""
+            params, cache, state = carry
+            logits, cache = tfm.decode_step(params, cfg, state["last_tok"],
+                                            state["pos"], cache, ctx)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            neg_ent = _neg_entropy(logits)
+            act = state["active"]
+            inc = act.astype(jnp.int32)
+            rows = jnp.arange(n_slots)
+            col = jnp.clip(state["n_gen"], 0, max_new - 1)
+            cur = state["tokens"][rows, col]
+            n_gen = state["n_gen"] + inc
+            state = {
+                "last_tok": jnp.where(act, tok, state["last_tok"]),
+                "pos": state["pos"] + inc,
+                "n_gen": n_gen,
+                "budget": state["budget"],
+                "conf_sum": state["conf_sum"]
+                + jnp.where(act, neg_ent, 0.0),
+                "active": act & (n_gen < state["budget"]),
+                "tokens": state["tokens"].at[rows, col].set(
+                    jnp.where(act, tok, cur)),
+            }
+            return (params, cache, state), None
+
+        def step_fn(params, cache, state):
+            (_, cache, state), _ = jax.lax.scan(
+                one_step, (params, cache, state), None,
+                length=self.steps_per_sync)
+            return cache, state
+
+        return jax.jit(admit_fn), jax.jit(step_fn)
+
+    # -- host-side control loop -------------------------------------------
+    def run(self, requests: List[Request], prompt_len: int, max_new: int,
+            audit_path: Optional[str] = None) -> ContinuousServeResult:
+        cfg = self.small.cfg
+        for r in requests:
+            # a run can never decode past its own max_new; clamp so the
+            # device budget, retirement check, and saved-step accounting
+            # all agree for heterogeneous requests
+            r.max_new = min(r.max_new, max_new)
+        pool = SlotCachePool(cfg, self.n_slots, prompt_len + max_new)
+        sched = SlotScheduler(pool)
+        queue = ArrivalQueue(requests)
+        tel = ServingTelemetry(audit_path)
+
+        key = (prompt_len, max_new)
+        fns = self._fns.get(key)
+        if fns is None:
+            fns = self._build_fns(prompt_len, max_new, pool)
+            self._fns[key] = fns
+        admit_fn, step_fn = fns
+
+        S = self.n_slots
+        state = {
+            "last_tok": jnp.zeros((S,), jnp.int32),
+            "pos": jnp.zeros((S,), jnp.int32),
+            "n_gen": jnp.zeros((S,), jnp.int32),
+            "budget": jnp.full((S,), max_new, jnp.int32),
+            "conf_sum": jnp.zeros((S,), jnp.float32),
+            "active": jnp.zeros((S,), bool),
+            "tokens": jnp.zeros((S, max_new), jnp.int32),
+        }
+        deferred_wait: List[Request] = []
+        n_steps = 0
+        tel.reset_clock()
+
+        def sync_retire():
+            """Pull the tiny control vectors, retire finished / in-flight
+            deferred slots, release them, and deactivate on device."""
+            nonlocal state
+            n_gen = np.asarray(state["n_gen"])
+            conf_sum = np.asarray(state["conf_sum"])
+            toks = None
+            retired: List[int] = []
+            now = tel.now
+            for slot in sched.active_slots:
+                req = sched.running[slot]
+                n = int(n_gen[slot])
+                mean = float(conf_sum[slot]) / max(n, 1)
+                finished = n >= req.max_new
+                evict = (not finished and self.early_exit
+                         and n >= self.min_tokens
+                         and mean < self.tau - self.margin)
+                if not (finished or evict):
+                    continue
+                if toks is None:
+                    toks = np.asarray(state["tokens"])
+                req.n_small_steps = n
+                req.confidence = mean
+                req.small_tokens = toks[slot, :n].copy()
+                defer = mean < self.tau if finished else True
+                sched.retire(slot, now, deferred=defer, early=evict)
+                if defer:
+                    deferred_wait.append(req)
+                else:
+                    req.tokens = toks[slot].copy()
+                tel.event("retire", rid=req.rid, slot=slot,
+                          reason=("defer_early" if evict else
+                                  "defer_final" if defer else "finish"),
+                          n_gen=n, confidence=round(mean, 6))
+                retired.append(slot)
+            if retired:
+                state = dict(state)
+                state["active"] = state["active"].at[
+                    jnp.asarray(retired)].set(False)
+
+        def flush_large(batch: List[Request], pad_to: Optional[int]):
+            if not batch:
+                return
+            batch = sorted(batch, key=lambda r: r.rid)
+            prompts = np.stack([r.prompt for r in batch])
+            b = len(batch)
+            if pad_to is not None and b < pad_to:
+                prompts = np.concatenate(
+                    [prompts, np.repeat(prompts[:1], pad_to - b, axis=0)])
+            l_tokens, _ = self.large.generate(prompts, prompt_len, max_new)
+            now = tel.now
+            for i, req in enumerate(batch):
+                req.tokens = l_tokens[i].copy()
+                req.state = DONE
+                req.t_done = now
+            tel.event("large_batch", rids=[r.rid for r in batch],
+                      padded=max(pad_to - b, 0) if pad_to else 0)
+
+        while len(queue) or sched.n_active:
+            admitted = sched.admit_ready(queue, tel.now)
+            if admitted:
+                slots = jnp.asarray([s for s, _ in admitted])
+                prompts = jnp.asarray(
+                    np.stack([r.prompt for _, r in admitted]))
+                budgets = jnp.asarray([r.max_new for _, r in admitted],
+                                      jnp.int32)
+                pool.cache, state = admit_fn(self.small.params, prompts,
+                                             slots, budgets, pool.cache,
+                                             state)
+                tel.event("admit", rids=[r.rid for _, r in admitted],
+                          slots=[s for s, _ in admitted])
+                sync_retire()        # min_tokens=1 / max_new=1 edge cases
+            if sched.n_active:
+                pool.cache, state = step_fn(self.small.params, pool.cache,
+                                            state)
+                n_steps += self.steps_per_sync
+                sync_retire()
+            elif len(queue):
+                nxt = queue.next_arrival
+                if nxt is not None:
+                    time.sleep(min(max(nxt - tel.now, 0.0), 1e-3) + 1e-5)
+            if (self.large_batch is not None
+                    and len(deferred_wait) >= self.large_batch):
+                flush_large(deferred_wait[:self.large_batch],
+                            self.large_batch)
+                del deferred_wait[:self.large_batch]
+
+        # drain: pad to large_batch when set (shape-stable M_L compile);
+        # exact-size otherwise (bit-identical to the static path)
+        flush_large(deferred_wait, self.large_batch)
+        makespan = tel.now
+        tel.close()
+
+        reqs = sorted(requests, key=lambda r: r.rid)
+        result = ContinuousServeResult(
+            requests=reqs,
+            tokens=np.stack([r.tokens for r in reqs]),
+            confidence=np.array([r.confidence for r in reqs]),
+            deferred=np.array([r.deferred for r in reqs]),
+            early_exited=np.array([r.early_exited for r in reqs]),
+            deferral_ratio=float(np.mean([r.deferred for r in reqs])),
+            saved_steps=sum(r.saved_steps for r in reqs),
+            steps=n_steps,
+            stats=tel.summary(reqs, makespan, self.cost_small,
+                              self.cost_large),
+        )
+        return result
+
+    # -- convenience: match the static engine's serve() signature ---------
+    def serve(self, prompts: np.ndarray, prompt_len: int,
+              max_new: int) -> ContinuousServeResult:
+        return self.run(make_requests(prompts, max_new), prompt_len, max_new)

@@ -1,0 +1,117 @@
+"""Request lifecycle + arrival queue for the continuous-batching cascade.
+
+A `Request` moves through:
+
+    PENDING  — arrived (visible once `now >= arrival_time`), waiting in the
+               FIFO `ArrivalQueue` for a free M_S slot
+    RUNNING  — admitted into a KV-pool slot; decoding on M_S with the
+               per-step eq.-8 negative-entropy confidence accumulated on
+               device
+    DEFERRED — evicted from M_S (either in-flight, when the running mean
+               confidence drops below tau - margin after `min_tokens`, or
+               at end of decode when the final mean is below tau); waiting
+               for batched M_L regeneration
+    DONE     — final tokens attached (M_S output for kept requests, M_L
+               output for deferred ones)
+
+Timestamps are seconds relative to the engine's run start so telemetry can
+derive queueing delay, service time, and end-to-end latency per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+PENDING = "pending"
+RUNNING = "running"
+DEFERRED = "deferred"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [prompt_len] int32
+    max_new: int
+    arrival_time: float = 0.0          # seconds from run start
+    state: str = PENDING
+    slot: Optional[int] = None
+    # outputs
+    tokens: Optional[np.ndarray] = None        # final (post-cascade) tokens
+    small_tokens: Optional[np.ndarray] = None  # M_S tokens actually decoded
+    confidence: float = float("nan")   # running mean neg-entropy at retire
+    n_small_steps: int = 0             # M_S tokens decoded before retire
+    deferred: bool = False
+    early_exited: bool = False         # evicted before max_new (in-flight)
+    # lifecycle timestamps (seconds from run start; nan until reached)
+    t_admit: float = float("nan")
+    t_retire: float = float("nan")     # left M_S (finished or evicted)
+    t_done: float = float("nan")       # final tokens available
+
+    @property
+    def saved_steps(self) -> int:
+        """M_S decode steps skipped by in-flight deferral."""
+        return self.max_new - self.n_small_steps if self.early_exited else 0
+
+
+class ArrivalQueue:
+    """Arrival-ordered FIFO with delayed visibility.
+
+    Requests sit in a min-heap keyed on `arrival_time` until the virtual
+    clock passes them, then move to a FIFO of admissible requests. Ties in
+    arrival time preserve submission order (heap key includes rid).
+    """
+
+    def __init__(self, requests: Optional[List[Request]] = None):
+        self._future: list = []
+        self._ready: Deque[Request] = deque()
+        for r in requests or ():
+            self.push(r)
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._future, (req.arrival_time, req.rid, req))
+
+    def release(self, now: float) -> int:
+        """Move every request with arrival_time <= now into the ready FIFO.
+        Returns how many became visible."""
+        n = 0
+        while self._future and self._future[0][0] <= now:
+            self._ready.append(heapq.heappop(self._future)[2])
+            n += 1
+        return n
+
+    def pop_ready(self) -> Optional[Request]:
+        return self._ready.popleft() if self._ready else None
+
+    @property
+    def n_ready(self) -> int:
+        return len(self._ready)
+
+    @property
+    def next_arrival(self) -> Optional[float]:
+        return self._future[0][0] if self._future else None
+
+    def __len__(self) -> int:
+        return len(self._future) + len(self._ready)
+
+
+def make_requests(prompts: np.ndarray, max_new: int,
+                  arrivals: Optional[np.ndarray] = None) -> List[Request]:
+    """One Request per prompt row; `arrivals` are per-request offsets in
+    seconds from run start (default: all arrive at t=0)."""
+    n = prompts.shape[0]
+    if arrivals is None:
+        arrivals = np.zeros(n)
+    return [Request(rid=i, prompt=np.asarray(prompts[i]), max_new=max_new,
+                    arrival_time=float(arrivals[i])) for i in range(n)]
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Cumulative arrival offsets (seconds) of a Poisson process with
+    `rate` requests/s."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))

@@ -1,0 +1,83 @@
+"""Admission/retirement scheduler for the continuous-batching engine.
+
+Each engine step the scheduler:
+  1. releases newly arrived requests into the ready FIFO,
+  2. admits ready requests into free cache-pool slots (strict FIFO — a
+     request never overtakes an earlier arrival),
+  3. after the decode step, retires finished or in-flight-deferred
+     requests and returns their slots to the pool.
+
+Invariants (pinned by tests/test_serving_continuous.py):
+  * a slot hosts at most one request at a time;
+  * admitted set + free set is always exactly {0..n_slots-1};
+  * admission order equals arrival order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.cache_pool import SlotCachePool
+from repro.serving.request import (DEFERRED, DONE, PENDING, RUNNING,
+                                   ArrivalQueue, Request)
+
+
+class SlotScheduler:
+    def __init__(self, pool: SlotCachePool):
+        self.pool = pool
+        self.running: Dict[int, Request] = {}     # slot -> request
+
+    # -- admission ---------------------------------------------------------
+    def admit_ready(self, queue: ArrivalQueue, now: float,
+                    limit: Optional[int] = None
+                    ) -> List[Tuple[int, Request]]:
+        """Admit FIFO-ready requests into free slots. Returns
+        [(slot, request), ...] in admission order."""
+        queue.release(now)
+        admitted: List[Tuple[int, Request]] = []
+        budget = self.pool.n_free if limit is None else min(limit,
+                                                            self.pool.n_free)
+        while budget > 0 and queue.n_ready > 0:
+            req = queue.pop_ready()
+            assert req is not None and req.state == PENDING
+            slot = self.pool.alloc()
+            req.slot = slot
+            req.state = RUNNING
+            req.t_admit = now
+            self.running[slot] = req
+            admitted.append((slot, req))
+            budget -= 1
+        return admitted
+
+    # -- retirement --------------------------------------------------------
+    def retire(self, slot: int, now: float, deferred: bool,
+               early: bool = False) -> Request:
+        """Remove the request in `slot` from M_S and free the slot.
+        `deferred` routes it to the M_L queue; `early` marks an in-flight
+        eviction (saved M_S steps)."""
+        req = self.running.pop(slot)
+        req.slot = None
+        req.t_retire = now
+        req.deferred = deferred
+        req.early_exited = early
+        if deferred:
+            req.state = DEFERRED
+        else:
+            req.state = DONE
+            req.t_done = now
+        self.pool.release(slot)
+        return req
+
+    # -- views -------------------------------------------------------------
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.running)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.running)
+
+    def check_invariants(self) -> None:
+        """Assert slot accounting is consistent (used by tests)."""
+        in_use = self.pool.in_use
+        assert set(self.running) == in_use, (self.running, in_use)
+        assert len(in_use) + self.pool.n_free == self.pool.n_slots

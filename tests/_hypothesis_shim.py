@@ -1,0 +1,45 @@
+"""Optional-`hypothesis` shim for the property-test modules.
+
+The tier-1 environment does not ship `hypothesis`; importing it at module
+scope used to abort collection of four test modules (and, with `-x`, the
+whole suite). Importing from this shim instead keeps every plain pytest
+test runnable and turns only the `@given`-decorated property tests into
+skips when `hypothesis` is absent.
+
+Usage (in a test module):
+
+    from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                            # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for `hypothesis.strategies`: any attribute access or
+        call returns itself, so strategy expressions evaluated at
+        decoration time (`st.integers(1, 8).filter(...)`) don't blow up."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (optional extra)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -2,7 +2,7 @@
 App. A.2/B.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.metrics import (auroc, deferral_performance,
                                 distributional_overlap, ideal_deferral_curve,

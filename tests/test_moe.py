@@ -97,8 +97,8 @@ _DISTRIBUTED_SCRIPT = textwrap.dedent("""
 
     y_ref, aux_ref = moe_forward(params, cfg, x, ParallelContext())
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     ctx = ParallelContext(mesh=mesh)
     y_scatter, aux_s = jax.jit(
         lambda p, x: moe_forward(p, cfg, x, ctx, decode=False))(params, x)

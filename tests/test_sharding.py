@@ -89,8 +89,8 @@ _FLASH_DECODE_SCRIPT = textwrap.dedent("""
     pos = jnp.int32(40)
     y_ref, c_ref = gqa_decode(params, cfg, x, pos, cache, ParallelContext())
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = rules_dict({"cache_seq": ("data", "model")})
     ctx = ParallelContext(mesh=mesh, rules=rules)
     y_sh, c_sh = jax.jit(lambda p, x, c: gqa_decode(p, cfg, x, pos, c, ctx))(
