@@ -1,32 +1,46 @@
-"""Serving benchmark: static lock-step cascade vs continuous batching with
-in-flight deferral, on the same synthetic request stream.
+"""Serving benchmark: static lock-step cascade vs continuous batching
+(slot and block-paged KV backends) on the same synthetic request stream.
 
 Scenarios (same models, same calibrated tau, same prompts):
   * static            — batches of `slots` requests, each decoded for the
                         full `max_new` on M_S before the deferral decision
+                        (uniform workloads only)
   * continuous        — slot pool + FIFO admission, early exit disabled
                         (pure scheduling comparison / parity path)
   * continuous+exit   — in-flight deferral: requests whose running mean
                         confidence drops below tau are evicted early,
                         freeing their slot for the next arrival
+  * paged[+exit]      — (--backend paged) the same engine over the
+                        block-paged cache with chunked prefill; reported
+                        with its cache footprint next to the slot pool's
+                        so the memory win on ragged traffic is visible
+
+Ragged mode (--ragged-min/--ragged-max) draws mixed prompt lengths from
+a uniform distribution and sizes the paged budget for the MEAN request,
+not the worst case — the regime the slot backend cannot fit (every slot
+reserves max_prompt + max_new) and the static engine cannot serve at
+all (lock-step batches need one shape).
 
 Each scenario is run once untimed (compile warm-up; in-process runs are
 deterministic, so the warm-up covers every jit shape the timed run needs)
 and once timed. Reported per scenario: tokens/s, latency percentiles,
-deferral ratio, M_S decode steps executed and steps saved by early exit.
+deferral ratio, M_S decode steps executed/saved, cache footprint.
 
     PYTHONPATH=src python -m benchmarks.bench_serving
+    PYTHONPATH=src python -m benchmarks.bench_serving --backend paged \
+        --ragged-min 8 --ragged-max 48 --rate 100
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
-from repro.data.synthetic import make_lm_stream
+from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.launch.serve import build_runners
 from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
                            make_requests, poisson_arrivals)
@@ -66,14 +80,15 @@ def run_static(engine: CascadeEngine, requests: List, prompt_len: int,
         "deferral_ratio": n_deferred / n,
         "ms_steps": steps,
         "saved_steps": 0,
+        "cache_mb": float("nan"),
     }
 
 
 def run_continuous(engine: ContinuousCascadeEngine, requests: List,
-                   prompt_len: int, max_new: int, label: str) -> Dict:
-    res = engine.run(requests, prompt_len, max_new)
+                   max_new: int, label: str) -> Dict:
+    res = engine.run(requests, max_new)
     s = res.stats
-    return {
+    row = {
         "engine": label,
         "makespan_s": s["makespan_s"],
         "throughput_tok_s": s["throughput_tok_s"],
@@ -82,29 +97,53 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         "deferral_ratio": s["deferral_ratio"],
         "ms_steps": res.steps,
         "saved_steps": res.saved_steps,
+        "cache_mb": s["cache_bytes"] / 2**20,
     }
+    if "peak_blocks" in s:
+        row["peak_blocks"] = s["peak_blocks"]
+        row["n_blocks"] = s["n_blocks"]
+    return row
 
 
 def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         slots: int = 8, target_deferral: float = 0.4, rate: float = 0.0,
-        seed: int = 0, margin: float = 0.02, min_tokens: int = 4) -> Dict:
+        seed: int = 0, margin: float = 0.02, min_tokens: int = 4,
+        backend: str = "slot", block_size: int = 8,
+        n_blocks: Optional[int] = None, prefill_chunk: int = 8,
+        ragged_min: int = 0, ragged_max: int = 0) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
     # comparable to `repro.launch.serve`
     small, large, s_cfg = build_runners("internlm2-1.8b", seed)
 
-    live = make_lm_stream(jax.random.fold_in(key, 2),
-                          n_requests, prompt_len, s_cfg.vocab_size)
+    ragged = ragged_min > 0
+    if ragged:
+        ragged_max = max(ragged_max, ragged_min)
+        live = make_ragged_lm_stream(jax.random.fold_in(key, 2),
+                                     n_requests, ragged_min, ragged_max,
+                                     s_cfg.vocab_size)
+        cal_len = (ragged_min + ragged_max) // 2
+        mean_len = float(np.mean([p.shape[0] for p in live]))
+        max_len = max(p.shape[0] for p in live) + max_new
+    else:
+        live = make_lm_stream(jax.random.fold_in(key, 2),
+                              n_requests, prompt_len, s_cfg.vocab_size)
+        cal_len = prompt_len
+        mean_len = float(prompt_len)
+        max_len = prompt_len + max_new
+    cal = (make_lm_stream(jax.random.fold_in(key, 3), n_requests, cal_len,
+                          s_cfg.vocab_size) if ragged else live)
     arrivals = (poisson_arrivals(n_requests, rate, seed) if rate > 0
                 else None)
 
     static = CascadeEngine(small, large)
-    # calibrate on the LIVE set: this is a scheduling benchmark, so the
-    # request mix (realized deferral ratio) is pinned to the target
-    # instead of floating on quantile-estimation noise.
-    tau = static.calibrate(live, prompt_len, max_new, target_deferral)
+    # calibrate on a fixed-shape batch (the LIVE set when uniform): this
+    # is a scheduling benchmark, so the request mix is pinned to the
+    # target instead of floating on quantile-estimation noise.
+    tau = static.calibrate(cal, cal_len, max_new, target_deferral)
     print(f"# tau={tau:.4f} (target deferral {target_deferral}), "
-          f"{n_requests} requests, prompt_len={prompt_len}, "
+          f"{n_requests} requests, "
+          f"prompt_len={f'{ragged_min}..{ragged_max}' if ragged else prompt_len}, "
           f"max_new={max_new}, slots={slots}, rate={rate or 'batch'}")
 
     def fresh():
@@ -118,42 +157,74 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         return max((fn() for _ in range(reps)),
                    key=lambda r: r["throughput_tok_s"])
 
-    rows = [best_of(lambda: run_static(static, fresh(), prompt_len,
-                                       max_new, slots))]
+    rows = []
+    if not ragged:
+        rows.append(best_of(lambda: run_static(static, fresh(), prompt_len,
+                                               max_new, slots)))
 
-    # -- continuous, early exit off ---------------------------------------
+    # -- continuous over the slot pool -------------------------------------
     cont = ContinuousCascadeEngine(small, large, n_slots=slots, tau=tau,
                                    early_exit=False, large_batch=slots,
                                    steps_per_sync=4)
-    rows.append(best_of(lambda: run_continuous(cont, fresh(), prompt_len,
-                                               max_new, "continuous")))
+    rows.append(best_of(lambda: run_continuous(cont, fresh(), max_new,
+                                               "continuous")))
 
-    # -- continuous, in-flight deferral -----------------------------------
     # margin > 0 keeps eviction conservative: transient confidence dips
     # shouldn't buy an M_L regeneration that final-mean deferral wouldn't
     cont_x = ContinuousCascadeEngine(small, large, n_slots=slots, tau=tau,
                                      min_tokens=min_tokens, margin=margin,
                                      early_exit=True, large_batch=slots,
                                      steps_per_sync=4)
-    rows.append(best_of(lambda: run_continuous(cont_x, fresh(), prompt_len,
-                                               max_new, "continuous+exit")))
+    rows.append(best_of(lambda: run_continuous(cont_x, fresh(), max_new,
+                                               "continuous+exit")))
 
-    print("engine,tok_s,p50_ms,p99_ms,deferral,ms_steps,saved_steps")
+    # -- continuous over the block-paged pool ------------------------------
+    if backend == "paged":
+        if n_blocks is None:
+            # budget sized for the MEAN request, not the worst case: this
+            # is the regime a dense slot pool cannot fit
+            per_req = math.ceil((mean_len + max_new) / block_size)
+            biggest = math.ceil(max_len / block_size)
+            n_blocks = max(slots * per_req, biggest)
+        for label, exit_ in (("paged", False), ("paged+exit", True)):
+            eng = ContinuousCascadeEngine(
+                small, large, n_slots=slots, tau=tau,
+                min_tokens=min_tokens, margin=margin, early_exit=exit_,
+                large_batch=slots, steps_per_sync=4, backend="paged",
+                block_size=block_size, n_blocks=n_blocks,
+                prefill_chunk=prefill_chunk or None)
+            rows.append(best_of(lambda e=eng, l=label: run_continuous(
+                e, fresh(), max_new, l)))
+
+    print("engine,tok_s,p50_ms,p99_ms,deferral,ms_steps,saved_steps,cache_mb")
     for r in rows:
         print(f"{r['engine']},{r['throughput_tok_s']:.1f},"
               f"{r['latency_p50_s'] * 1e3:.0f},"
               f"{r['latency_p99_s'] * 1e3:.0f},"
               f"{r['deferral_ratio']:.2f},{r['ms_steps']},"
-              f"{r['saved_steps']}")
+              f"{r['saved_steps']},{r['cache_mb']:.2f}")
     base = rows[0]["throughput_tok_s"]
-    best = rows[-1]
-    print(f"# continuous+exit speedup over static: "
+    best = max(rows[1:], key=lambda r: r["throughput_tok_s"]) \
+        if len(rows) > 1 else rows[0]
+    print(f"# best continuous ({best['engine']}) vs {rows[0]['engine']}: "
           f"{best['throughput_tok_s'] / base:.2f}x, "
           f"early-exit M_S step savings: {best['saved_steps']}")
+    if backend == "paged":
+        slot_row = next(r for r in rows if r["engine"] == "continuous")
+        paged_row = next(r for r in rows if r["engine"].startswith("paged"))
+        dense_rows = int(paged_row["n_blocks"] * block_size // max_len)
+        print(f"# cache footprint: slot pool {slot_row['cache_mb']:.2f} MiB "
+              f"({slots} x {max_len}-token rows) vs paged "
+              f"{paged_row['cache_mb']:.2f} MiB "
+              f"({paged_row['n_blocks']} x {block_size}-token blocks, peak "
+              f"{paged_row['peak_blocks']} mapped); a dense pool in the "
+              f"paged budget would hold only {dense_rows} worst-case rows")
     payload = {"tau": tau, "config": {
         "n_requests": n_requests, "prompt_len": prompt_len,
         "max_new": max_new, "slots": slots, "rate": rate,
-        "target_deferral": target_deferral}, "rows": rows}
+        "target_deferral": target_deferral, "backend": backend,
+        "block_size": block_size, "n_blocks": n_blocks,
+        "ragged_min": ragged_min, "ragged_max": ragged_max}, "rows": rows}
     save_result("serving", payload)
     for r in rows:
         emit_csv_row(f"serving/{r['engine']}",
@@ -173,11 +244,26 @@ def main():
                     help="Poisson arrivals/s (0 = all requests at t=0)")
     ap.add_argument("--margin", type=float, default=0.02)
     ap.add_argument("--min-tokens", type=int, default=4)
+    ap.add_argument("--backend", choices=("slot", "paged"), default="slot",
+                    help="'paged' adds block-paged rows + footprint "
+                         "comparison against the slot pool")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="paged block budget (0 = auto: sized for the "
+                         "mean request)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="paged prefill chunk tokens (0 = whole prompt)")
+    ap.add_argument("--ragged-min", type=int, default=0,
+                    help=">0: ragged workload, prompt lengths uniform in "
+                         "[ragged-min, ragged-max]")
+    ap.add_argument("--ragged-max", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     run(args.requests, args.prompt_len, args.max_new, args.slots,
         args.target_deferral, args.rate, args.seed, args.margin,
-        args.min_tokens)
+        args.min_tokens, args.backend, args.block_size,
+        args.blocks or None, args.prefill_chunk,
+        args.ragged_min, args.ragged_max)
 
 
 if __name__ == "__main__":

@@ -202,6 +202,22 @@ def caption_factuality(pred_tokens: np.ndarray, data: CaptionData) -> np.ndarray
 # Token stream for the large-scale train driver
 # ---------------------------------------------------------------------------
 
+def make_ragged_lm_stream(key, n_seqs: int, len_min: int, len_max: int,
+                          vocab: int):
+    """Ragged serving workload: `n_seqs` prompts whose lengths are drawn
+    uniformly from [len_min, len_max] (inclusive), token content from the
+    same Zipf-Markov stream as `make_lm_stream`. Returns a list of 1-D
+    int32 arrays (mixed lengths — feed to `serving.make_requests`)."""
+    if not 1 <= len_min <= len_max:
+        raise ValueError("need 1 <= len_min <= len_max")
+    base = make_lm_stream(key, n_seqs, len_max, vocab)
+    rng = np.random.default_rng(
+        int(jax.random.randint(jax.random.fold_in(key, 1), (), 0,
+                               2**31 - 1)))
+    lens = rng.integers(len_min, len_max + 1, size=n_seqs)
+    return [base[i, :lens[i]].astype(np.int32) for i in range(n_seqs)]
+
+
 def make_lm_stream(key, n_seqs: int, seq_len: int, vocab: int,
                    order: int = 2) -> np.ndarray:
     """Zipf-initialized order-`order` Markov chain token stream: cheap to

@@ -3,14 +3,22 @@
 
 Two engines (see repro.serving):
   * static      — lock-step batches, full max_new decode before deferral
-  * continuous  — slot-based KV pool, continuous batching, in-flight
-                  deferral once the running mean confidence drops below
-                  tau - margin (saves the remaining M_S steps)
+  * continuous  — continuous batching with in-flight deferral once the
+                  running mean confidence drops below tau - margin
+                  (saves the remaining M_S steps), over one of two KV
+                  backends: --backend slot (dense worst-case rows) or
+                  --backend paged (block-paged cache, ragged prompts,
+                  chunked prefill; size the budget with --blocks)
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --requests 32 --max-new 8 --deferral-ratio 0.3 \
         --engine continuous --slots 8 --arrival-rate 50 \
         --audit-log /tmp/serve_audit.jsonl
+
+    # ragged prompts over the paged backend
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --backend paged --ragged-min 8 --ragged-max 32 --block-size 8 \
+        --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -21,7 +29,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.data.synthetic import make_lm_stream
+from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.models import transformer as tfm
 from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
                            ModelRunner, make_requests, poisson_arrivals)
@@ -56,16 +64,42 @@ def main():
                     help="Poisson arrivals/s; 0 = all at t=0")
     ap.add_argument("--audit-log", default=None,
                     help="JSONL audit log path (continuous engine)")
+    ap.add_argument("--backend", choices=("slot", "paged"), default="slot",
+                    help="continuous engine KV-cache backend")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged backend: tokens per cache block")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="paged backend: physical block budget "
+                         "(0 = worst case, always fits)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged backend: prefill chunk tokens "
+                         "(0 = whole prompt in one chunk)")
+    ap.add_argument("--ragged-min", type=int, default=0,
+                    help=">0: ragged prompt lengths uniform in "
+                         "[ragged-min, ragged-max] (continuous engine)")
+    ap.add_argument("--ragged-max", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.ragged_min > 0 and args.engine == "static":
+        ap.error("--ragged-min/--ragged-max need --engine continuous "
+                 "(the static engine serves lock-step uniform batches)")
 
     key = jax.random.PRNGKey(args.seed)
     small, large, small_cfg = build_runners(args.arch, args.seed)
 
-    prompts = make_lm_stream(jax.random.fold_in(key, 2),
-                             args.requests * 2, args.prompt_len,
-                             small_cfg.vocab_size)
-    cal, live = prompts[:args.requests], prompts[args.requests:]
+    ragged = args.ragged_min > 0
+    cal_len = ((args.ragged_min + max(args.ragged_max, args.ragged_min))
+               // 2 if ragged else args.prompt_len)
+    cal = make_lm_stream(jax.random.fold_in(key, 1), args.requests,
+                         cal_len, small_cfg.vocab_size)
+    if ragged:
+        live = make_ragged_lm_stream(
+            jax.random.fold_in(key, 2), args.requests, args.ragged_min,
+            max(args.ragged_max, args.ragged_min), small_cfg.vocab_size)
+    else:
+        live = make_lm_stream(jax.random.fold_in(key, 2), args.requests,
+                              args.prompt_len, small_cfg.vocab_size)
 
     if args.engine == "static":
         engine = CascadeEngine(small, large)
@@ -82,17 +116,20 @@ def main():
 
     engine = ContinuousCascadeEngine(
         small, large, n_slots=args.slots, min_tokens=args.min_tokens,
-        margin=args.margin, early_exit=not args.no_early_exit)
-    tau = engine.calibrate(cal, args.prompt_len, args.max_new,
+        margin=args.margin, early_exit=not args.no_early_exit,
+        backend=args.backend, block_size=args.block_size,
+        n_blocks=args.blocks or None,
+        prefill_chunk=args.prefill_chunk or None)
+    tau = engine.calibrate(cal, cal_len, args.max_new,
                            args.deferral_ratio)
     print(f"calibrated tau={tau:.4f} for target deferral "
           f"{args.deferral_ratio}")
     arrivals = (poisson_arrivals(len(live), args.arrival_rate, args.seed)
                 if args.arrival_rate > 0 else None)
     reqs = make_requests(live, args.max_new, arrivals)
-    res = engine.run(reqs, args.prompt_len, args.max_new,
-                     audit_path=args.audit_log)
-    print(f"served {len(live)} requests on {args.slots} slots in "
+    res = engine.run(reqs, args.max_new, audit_path=args.audit_log)
+    print(f"served {len(live)} requests on {args.slots} slots "
+          f"({args.backend} backend) in "
           f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "
           f"early_exits={int(res.early_exited.sum())}, "
           f"saved_M_S_steps={res.saved_steps}")

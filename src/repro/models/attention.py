@@ -5,6 +5,19 @@ decoupled RoPE and weight-absorbed decode).
 All functions operate on ONE layer's params (scan slices stacked trees).
 Caches are dicts of arrays; decode uses dynamic_update_slice at `position`.
 
+Cache layouts (per layer-sliced leaf):
+  * dense  — [batch, max_len, ...]: one contiguous row per sequence; writes
+    go to absolute position `position`, reads mask `idx <= position`.
+  * paged  — [n_blocks, block_size, ...] + a page table `pages` [B, M]
+    mapping each row's logical block m to a physical block id (0 is the
+    shared trash block). Writes scatter to
+    (pages[b, pos // block_size], pos % block_size); reads gather the
+    row's blocks back into a dense [B, M*block_size, ...] view and apply
+    the same per-row validity mask — so paged and dense attention compute
+    identical masked softmaxes over the valid prefix.
+  Paged mode is selected by passing `pages`; sliding-window ring caches
+  cannot be paged (serving.paged_pool rejects those configs).
+
 Sharding: head dims carry logical axis "heads"/"kv_heads" (→ `model`);
 the output projection contracts the sharded head axis, so XLA inserts the
 canonical tensor-parallel all-reduce after each attention block.
@@ -41,6 +54,43 @@ class AttnConfig:
     kv_lora: int = 0
     rope_dim: int = 64
     v_head_dim: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache primitives (shared by GQA and MLA)
+# ---------------------------------------------------------------------------
+
+def gather_blocks(leaf: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
+    """Gather a paged cache leaf into a dense per-row view.
+
+    leaf  [n_blocks, block_size, ...] — physical block storage
+    pages [B, M] int32               — per-row page table (logical -> physical)
+
+    Returns [B, M*block_size, ...]: row b's logical sequence, blocks
+    concatenated in logical order. Unmapped entries point at the trash
+    block (id 0); the positions they contribute lie beyond the row's valid
+    prefix and are removed by the caller's `idx <= pos` mask.
+    """
+    B, M = pages.shape
+    g = jnp.take(leaf, pages.reshape(-1), axis=0)        # [B*M, bs, ...]
+    return g.reshape((B, M * leaf.shape[1]) + leaf.shape[2:])
+
+
+def _paged_write(leaf: jnp.ndarray, pages: jnp.ndarray, tpos: jnp.ndarray,
+                 values: jnp.ndarray) -> jnp.ndarray:
+    """Scatter `values` [B, T, ...] at absolute token positions `tpos`
+    ([T] shared across rows, or [B, T]) through the page table. Positions
+    whose logical block is unmapped (table entry 0) land in the trash
+    block — callers rely on this for padded prefill chunks and for
+    inactive decode rows (see engine one_step)."""
+    bs = leaf.shape[1]
+    B = pages.shape[0]
+    if tpos.ndim == 1:
+        tpos = jnp.broadcast_to(tpos[None, :], (B, tpos.shape[0]))
+    blk_idx = jnp.clip(tpos // bs, 0, pages.shape[1] - 1)   # [B, T]
+    blk = jnp.take_along_axis(pages, blk_idx, axis=1)       # [B, T]
+    off = tpos % bs
+    return leaf.at[blk, off].set(values.astype(leaf.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +206,17 @@ def _attend_chunked(qg, k, v, mask, scale, chunk: int):
 def gqa_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, ctx: ParallelContext,
                 cache: Optional[dict] = None,
-                cache_offset=0) -> Tuple[jnp.ndarray, Optional[dict]]:
+                cache_offset=0,
+                pages: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Full-sequence self-attention (training / prefill).
 
     If `cache` is given, writes K/V at [cache_offset, cache_offset+T) and
     attends over the written prefix (prefill); else attends in-sequence.
+    `cache_offset` may be a traced scalar (chunked prefill resumes at the
+    chunk's start). With `pages` [B, M] the cache is block-paged
+    ([n_blocks, block_size, ...] leaves): the chunk's K/V scatter through
+    the page table and attention runs over the gathered logical view.
     """
     B, T, d = x.shape
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
@@ -178,7 +234,19 @@ def gqa_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     scale = 1.0 / np.sqrt(cfg.head_dim)
 
     new_cache = None
-    if cache is not None and cache["k"].shape[1] < T:
+    if pages is not None:
+        assert cache is not None and cfg.sliding_window is None, \
+            "paged caches do not support sliding-window attention"
+        tpos = cache_offset + jnp.arange(T)
+        ck = _paged_write(cache["k"], pages, tpos, k)
+        cv = _paged_write(cache["v"], pages, tpos, v)
+        new_cache = {"k": ck, "v": cv}
+        kk = gather_blocks(ck, pages)
+        vv = gather_blocks(cv, pages)
+        mask = make_causal_mask(T, kk.shape[1], cache_offset)
+        out = _attend(q, kk.astype(q.dtype), vv.astype(q.dtype), mask, scale,
+                      ctx, cfg.attn_chunk)
+    elif cache is not None and cache["k"].shape[1] < T:
         # windowed ring-buffer cache smaller than the prompt: attend
         # IN-SEQUENCE (sliding mask) and store only the last `window`
         # tokens at their ring slots (slot = position % window).
@@ -266,7 +334,8 @@ def _flash_decode_sharded(q, ck, cv, mask, scale, ctx: ParallelContext):
 
 
 def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
-               position, cache: dict, ctx: ParallelContext
+               position, cache: dict, ctx: ParallelContext,
+               pages: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x [B,1,d]; position is either a scalar int (whole
     batch at the same depth — the static serving engine) or an int vector
@@ -274,9 +343,15 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     decodes at its own position; writes become row scatters and the
     validity mask becomes per-row).
 
+    With `pages` [B, M] the cache is block-paged: the new K/V scatters to
+    (pages[b, pos // block_size], pos % block_size) and attention runs
+    over the gathered logical view with the same `idx <= pos` mask —
+    token-identical to the dense path over a valid prefix. Requires
+    per-row positions.
+
     For sliding-window configs the cache is a ring buffer of size `window`;
     the write slot is position % window and relative order is handled by
-    the positional mask below.
+    the positional mask below. Ring caches cannot be paged.
     """
     B, T, d = x.shape
     assert T == 1
@@ -292,6 +367,20 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     pos_bt = pos[:, None] if per_row else pos[None, None]   # [B,1] / [1,1]
     q = apply_rope(q, pos_bt, cfg.rope_theta)
     k = apply_rope(k, pos_bt, cfg.rope_theta)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    if pages is not None:
+        assert per_row and cfg.sliding_window is None, \
+            "paged decode needs per-row positions and no sliding window"
+        ck = _paged_write(cache["k"], pages, pos[:, None], k[:, 0:1])
+        cv = _paged_write(cache["v"], pages, pos[:, None], v[:, 0:1])
+        kk = gather_blocks(ck, pages)
+        vv = gather_blocks(cv, pages)
+        mask = (jnp.arange(kk.shape[1])[None, :] <= pos[:, None])[:, None, :]
+        out = _attend(q, kk.astype(q.dtype), vv.astype(q.dtype), mask, scale,
+                      ctx)
+        y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        return y, {"k": ck, "v": cv}
     S = cache["k"].shape[1]
     ring = cfg.sliding_window is not None and S <= cfg.sliding_window
     slot = jnp.mod(pos, S) if ring else pos
@@ -325,7 +414,6 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
         if cfg.sliding_window:
             # linear cache larger than the window: restrict attendance
             mask = mask & (idx > pos - cfg.sliding_window)[None, :]
-    scale = 1.0 / np.sqrt(cfg.head_dim)
     out = None
     if ctx.mesh is not None:
         out = _flash_decode_sharded(q, ck.astype(q.dtype),
@@ -429,10 +517,13 @@ def _mla_qkr(params, cfg, x, positions):
 
 def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, ctx: ParallelContext,
-                cache: Optional[dict] = None, cache_offset=0
+                cache: Optional[dict] = None, cache_offset=0,
+                pages: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Training / prefill path: materializes per-head K/V (compute-friendly);
-    the cache still stores only (ckv, kr)."""
+    the cache still stores only (ckv, kr). `pages` selects the block-paged
+    cache layout (chunked prefill): the chunk's compressed kv / rope key
+    scatter through the page table, attention gathers the logical view."""
     B, T, d = x.shape
     dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
     q_nope, q_rope = _mla_qkr(params, cfg, x, positions)
@@ -440,7 +531,17 @@ def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     kr = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
                     positions, cfg.rope_theta)[:, :, 0, :]
     new_cache = None
-    if cache is not None:
+    if pages is not None:
+        assert cache is not None
+        tpos = cache_offset + jnp.arange(T)
+        cckv = _paged_write(cache["ckv"], pages, tpos, ckv)
+        ckr = _paged_write(cache["kr"], pages, tpos, kr)
+        new_cache = {"ckv": cckv, "kr": ckr}
+        ckv_all = gather_blocks(cckv, pages).astype(x.dtype)
+        kr_all = gather_blocks(ckr, pages).astype(x.dtype)
+        S = ckv_all.shape[1]
+        mask = make_causal_mask(T, S, cache_offset)
+    elif cache is not None:
         cckv = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_offset, 0))
         ckr = jax.lax.dynamic_update_slice(
@@ -484,14 +585,16 @@ def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
 
 
 def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
-               position, cache: dict, ctx: ParallelContext
+               position, cache: dict, ctx: ParallelContext,
+               pages: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, dict]:
     """Weight-absorbed decode: scores/values computed directly against the
     compressed cache — per-step FLOPs and cache reads are O(kv_lora), not
     O(heads*head_dim). This is the TPU-friendly MLA inference form.
 
     `position` is a scalar or an int vector [B] of per-row depths
-    (continuous batching), mirroring `gqa_decode`."""
+    (continuous batching), mirroring `gqa_decode`. `pages` [B, M] selects
+    the block-paged cache layout (requires per-row positions)."""
     B, T, d = x.shape
     assert T == 1
     dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
@@ -502,25 +605,33 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     ckv_new = jnp.einsum("btd,dr->btr", x, params["wdkv"])
     kr_new = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
                         pos_bt, cfg.rope_theta)[:, :, 0, :]
-    if per_row:
+    if pages is not None:
+        assert per_row, "paged decode needs per-row positions"
+        cckv = _paged_write(cache["ckv"], pages, pos[:, None], ckv_new)
+        ckr = _paged_write(cache["kr"], pages, pos[:, None], kr_new)
+        ckv_seq = gather_blocks(cckv, pages)               # [B, M*bs, r]
+        kr_seq = gather_blocks(ckr, pages)
+    elif per_row:
         rows = jnp.arange(B)
         cckv = cache["ckv"].at[rows, pos].set(
             ckv_new[:, 0].astype(cache["ckv"].dtype))
         ckr = cache["kr"].at[rows, pos].set(
             kr_new[:, 0].astype(cache["kr"].dtype))
+        ckv_seq, kr_seq = cckv, ckr
     else:
         cckv = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
         ckr = jax.lax.dynamic_update_slice(
             cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
-    S = cckv.shape[1]
-    ckv_n = rms_norm(cckv.astype(x.dtype), params["kv_norm"])
+        ckv_seq, kr_seq = cckv, ckr
+    S = ckv_seq.shape[1]
+    ckv_n = rms_norm(ckv_seq.astype(x.dtype), params["kv_norm"])
     # absorb W_uk into q: q_abs [B,1,H,kv_lora]
     q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["wuk"])
     scale = 1.0 / np.sqrt(dn + dr)
     scores = (jnp.einsum("bthr,bsr->bhts", q_abs, ckv_n,
                          preferred_element_type=jnp.float32)
-              + jnp.einsum("bthk,bsk->bhts", q_rope, ckr.astype(x.dtype),
+              + jnp.einsum("bthk,bsk->bhts", q_rope, kr_seq.astype(x.dtype),
                            preferred_element_type=jnp.float32)) * scale
     if per_row:
         mask = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]

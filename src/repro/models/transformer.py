@@ -214,17 +214,20 @@ def _maybe_remat(fn, cfg: ModelConfig):
 
 def _attn_ffn_block(p, cfg: ModelConfig, x, positions, ctx,
                     cache=None, cache_offset=0, decode=False, position=None,
-                    ffn_kind="mlp"):
+                    ffn_kind="mlp", pages=None):
     """One pre-norm transformer block (attention or MLA + dense/MoE FFN).
-    Returns (x, new_cache, aux)."""
+    Returns (x, new_cache, aux). `pages` selects the block-paged cache
+    layout (see models.attention)."""
     ac = attn_config(cfg)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if decode:
         fwd = attn_lib.mla_decode if cfg.mla else attn_lib.gqa_decode
-        y, new_cache = fwd(p["attn"], ac, h, position, cache, ctx)
+        y, new_cache = fwd(p["attn"], ac, h, position, cache, ctx,
+                           pages=pages)
     else:
         fwd = attn_lib.mla_forward if cfg.mla else attn_lib.gqa_forward
-        y, new_cache = fwd(p["attn"], ac, h, positions, ctx, cache, cache_offset)
+        y, new_cache = fwd(p["attn"], ac, h, positions, ctx, cache,
+                           cache_offset, pages=pages)
     x = x + y
     h = rms_norm(x, p["norm2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -275,8 +278,12 @@ def _scan_group(block_fn, stacked_params, x, stacked_cache, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _trunk(params, cfg: ModelConfig, x, positions, ctx,
-           cache=None, cache_offset=0, decode=False, position=None):
-    """Runs all layer groups. x [B,T,d] embeddings. Returns (x, cache, aux)."""
+           cache=None, cache_offset=0, decode=False, position=None,
+           pages=None):
+    """Runs all layer groups. x [B,T,d] embeddings. Returns (x, cache, aux).
+    `pages` [B, M] routes attention caches through a page table (the
+    physical block storage is shared by value, the table by structure:
+    every stacked layer's leaf is indexed by the same table)."""
     blocks = params["blocks"]
     new_cache: Dict[str, Any] = {}
     aux_total = jnp.zeros((), jnp.float32)
@@ -288,7 +295,8 @@ def _trunk(params, cfg: ModelConfig, x, positions, ctx,
         def block_fn(p, x_, c_, _kind=kind):
             return _attn_ffn_block(p, cfg, x_, positions, ctx, c_,
                                    cache_offset, decode, position,
-                                   ffn_kind=("moe" if _kind == "moe" else "mlp"))
+                                   ffn_kind=("moe" if _kind == "moe" else "mlp"),
+                                   pages=pages)
         c = cache.get(kind) if cache is not None else None
         x, nc, aux = _scan_group(block_fn, blocks[kind], x, c, cfg)
         if nc is not None:
@@ -383,35 +391,50 @@ def forward(params, cfg: ModelConfig, tokens, ctx: ParallelContext,
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache, ctx: ParallelContext,
-            extra_embeds=None, last_only: bool = False):
-    """Process the prompt, filling caches. Returns (logits, cache).
+            extra_embeds=None, last_only: bool = False, cache_offset=0,
+            pages=None, last_index=None):
+    """Process the prompt (or one chunk of it), filling caches. Returns
+    (logits, cache).
 
     last_only=True unembeds only the final position ([B, 1, V]) — the
     serving path needs just the next-token distribution, and unembedding
     all S positions against a 100k+ vocab dominates prefill compute
-    (2·B·S·d·V flops) for no consumer."""
+    (2·B·S·d·V flops) for no consumer.
+
+    Chunked prefill: `cache_offset` (scalar, may be traced) is the absolute
+    position of tokens[:, 0] — call repeatedly with consecutive chunks to
+    fill a long prompt without materializing its full attention. `pages`
+    [B, M] routes cache writes/reads through a page table (block-paged
+    serving backend). `last_index` ([B] or scalar, may be traced) unembeds
+    that position instead of -1, so a right-padded final chunk still yields
+    the true last-prompt-token logits.
+    """
     x = _embed_inputs(params, cfg, tokens, extra_embeds, ctx)
     B, T, _ = x.shape
-    positions = jnp.arange(T)[None, :]
+    positions = jnp.arange(T)[None, :] + cache_offset
     x, new_cache, _ = _trunk(params, cfg, x, positions, ctx, cache=cache,
-                             cache_offset=0)
-    if last_only:
+                             cache_offset=cache_offset, pages=pages)
+    if last_index is not None:
+        idx = jnp.broadcast_to(jnp.asarray(last_index), (B,))
+        x = x[jnp.arange(B), idx][:, None, :]
+    elif last_only:
         x = x[:, -1:, :]
     return _logits(params, cfg, x, ctx), new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, position, cache,
-                ctx: ParallelContext):
+                ctx: ParallelContext, pages=None):
     """One-token decode. token [B] or [B,1]; position scalar OR int vector
     [B] of per-row decode depths (continuous batching over a slot pool —
-    each row attends/writes at its own position). Returns
-    (logits [B, V], cache)."""
+    each row attends/writes at its own position). `pages` [B, M] routes
+    the per-row cache access through a page table (block-paged backend;
+    requires vector positions). Returns (logits [B, V], cache)."""
     if token.ndim == 1:
         token = token[:, None]
     x = _embed_inputs(params, cfg, token, None, ctx)
     pos = jnp.asarray(position)
     positions = pos[:, None] if pos.ndim == 1 else jnp.full((1, 1), position)
     x, new_cache, _ = _trunk(params, cfg, x, positions, ctx, cache=cache,
-                             decode=True, position=position)
+                             decode=True, position=position, pages=pages)
     logits = _logits(params, cfg, x, ctx)
     return logits[:, 0, :], new_cache

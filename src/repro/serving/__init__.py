@@ -6,9 +6,15 @@ Architecture
 ::
 
     arrivals ──> request.ArrivalQueue ──> scheduler.SlotScheduler
-                                              │ admit (FIFO, free slots)
+                                              │ admit (strict FIFO; paged
+                                              │ backend also gates on
+                                              │ block reservation)
                                               ▼
-                  cache_pool.SlotCachePool  [slot 0 | slot 1 | ... ]
+            cache_pool.SlotCachePool   [slot 0 | slot 1 | ... ]   (dense)
+         or paged_pool.PagedCachePool  [blk 7|blk 2|...] + page table
+                                              │ paged admission prefills
+                                              │ in fixed chunks
+                                              │ interleaved with decode
                                               │ jitted batched step:
                                               │ decode all slots at
                                               │ per-slot positions,
@@ -24,29 +30,35 @@ Architecture
                   batched M_L regeneration ──> telemetry.ServingTelemetry
                                                (tokens/s, latency pXX,
                                                 deferral ratio, savings,
+                                                cache footprint,
                                                 JSONL audit log)
 
 `engine.CascadeEngine` is the static lock-step reference path; with
 `early_exit=False` the continuous engine reproduces it token-for-token
-under greedy decoding.
+under greedy decoding (both backends).
 
 Modules
 -------
 request     Request lifecycle (PENDING/RUNNING/DEFERRED/DONE) + arrival
             queue with delayed visibility + Poisson arrival helper.
-cache_pool  Slot-based KV/state cache pool, preallocated once and reused
-            across request generations; batch axes discovered from the
-            abstract cache.
-scheduler   FIFO admission into free slots, retirement, invariants.
+            Requests carry their own prompt lengths (ragged admission).
+cache_pool  Dense slot-based KV/state cache pool, preallocated once and
+            reused across request generations; batch axes discovered
+            from the abstract cache.
+paged_pool  Block-paged KV cache: fixed-size blocks + per-slot page
+            tables, on-demand mapping, reservation-based admission.
+scheduler   FIFO admission into free slots (optionally capacity-gated),
+            retirement, invariants.
 engine      ModelRunner (on-device greedy loop), static CascadeEngine,
             ContinuousCascadeEngine (continuous batching + in-flight
-            deferral).
+            deferral over either backend, chunked prefill).
 telemetry   Event stream, JSONL audit log, throughput/latency summary.
 """
 from repro.serving.cache_pool import SlotCachePool
 from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
                                   ContinuousServeResult, ModelRunner,
                                   ServeResult)
+from repro.serving.paged_pool import PagedCachePool
 from repro.serving.request import (ArrivalQueue, Request, make_requests,
                                    poisson_arrivals)
 from repro.serving.scheduler import SlotScheduler
@@ -54,7 +66,7 @@ from repro.serving.telemetry import ServingTelemetry
 
 __all__ = [
     "ArrivalQueue", "CascadeEngine", "ContinuousCascadeEngine",
-    "ContinuousServeResult", "ModelRunner", "Request", "ServeResult",
-    "ServingTelemetry", "SlotCachePool", "SlotScheduler", "make_requests",
-    "poisson_arrivals",
+    "ContinuousServeResult", "ModelRunner", "PagedCachePool", "Request",
+    "ServeResult", "ServingTelemetry", "SlotCachePool", "SlotScheduler",
+    "make_requests", "poisson_arrivals",
 ]

@@ -70,9 +70,17 @@ class SlotCachePool:
         # lifetime counters: how many requests each slot has hosted
         self.generations = [0] * n_slots
 
+    # -- capacity ----------------------------------------------------------
+    def footprint_bytes(self) -> int:
+        """Device bytes held by the pool's cache tree. Every slot reserves
+        a full `max_len` row regardless of its tenant's actual length —
+        this is the worst-case cost the paged pool avoids."""
+        return sum(l.nbytes for l in jax.tree.leaves(self.cache))
+
     # -- slot bookkeeping --------------------------------------------------
     @property
     def n_free(self) -> int:
+        """Number of slots currently unoccupied."""
         return len(self._free)
 
     @property

@@ -5,32 +5,50 @@ Two engines share the same models and calibration:
 
 `CascadeEngine` — the static reference path. Lock-step batches: M_S
 prefills + greedy-decodes every request for the full `max_new` tokens
-(now in a single on-device `fori_loop`, one host transfer per batch),
-then requests whose mean eq.-8 negative predictive entropy falls below
-tau are regenerated from scratch by M_L.
+(in a single on-device `fori_loop`, one host transfer per batch), then
+requests whose mean eq.-8 negative predictive entropy falls below tau
+are regenerated from scratch by M_L.
 
 `ContinuousCascadeEngine` — the continuous-batching serving subsystem.
-A slot-based KV-cache pool (`cache_pool.SlotCachePool`) is allocated once;
-a scheduler (`scheduler.SlotScheduler`) admits pending requests into free
-slots every step and retires finished or deferred ones. The jitted step
-decodes ALL slots at once at per-slot positions (ragged depths — see
-`models.attention.gqa_decode`) and accumulates the confidence sum on
+Requests carry their own prompt lengths (ragged admission); a scheduler
+(`scheduler.SlotScheduler`) admits pending requests into free slots every
+step and retires finished or deferred ones. The jitted step decodes ALL
+slots at once at per-slot positions and accumulates the confidence sum on
 device; only tiny per-slot control vectors cross to host each step.
 **In-flight deferral**: once a request has decoded `min_tokens` tokens,
 a running mean confidence below `tau - margin` evicts it from M_S
 immediately — the remaining M_S decode steps are saved — and queues it
-for batched M_L regeneration. With `early_exit=False` the continuous
-engine is token-for-token identical to the static engine under greedy
-decoding (pinned by tests/test_serving_continuous.py).
+for batched M_L regeneration.
+
+Two selectable KV-cache backends (`backend=`):
+
+  * ``"slot"``  — `cache_pool.SlotCachePool`: one dense row of
+    `max(prompt_len + max_new)` positions per slot, allocated once.
+    Ragged prompts are admitted in per-length groups (batched prefill per
+    distinct length); every slot pays the worst-case row.
+  * ``"paged"`` — `paged_pool.PagedCachePool`: fixed-size blocks + a
+    per-slot page table; blocks are mapped on demand as each request's
+    frontier advances and freed at retirement, so a short request never
+    pays for the longest one. Long prompts prefill in fixed-size chunks
+    (`prefill_chunk`) interleaved with decode steps, so a long arrival
+    never stalls resident requests' decoding.
+
+Parity guarantees (pinned by tests): with `early_exit=False` the
+continuous engine is token-for-token identical to the static engine
+under greedy decoding on uniform workloads, for BOTH backends; on ragged
+workloads each request's greedy tokens equal a standalone
+`ModelRunner.generate` run of that single request.
 
 Metrics mirror the paper (deferral ratio, per-request confidence,
 cost_small + r * cost_large) plus serving telemetry (tokens/s, latency
-percentiles, early-exit savings) from `telemetry.ServingTelemetry`.
+percentiles, early-exit savings, cache footprint) from
+`telemetry.ServingTelemetry`.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -42,7 +60,9 @@ from repro.configs import ModelConfig
 from repro.core.calibration import (expected_compute_cost,
                                     threshold_for_deferral_ratio)
 from repro.models import transformer as tfm
-from repro.serving.cache_pool import SlotCachePool, scatter_rows
+from repro.serving.cache_pool import (SlotCachePool, cache_batch_axes,
+                                      scatter_rows)
+from repro.serving.paged_pool import PagedCachePool
 from repro.serving.request import DONE, ArrivalQueue, Request, make_requests
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
@@ -57,6 +77,7 @@ def _neg_entropy(logits: jnp.ndarray) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class ServeResult:
+    """Static-engine output batch (rid order == input row order)."""
     tokens: np.ndarray            # [B, max_new] final (post-cascade) tokens
     small_tokens: np.ndarray
     confidence: np.ndarray        # [B] mean per-step neg entropy (eq. 8)
@@ -71,8 +92,7 @@ class ModelRunner:
 
     `generate` runs the whole greedy loop on device (`lax.fori_loop` over
     decode steps, tokens accumulated into a preallocated buffer) and
-    transfers the token matrix + confidence vector to host ONCE — the old
-    implementation round-tripped every token.
+    transfers the token matrix + confidence vector to host ONCE.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any,
@@ -128,7 +148,7 @@ class ModelRunner:
 
 class CascadeEngine:
     """Two-ModelRunner cascade with a calibrated threshold (static,
-    lock-step batches — the reference path)."""
+    lock-step uniform batches — the reference path)."""
 
     def __init__(self, small: ModelRunner, large: ModelRunner,
                  tau: float = -1.0, cost_small: float = 0.2,
@@ -141,15 +161,18 @@ class CascadeEngine:
 
     def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
                   max_new: int, deferral_ratio: float) -> float:
+        """Pick tau so `deferral_ratio` of the validation prompts fall
+        below it (shared Stage-3 helper: consistent `deferred = conf <
+        tau` semantics, incl. the ratio<=0 / ratio>=1 sentinels, with
+        core.calibration users)."""
         _, conf = self.small.generate(val_prompts, prompt_len, max_new)
-        # shared Stage-3 helper: consistent `deferred = conf < tau`
-        # semantics (incl. the ratio<=0 / ratio>=1 sentinels) with
-        # core.calibration users.
         self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
         return self.tau
 
     def serve(self, prompts: np.ndarray, prompt_len: int,
               max_new: int) -> ServeResult:
+        """Serve one uniform lock-step batch: full M_S decode, then
+        batched M_L regeneration of the below-tau rows."""
         s_tokens, conf = self.small.generate(prompts, prompt_len, max_new)
         deferred = conf < self.tau
         tokens = s_tokens.copy()
@@ -173,6 +196,7 @@ class CascadeEngine:
 
 @dataclasses.dataclass
 class ContinuousServeResult:
+    """Continuous-engine output (requests sorted by rid)."""
     requests: List[Request]
     tokens: np.ndarray            # [N, max_new] final tokens, rid order
     confidence: np.ndarray        # [N] mean neg entropy at retirement
@@ -185,7 +209,7 @@ class ContinuousServeResult:
 
 
 class ContinuousCascadeEngine:
-    """Continuous-batching cascade over a slot-based KV pool.
+    """Continuous-batching cascade over a slot or block-paged KV pool.
 
     Per-slot device state (all [n_slots] unless noted):
       last_tok  — input token for the next decode step
@@ -194,12 +218,22 @@ class ContinuousCascadeEngine:
       budget    — per-slot token budget (request's max_new); a slot
                   self-deactivates on device when n_gen reaches it
       conf_sum  — running eq.-8 negative-entropy sum (ON DEVICE)
-      active    — slot currently hosts a running request
+      active    — slot currently hosts a decoding request
       tokens    — [n_slots, max_new] output buffer, transferred at retire
+
+    Backends: ``backend="slot"`` preallocates one dense `max_len` cache
+    row per slot (uniform worst case); ``backend="paged"`` shares
+    `n_blocks` blocks of `block_size` tokens between slots through a page
+    table, maps them on demand, and prefills long prompts in
+    `prefill_chunk`-token chunks interleaved with resident decode steps.
+    Admission is strict FIFO under both; the paged backend additionally
+    gates the FIFO head on worst-case block reservation so an admitted
+    request can never run out of cache mid-flight (no preemption path).
 
     `large_batch=None` defers M_L regeneration to end-of-run exact-size
     batches (bit-identical to the static path); an int flushes padded
-    batches of that size as soon as enough deferrals accumulate.
+    batches of that size as soon as enough deferrals accumulate. Ragged
+    deferrals regenerate in per-prompt-length groups.
 
     `steps_per_sync` > 1 enables multi-step scheduling: the jitted step
     runs that many decode steps before the host syncs the control
@@ -214,7 +248,14 @@ class ContinuousCascadeEngine:
                  early_exit: bool = True,
                  large_batch: Optional[int] = None,
                  steps_per_sync: int = 1,
+                 backend: str = "slot",
+                 block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  cost_small: float = 0.2, cost_large: float = 1.0):
+        if backend not in ("slot", "paged"):
+            raise ValueError(f"backend must be 'slot' or 'paged', "
+                             f"got {backend!r}")
         self.small = small
         self.large = large
         self.n_slots = n_slots
@@ -224,27 +265,68 @@ class ContinuousCascadeEngine:
         self.early_exit = early_exit
         self.large_batch = large_batch
         self.steps_per_sync = max(1, steps_per_sync)
+        self.backend = backend
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.prefill_chunk = prefill_chunk
         self.cost_small = cost_small
         self.cost_large = cost_large
-        self._fns: Dict[Tuple[int, int], Tuple[Any, Any]] = {}
+        self._fns: Dict[Tuple, Tuple] = {}
 
     # -- calibration (same Stage-3 helper as the static engine) -----------
     def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
                   max_new: int, deferral_ratio: float) -> float:
+        """Calibrate tau on a uniform validation batch (the deployment
+        path calibrates offline, so a fixed-shape batch is fine)."""
         _, conf = self.small.generate(val_prompts, prompt_len, max_new)
         self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
         return self.tau
 
     # -- jitted device programs -------------------------------------------
-    def _build_fns(self, prompt_len: int, max_new: int, pool: SlotCachePool):
+    def _decode_body(self, params, cache, state, pages, max_new):
+        """One decode step over ALL slots at per-slot positions; inactive
+        slots compute but their state/cache rows are inert. Slots
+        self-deactivate when n_gen reaches their budget so multi-step
+        chunks never decode past a request's max_new. In paged mode the
+        page table rows of inactive slots are masked to the trash block,
+        so a stale `pos` from a previous tenant can never scribble into a
+        block that now belongs to someone else."""
         cfg, ctx = self.small.cfg, self.small.ctx
-        n_slots, pool_len = pool.n_slots, pool.max_len
-        batch_axes = pool.batch_axes
+        n_slots = state["active"].shape[0]
+        if pages is not None:
+            pages = jnp.where(state["active"][:, None], pages, 0)
+        logits, cache = tfm.decode_step(params, cfg, state["last_tok"],
+                                        state["pos"], cache, ctx,
+                                        pages=pages)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        neg_ent = _neg_entropy(logits)
+        act = state["active"]
+        inc = act.astype(jnp.int32)
+        rows = jnp.arange(n_slots)
+        col = jnp.clip(state["n_gen"], 0, max_new - 1)
+        cur = state["tokens"][rows, col]
+        n_gen = state["n_gen"] + inc
+        state = {
+            "last_tok": jnp.where(act, tok, state["last_tok"]),
+            "pos": state["pos"] + inc,
+            "n_gen": n_gen,
+            "budget": state["budget"],
+            "conf_sum": state["conf_sum"] + jnp.where(act, neg_ent, 0.0),
+            "active": act & (n_gen < state["budget"]),
+            "tokens": state["tokens"].at[rows, col].set(
+                jnp.where(act, tok, cur)),
+        }
+        return cache, state
+
+    def _build_slot_fns(self, max_new: int, pool_len: int):
+        """Jitted (admit, step) pair for the dense slot backend. `admit`
+        handles one uniform-length group of newly admitted prompts (jit
+        re-traces per distinct (group_size, prompt_len) shape)."""
+        cfg, ctx = self.small.cfg, self.small.ctx
+        batch_axes = cache_batch_axes(cfg, pool_len)
 
         def admit_fn(params, prompts, slots, budgets, cache, state):
-            """Batched prefill of newly admitted prompts into a fresh
-            cache, scattered into the pool rows `slots`."""
-            k = prompts.shape[0]
+            k, P = prompts.shape
             fresh = tfm.init_cache(cfg, k, pool_len, dtype=cfg.cdtype())
             logits, fresh = tfm.prefill(params, cfg, prompts, fresh, ctx,
                                         last_only=True)
@@ -255,7 +337,7 @@ class ContinuousCascadeEngine:
             row0 = jnp.zeros((k, max_new), jnp.int32).at[:, 0].set(tok0)
             state = {
                 "last_tok": state["last_tok"].at[slots].set(tok0),
-                "pos": state["pos"].at[slots].set(prompt_len),
+                "pos": state["pos"].at[slots].set(P),
                 "n_gen": state["n_gen"].at[slots].set(1),
                 "budget": state["budget"].at[slots].set(budgets),
                 "conf_sum": state["conf_sum"].at[slots].set(conf0),
@@ -264,64 +346,135 @@ class ContinuousCascadeEngine:
             }
             return cache, state
 
-        def one_step(carry, _):
-            """One decode step over ALL slots at per-slot positions;
-            inactive slots compute but their state/cache rows are inert
-            (overwritten on next admission). Slots self-deactivate when
-            n_gen reaches their budget so multi-step chunks never decode
-            past a request's max_new."""
-            params, cache, state = carry
-            logits, cache = tfm.decode_step(params, cfg, state["last_tok"],
-                                            state["pos"], cache, ctx)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            neg_ent = _neg_entropy(logits)
-            act = state["active"]
-            inc = act.astype(jnp.int32)
-            rows = jnp.arange(n_slots)
-            col = jnp.clip(state["n_gen"], 0, max_new - 1)
-            cur = state["tokens"][rows, col]
-            n_gen = state["n_gen"] + inc
-            state = {
-                "last_tok": jnp.where(act, tok, state["last_tok"]),
-                "pos": state["pos"] + inc,
-                "n_gen": n_gen,
-                "budget": state["budget"],
-                "conf_sum": state["conf_sum"]
-                + jnp.where(act, neg_ent, 0.0),
-                "active": act & (n_gen < state["budget"]),
-                "tokens": state["tokens"].at[rows, col].set(
-                    jnp.where(act, tok, cur)),
-            }
-            return (params, cache, state), None
-
         def step_fn(params, cache, state):
+            def one(carry, _):
+                params, cache, state = carry
+                cache, state = self._decode_body(params, cache, state,
+                                                 None, max_new)
+                return (params, cache, state), None
             (_, cache, state), _ = jax.lax.scan(
-                one_step, (params, cache, state), None,
+                one, (params, cache, state), None,
                 length=self.steps_per_sync)
             return cache, state
 
         return jax.jit(admit_fn), jax.jit(step_fn)
 
+    def _build_paged_fns(self, max_new: int):
+        """Jitted (prefill_chunk, finish, step) triple for the paged
+        backend. `prefill_chunk` runs ONE chunk of ONE prompt through the
+        trunk at a traced cache offset, scattering K/V through the
+        request's page-table row; `finish` seeds the slot's decode state
+        from the final chunk's last-real-position logits; `step` mirrors
+        the slot backend but routes every cache access through the page
+        table."""
+        cfg, ctx = self.small.cfg, self.small.ctx
+
+        def prefill_chunk_fn(params, tokens, table, offset, last_index,
+                             cache):
+            logits, cache = tfm.prefill(params, cfg, tokens, cache, ctx,
+                                        cache_offset=offset, pages=table,
+                                        last_index=last_index)
+            return logits[:, 0, :], cache
+
+        def finish_fn(state, slot, logits, budget, prompt_len):
+            tok0 = jnp.argmax(logits[0]).astype(jnp.int32)
+            conf0 = _neg_entropy(logits)[0]
+            row0 = jnp.zeros((max_new,), jnp.int32).at[0].set(tok0)
+            return {
+                "last_tok": state["last_tok"].at[slot].set(tok0),
+                "pos": state["pos"].at[slot].set(prompt_len),
+                "n_gen": state["n_gen"].at[slot].set(1),
+                "budget": state["budget"].at[slot].set(budget),
+                "conf_sum": state["conf_sum"].at[slot].set(conf0),
+                "active": state["active"].at[slot].set(budget > 1),
+                "tokens": state["tokens"].at[slot].set(row0),
+            }
+
+        def step_fn(params, cache, state, tables):
+            def one(carry, _):
+                params, cache, state = carry
+                cache, state = self._decode_body(params, cache, state,
+                                                 tables, max_new)
+                return (params, cache, state), None
+            (_, cache, state), _ = jax.lax.scan(
+                one, (params, cache, state), None,
+                length=self.steps_per_sync)
+            return cache, state
+
+        return (jax.jit(prefill_chunk_fn), jax.jit(finish_fn),
+                jax.jit(step_fn))
+
     # -- host-side control loop -------------------------------------------
-    def run(self, requests: List[Request], prompt_len: int, max_new: int,
-            audit_path: Optional[str] = None) -> ContinuousServeResult:
+    def run(self, requests: List[Request], max_new: Optional[int] = None,
+            audit_path: Optional[str] = None, *,
+            prompt_len: Optional[int] = None) -> ContinuousServeResult:
+        """Serve `requests` (each carrying its own prompt and budget).
+
+        `max_new` is the run-wide token-buffer width and budget cap
+        (default: the largest request budget); per-request `max_new`
+        larger than it is clamped so the device budget, retirement check,
+        and saved-step accounting agree.
+
+        .. deprecated:: the old ``run(requests, prompt_len, max_new)``
+           call shape is gone — prompt lengths are per-request
+           (`Request.prompt_len`). Passing `prompt_len` (or the old
+           positional layout) raises TypeError.
+        """
+        if prompt_len is not None:
+            raise TypeError(
+                "ContinuousCascadeEngine.run() no longer takes prompt_len: "
+                "each Request carries its own prompt length "
+                "(Request.prompt_len). Call run(requests, max_new) — for "
+                "the old uniform behavior just pass uniform-length "
+                "prompts to make_requests().")
+        if isinstance(audit_path, (int, np.integer)):
+            raise TypeError(
+                "ContinuousCascadeEngine.run() signature changed: the old "
+                "run(requests, prompt_len, max_new) call shape is "
+                "deprecated. Prompt lengths are per-request now — call "
+                "run(requests, max_new, audit_path=...).")
+        if not requests:
+            raise ValueError("run() needs at least one request")
         cfg = self.small.cfg
+        if max_new is None:
+            max_new = max(r.max_new for r in requests)
         for r in requests:
             # a run can never decode past its own max_new; clamp so the
             # device budget, retirement check, and saved-step accounting
             # all agree for heterogeneous requests
             r.max_new = min(r.max_new, max_new)
-        pool = SlotCachePool(cfg, self.n_slots, prompt_len + max_new)
+        max_len = max(r.prompt_len + r.max_new for r in requests)
+        paged = self.backend == "paged"
+
+        if paged:
+            bs = self.block_size
+            n_blocks = (self.n_blocks if self.n_blocks is not None
+                        else self.n_slots * math.ceil(max_len / bs))
+            biggest = max(math.ceil((r.prompt_len + r.max_new - 1) / bs)
+                          for r in requests)
+            if n_blocks < biggest:
+                raise ValueError(
+                    f"n_blocks={n_blocks} cannot hold the largest request "
+                    f"({biggest} blocks of {bs}); raise n_blocks")
+            pool = PagedCachePool(cfg, self.n_slots, n_blocks, bs, max_len)
+            fkey = ("paged", max_new, n_blocks, bs, pool.max_blocks)
+            fns = self._fns.get(fkey)
+            if fns is None:
+                fns = self._build_paged_fns(max_new)
+                self._fns[fkey] = fns
+            prefill_fn, finish_fn, step_fn = fns
+        else:
+            pool = SlotCachePool(cfg, self.n_slots, max_len)
+            fkey = ("slot", max_new, max_len)
+            fns = self._fns.get(fkey)
+            if fns is None:
+                fns = self._build_slot_fns(max_new, max_len)
+                self._fns[fkey] = fns
+            admit_fn, step_fn = fns
+
         sched = SlotScheduler(pool)
         queue = ArrivalQueue(requests)
         tel = ServingTelemetry(audit_path)
-
-        key = (prompt_len, max_new)
-        fns = self._fns.get(key)
-        if fns is None:
-            fns = self._build_fns(prompt_len, max_new, pool)
-            self._fns[key] = fns
-        admit_fn, step_fn = fns
 
         S = self.n_slots
         state = {
@@ -334,19 +487,29 @@ class ContinuousCascadeEngine:
             "tokens": jnp.zeros((S, max_new), jnp.int32),
         }
         deferred_wait: List[Request] = []
+        # paged: requests admitted to a slot but still prefilling, FIFO of
+        # [request, slot, next chunk offset]
+        prefilling: List[List] = []
         n_steps = 0
+        n_prefill_chunks = 0
+        peak_active = 0
         tel.reset_clock()
 
         def sync_retire():
             """Pull the tiny control vectors, retire finished / in-flight
-            deferred slots, release them, and deactivate on device."""
+            deferred slots, release them, and deactivate on device. Slots
+            still prefilling are skipped — their device state is stale
+            until the final chunk seeds it."""
             nonlocal state
+            mid_prefill = {s for _, s, _ in prefilling}
             n_gen = np.asarray(state["n_gen"])
             conf_sum = np.asarray(state["conf_sum"])
             toks = None
             retired: List[int] = []
             now = tel.now
             for slot in sched.active_slots:
+                if slot in mid_prefill:
+                    continue
                 req = sched.running[slot]
                 n = int(n_gen[slot])
                 mean = float(conf_sum[slot]) / max(n, 1)
@@ -378,43 +541,135 @@ class ContinuousCascadeEngine:
                     jnp.asarray(retired)].set(False)
 
         def flush_large(batch: List[Request], pad_to: Optional[int]):
+            """Regenerate `batch` on M_L in per-prompt-length groups
+            (ragged deferrals can't share one prefill shape). Padding to
+            `pad_to` only pays when the whole batch is ONE length group
+            (uniform traffic -> one stable compiled shape); ragged groups
+            compile per length anyway, so padding them would just
+            multiply M_L compute."""
             if not batch:
                 return
             batch = sorted(batch, key=lambda r: r.rid)
-            prompts = np.stack([r.prompt for r in batch])
-            b = len(batch)
-            if pad_to is not None and b < pad_to:
-                prompts = np.concatenate(
-                    [prompts, np.repeat(prompts[:1], pad_to - b, axis=0)])
-            l_tokens, _ = self.large.generate(prompts, prompt_len, max_new)
-            now = tel.now
-            for i, req in enumerate(batch):
-                req.tokens = l_tokens[i].copy()
-                req.state = DONE
-                req.t_done = now
-            tel.event("large_batch", rids=[r.rid for r in batch],
-                      padded=max(pad_to - b, 0) if pad_to else 0)
+            by_len: Dict[int, List[Request]] = {}
+            for r in batch:
+                by_len.setdefault(r.prompt_len, []).append(r)
+            if len(by_len) > 1:
+                pad_to = None
+            for P, group in sorted(by_len.items()):
+                prompts = np.stack([r.prompt for r in group])
+                b = len(group)
+                if pad_to is not None and b < pad_to:
+                    prompts = np.concatenate(
+                        [prompts,
+                         np.repeat(prompts[:1], pad_to - b, axis=0)])
+                l_tokens, _ = self.large.generate(prompts, P, max_new)
+                now = tel.now
+                for i, req in enumerate(group):
+                    req.tokens = l_tokens[i].copy()
+                    req.state = DONE
+                    req.t_done = now
+                tel.event("large_batch", rids=[r.rid for r in group],
+                          prompt_len=P,
+                          padded=max(pad_to - b, 0) if pad_to else 0)
 
-        while len(queue) or sched.n_active:
-            admitted = sched.admit_ready(queue, tel.now)
-            if admitted:
-                slots = jnp.asarray([s for s, _ in admitted])
-                prompts = jnp.asarray(
-                    np.stack([r.prompt for _, r in admitted]))
-                budgets = jnp.asarray([r.max_new for _, r in admitted],
+        def admit_slot_groups(admitted):
+            """Slot backend: batched prefill per distinct prompt length
+            (mixed lengths can't share one dense prefill shape; grouping
+            keeps each group's math identical to a uniform run)."""
+            nonlocal state
+            by_len: Dict[int, List[Tuple[int, Request]]] = {}
+            for s, r in admitted:
+                by_len.setdefault(r.prompt_len, []).append((s, r))
+            for P, group in sorted(by_len.items()):
+                slots = jnp.asarray([s for s, _ in group])
+                prompts = jnp.asarray(np.stack([r.prompt for _, r in group]))
+                budgets = jnp.asarray([r.max_new for _, r in group],
                                       jnp.int32)
                 pool.cache, state = admit_fn(self.small.params, prompts,
                                              slots, budgets, pool.cache,
                                              state)
-                tel.event("admit", rids=[r.rid for _, r in admitted],
-                          slots=[s for s, _ in admitted])
-                sync_retire()        # min_tokens=1 / max_new=1 edge cases
-            if sched.n_active:
-                pool.cache, state = step_fn(self.small.params, pool.cache,
-                                            state)
+
+        def run_prefill_chunk():
+            """Paged backend: run ONE chunk of the oldest mid-prefill
+            request, so long prompts interleave with resident decode
+            steps instead of stalling them."""
+            nonlocal state, n_prefill_chunks
+            req, slot, off = prefilling[0]
+            P = req.prompt_len
+            C = self.prefill_chunk or P
+            chunk = req.prompt[off:off + C]
+            if chunk.shape[0] < C:       # right-pad the final chunk; the
+                chunk = np.concatenate(  # padded K/V lands in the trash
+                    [chunk, np.zeros(C - chunk.shape[0], np.int32)])
+            last_index = min(P - 1 - off, C - 1)
+            logits, pool.cache = prefill_fn(
+                self.small.params, jnp.asarray(chunk)[None, :],
+                pool.tables_device()[slot][None, :], off, last_index,
+                pool.cache)
+            n_prefill_chunks += 1
+            if off + C >= P:             # final chunk: seed decode state
+                state = finish_fn(state, slot, logits, req.max_new, P)
+                prefilling.pop(0)
+                tel.event("prefill_done", rid=req.rid, slot=slot,
+                          chunks=math.ceil(P / C))
+                sync_retire()            # max_new == 1: already finished
+            else:
+                prefilling[0][2] = off + C
+
+        def decoding_slots() -> List[int]:
+            mid_prefill = {s for _, s, _ in prefilling}
+            return [s for s in sched.active_slots if s not in mid_prefill]
+
+        while len(queue) or sched.n_active:
+            if paged:
+                # admit one at a time: each admission reserves its blocks
+                # immediately, so the capacity check for the next FIFO
+                # head sees the updated reservation
+                admitted = []
+                while True:
+                    got = sched.admit_ready(
+                        queue, tel.now, limit=1,
+                        can_admit=lambda r: pool.can_reserve(
+                            r.prompt_len + r.max_new - 1))
+                    if not got:
+                        break
+                    slot, req = got[0]
+                    pool.reserve(slot, req.prompt_len + req.max_new - 1)
+                    pool.ensure_mapped(slot, req.prompt_len)
+                    prefilling.append([req, slot, 0])
+                    admitted.append((slot, req))
+                if admitted:
+                    tel.event("admit", rids=[r.rid for _, r in admitted],
+                              slots=[s for s, _ in admitted])
+                if prefilling:
+                    run_prefill_chunk()
+            else:
+                admitted = sched.admit_ready(queue, tel.now)
+                if admitted:
+                    admit_slot_groups(admitted)
+                    tel.event("admit", rids=[r.rid for _, r in admitted],
+                              slots=[s for s, _ in admitted])
+                    sync_retire()        # min_tokens=1 / max_new=1 edges
+            peak_active = max(peak_active, sched.n_active)
+            decoding = decoding_slots()
+            if decoding:
+                if paged:
+                    pos_host = np.asarray(state["pos"])
+                    for slot in decoding:
+                        req = sched.running[slot]
+                        total = req.prompt_len + req.max_new - 1
+                        pool.ensure_mapped(
+                            slot, min(int(pos_host[slot])
+                                      + self.steps_per_sync, total))
+                    pool.cache, state = step_fn(self.small.params,
+                                                pool.cache, state,
+                                                pool.tables_device())
+                else:
+                    pool.cache, state = step_fn(self.small.params,
+                                                pool.cache, state)
                 n_steps += self.steps_per_sync
                 sync_retire()
-            elif len(queue):
+            elif not sched.n_active and len(queue):
                 nxt = queue.next_arrival
                 if nxt is not None:
                     time.sleep(min(max(nxt - tel.now, 0.0), 1e-3) + 1e-5)
@@ -431,6 +686,16 @@ class ContinuousCascadeEngine:
         tel.close()
 
         reqs = sorted(requests, key=lambda r: r.rid)
+        stats = tel.summary(reqs, makespan, self.cost_small,
+                            self.cost_large)
+        stats["backend"] = self.backend
+        stats["cache_bytes"] = pool.footprint_bytes()
+        stats["peak_active"] = peak_active
+        if paged:
+            stats.update(block_size=self.block_size,
+                         n_blocks=pool.n_blocks,
+                         peak_blocks=pool.peak_mapped,
+                         prefill_chunks=n_prefill_chunks)
         result = ContinuousServeResult(
             requests=reqs,
             tokens=np.stack([r.tokens for r in reqs]),
@@ -440,12 +705,16 @@ class ContinuousCascadeEngine:
             deferral_ratio=float(np.mean([r.deferred for r in reqs])),
             saved_steps=sum(r.saved_steps for r in reqs),
             steps=n_steps,
-            stats=tel.summary(reqs, makespan, self.cost_small,
-                              self.cost_large),
+            stats=stats,
         )
         return result
 
     # -- convenience: match the static engine's serve() signature ---------
     def serve(self, prompts: np.ndarray, prompt_len: int,
               max_new: int) -> ContinuousServeResult:
-        return self.run(make_requests(prompts, max_new), prompt_len, max_new)
+        """Uniform-batch convenience wrapper (static-engine signature);
+        `prompt_len` must match the prompt matrix width."""
+        if prompts.shape[1] != prompt_len:
+            raise ValueError(f"prompt_len {prompt_len} != prompts width "
+                             f"{prompts.shape[1]}")
+        return self.run(make_requests(prompts, max_new), max_new)

@@ -1,0 +1,255 @@
+"""Block-paged KV-cache pool for continuous batching with ragged prompts.
+
+`SlotCachePool` reserves a worst-case `max_len` row per slot, so a short
+request pays for the longest request's memory and mixed-length traffic
+caps batch size. `PagedCachePool` instead stores the cache in fixed-size
+**blocks** of `block_size` tokens shared by all slots:
+
+  * every attention-cache leaf becomes ``[n_blocks + 1, block_size, ...]``
+    (physical block 0 is a shared **trash block** that is never allocated
+    — unmapped page-table entries and writes from inactive decode rows
+    land there harmlessly);
+  * each slot owns a row of the **page table** ``[n_slots, M]`` mapping
+    its logical block ``m`` (tokens ``[m*block_size, (m+1)*block_size)``)
+    to a physical block id, 0 meaning unmapped;
+  * blocks are mapped on demand as a request's prefill/decode frontier
+    advances and returned to the free list at retirement.
+
+Admission control is **reservation-based**: admitting a request reserves
+its worst-case block count ``ceil((prompt_len + max_new - 1)/block_size)``
+(its prompt plus every decode token it may produce), but blocks are only
+*mapped* lazily. The invariant ``free >= reserved`` guarantees that
+`ensure_mapped` never fails mid-flight, so no preemption path is needed;
+the per-request worst case is still far below the slot pool's global
+worst case on ragged traffic, which is the memory win this pool exists
+for.
+
+Invariants (pinned by tests/test_serving_paged.py):
+  * mapped blocks are pairwise disjoint across slots and never include 0;
+  * mapped + free is always exactly {1..n_blocks};
+  * len(free) >= total outstanding reservation;
+  * a slot's table row is all-zero whenever the slot is free.
+
+Families whose cache carries state without a ``cache_seq`` axis (RWKV,
+Mamba) or with a sliding-window ring shorter than the sequence cannot be
+paged; construction raises with a clear message.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.attention import gather_blocks
+from repro.serving.cache_pool import _is_abstract
+
+
+def validate_pageable(cfg: ModelConfig, max_len: int) -> None:
+    """Raise NotImplementedError unless every cache leaf is a linear
+    attention cache (has a full-length ``cache_seq`` axis)."""
+    abstract = tfm.init_cache(cfg, 1, max_len, abstract=True)
+    for leaf in jax.tree.leaves(abstract, is_leaf=_is_abstract):
+        axes = leaf.logical_axes
+        if "cache_seq" not in axes:
+            raise NotImplementedError(
+                f"paged KV cache requires attention caches only; leaf with "
+                f"axes {axes} (recurrent state?) cannot be paged — use the "
+                f"slot backend for family {cfg.family!r}")
+        if leaf.shape[axes.index("cache_seq")] != max_len:
+            raise NotImplementedError(
+                f"paged KV cache does not support windowed/ring caches "
+                f"(leaf seq {leaf.shape[axes.index('cache_seq')]} != "
+                f"max_len {max_len}); use the slot backend")
+
+
+def gather_pages(cache: Any, tables: jnp.ndarray, block_axes: Any) -> Any:
+    """Tree-wide page-table gather: paged cache -> dense per-slot view
+    ``[..., n_slots_in_tables, M*block_size, ...]``. Host-side test/debug
+    helper; the jitted paths gather leaf-wise inside attention."""
+    def one(leaf, ax):
+        if ax == 0:
+            return gather_blocks(leaf, tables)
+        assert ax == 1, "block axis beyond [layers] leading dim unsupported"
+        return jax.vmap(lambda l: gather_blocks(l, tables))(leaf)
+    return jax.tree.map(one, cache, block_axes)
+
+
+class PagedCachePool:
+    """Block-paged per-slot cache + slot/block/reservation bookkeeping.
+
+    Device state: ``.cache`` (paged leaves, replaced functionally after
+    each jitted step) and ``.tables_device()`` (the int32 page table the
+    jitted programs index through). Host state: free lists, per-slot
+    mapped/reserved counts, lifetime counters.
+
+    The **slot** API (`alloc`/`release`/`n_free`/`in_use`) matches
+    `SlotCachePool`, so `SlotScheduler` drives either pool; the **block**
+    API (`can_reserve`/`reserve`/`ensure_mapped`) is what makes admission
+    ragged-aware.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
+                 block_size: int, max_len: int, dtype=None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if block_size < 1 or n_blocks < 1:
+            raise ValueError("block_size and n_blocks must be >= 1")
+        validate_pageable(cfg, max_len)
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_len = max_len
+        # logical blocks a single slot may address (covers max_len plus
+        # one block of slack for padded-chunk clamping)
+        self.max_blocks = math.ceil(max_len / block_size) + 1
+        # physical storage: init_cache with batch = blocks gives exactly
+        # the paged layout [n_blocks+1, block_size, ...] per leaf
+        # (block 0 = trash)
+        self.cache = tfm.init_cache(cfg, n_blocks + 1, block_size,
+                                    dtype=dtype or cfg.cdtype())
+        abstract = tfm.init_cache(cfg, n_blocks + 1, block_size,
+                                  abstract=True)
+        def _axes(a):
+            b = a.logical_axes.index("batch")
+            s = a.logical_axes.index("cache_seq")
+            assert s == b + 1, "paged gather assumes [block, block_size] adjacency"
+            return b
+        self.block_axes = jax.tree.map(_axes, abstract, is_leaf=_is_abstract)
+
+        # host bookkeeping
+        self.tables = np.zeros((n_slots, self.max_blocks), np.int32)
+        self.n_mapped = np.zeros(n_slots, np.int64)
+        self._owed = np.zeros(n_slots, np.int64)     # reserved, not yet mapped
+        self._reserved_total = 0
+        self._free_blocks: List[int] = list(range(n_blocks, 0, -1))
+        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self._in_use: set = set()
+        self.generations = [0] * n_slots
+        self.peak_mapped = 0                          # high-water block usage
+        self._tables_dev = jnp.asarray(self.tables)
+        self._tables_dirty = False
+
+    # -- capacity / accounting --------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        """Physical blocks needed to store `n_tokens` cache entries."""
+        return max(0, math.ceil(n_tokens / self.block_size))
+
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def n_mapped_total(self) -> int:
+        return int(self.n_mapped.sum())
+
+    def footprint_bytes(self) -> int:
+        """Device bytes held by the paged cache (all physical blocks)."""
+        return sum(l.nbytes for l in jax.tree.leaves(self.cache))
+
+    # -- slot bookkeeping (SlotCachePool-compatible) ----------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def in_use(self) -> frozenset:
+        return frozenset(self._in_use)
+
+    def alloc(self) -> int:
+        """Lowest-numbered free slot (deterministic placement)."""
+        if not self._free_slots:
+            raise RuntimeError("cache pool exhausted")
+        slot = self._free_slots.pop()
+        self._in_use.add(slot)
+        self.generations[slot] += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Free the slot: unmap its blocks, drop its outstanding
+        reservation, and zero its table row (so stale decode writes from
+        the retired tenant land in the trash block)."""
+        if slot not in self._in_use:
+            raise RuntimeError(f"releasing slot {slot} that is not in use")
+        self._in_use.remove(slot)
+        self._free_slots.append(slot)
+        self._free_slots.sort(reverse=True)
+        for m in range(int(self.n_mapped[slot])):
+            self._free_blocks.append(int(self.tables[slot, m]))
+        self._free_blocks.sort(reverse=True)
+        self._reserved_total -= int(self._owed[slot])
+        self._owed[slot] = 0
+        self.n_mapped[slot] = 0
+        self.tables[slot] = 0
+        self._tables_dirty = True
+
+    # -- block reservation / mapping --------------------------------------
+    def can_reserve(self, n_tokens: int) -> bool:
+        """True if a request needing `n_tokens` total cache entries can be
+        admitted without ever starving an already-admitted request."""
+        return (len(self._free_blocks) - self._reserved_total
+                >= self.blocks_for(n_tokens))
+
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Reserve the slot's worst-case block count. Must hold
+        `can_reserve(n_tokens)`; blocks are mapped later by
+        `ensure_mapped`."""
+        need = self.blocks_for(n_tokens)
+        if len(self._free_blocks) - self._reserved_total < need:
+            raise RuntimeError("paged pool over-reserved: admission must "
+                               "check can_reserve() first")
+        self._owed[slot] = need
+        self._reserved_total += need
+
+    def ensure_mapped(self, slot: int, n_tokens: int) -> int:
+        """Map blocks until the slot covers `n_tokens` logical cache
+        entries. Never fails for demands within the slot's reservation
+        (the free list always holds >= reserved blocks). Returns the
+        number of newly mapped blocks."""
+        need = self.blocks_for(n_tokens)
+        newly = 0
+        while int(self.n_mapped[slot]) < need:
+            if not self._free_blocks:
+                raise RuntimeError("paged pool out of blocks — reservation "
+                                   "invariant violated")
+            blk = self._free_blocks.pop()
+            m = int(self.n_mapped[slot])
+            self.tables[slot, m] = blk
+            self.n_mapped[slot] += 1
+            if self._owed[slot] > 0:
+                self._owed[slot] -= 1
+                self._reserved_total -= 1
+            newly += 1
+        if newly:
+            self._tables_dirty = True
+            self.peak_mapped = max(self.peak_mapped, self.n_mapped_total)
+        return newly
+
+    def tables_device(self) -> jnp.ndarray:
+        """Device copy of the page table, refreshed only when the host
+        table changed since the last call."""
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(self.tables)
+            self._tables_dirty = False
+        return self._tables_dev
+
+    # -- invariants (tests) ------------------------------------------------
+    def check_invariants(self) -> None:
+        mapped = [int(self.tables[s, m]) for s in range(self.n_slots)
+                  for m in range(int(self.n_mapped[s]))]
+        assert 0 not in mapped, "trash block mapped"
+        assert len(mapped) == len(set(mapped)), "block double-mapped"
+        assert set(mapped) | set(self._free_blocks) == set(
+            range(1, self.n_blocks + 1)), "blocks leaked"
+        assert len(self._free_blocks) >= self._reserved_total >= 0, \
+            "reservation exceeds free blocks"
+        for s in range(self.n_slots):
+            if s not in self._in_use:
+                assert (self.tables[s] == 0).all(), \
+                    f"free slot {s} holds mapped blocks"
+        assert len(self._in_use) + len(self._free_slots) == self.n_slots

@@ -34,8 +34,12 @@ DONE = "done"
 
 @dataclasses.dataclass
 class Request:
+    """One serving request. `prompt` is the request's own token vector —
+    requests in the same run may carry different lengths (ragged
+    admission); the engine reads `prompt_len` per request rather than
+    taking a run-wide length argument."""
     rid: int
-    prompt: np.ndarray                 # [prompt_len] int32
+    prompt: np.ndarray                 # [prompt_len] int32 (per-request len)
     max_new: int
     arrival_time: float = 0.0          # seconds from run start
     state: str = PENDING
@@ -51,6 +55,12 @@ class Request:
     t_admit: float = float("nan")
     t_retire: float = float("nan")     # left M_S (finished or evicted)
     t_done: float = float("nan")       # final tokens available
+
+    @property
+    def prompt_len(self) -> int:
+        """This request's own prompt length (ragged workloads: differs
+        per request)."""
+        return int(self.prompt.shape[0])
 
     @property
     def saved_steps(self) -> int:
@@ -87,6 +97,11 @@ class ArrivalQueue:
     def pop_ready(self) -> Optional[Request]:
         return self._ready.popleft() if self._ready else None
 
+    def peek_ready(self) -> Optional[Request]:
+        """Head of the ready FIFO without removing it (admission gating:
+        the scheduler checks block capacity before committing a pop)."""
+        return self._ready[0] if self._ready else None
+
     @property
     def n_ready(self) -> int:
         return len(self._ready)
@@ -99,15 +114,18 @@ class ArrivalQueue:
         return len(self._future) + len(self._ready)
 
 
-def make_requests(prompts: np.ndarray, max_new: int,
+def make_requests(prompts, max_new: int,
                   arrivals: Optional[np.ndarray] = None) -> List[Request]:
-    """One Request per prompt row; `arrivals` are per-request offsets in
-    seconds from run start (default: all arrive at t=0)."""
-    n = prompts.shape[0]
+    """One Request per prompt. `prompts` is either a uniform [N, T] int
+    matrix or a sequence of 1-D token vectors with *different* lengths
+    (ragged workloads). `arrivals` are per-request offsets in seconds from
+    run start (default: all arrive at t=0)."""
+    n = len(prompts)
     if arrivals is None:
         arrivals = np.zeros(n)
-    return [Request(rid=i, prompt=np.asarray(prompts[i]), max_new=max_new,
-                    arrival_time=float(arrivals[i])) for i in range(n)]
+    return [Request(rid=i, prompt=np.asarray(prompts[i], np.int32),
+                    max_new=max_new, arrival_time=float(arrivals[i]))
+            for i in range(n)]
 
 
 def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:

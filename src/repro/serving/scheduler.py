@@ -3,40 +3,58 @@
 Each engine step the scheduler:
   1. releases newly arrived requests into the ready FIFO,
   2. admits ready requests into free cache-pool slots (strict FIFO — a
-     request never overtakes an earlier arrival),
+     request never overtakes an earlier arrival, even when a later,
+     smaller request would fit: head-of-line blocking is the price of
+     deterministic admission order),
   3. after the decode step, retires finished or in-flight-deferred
      requests and returns their slots to the pool.
 
-Invariants (pinned by tests/test_serving_continuous.py):
+The scheduler drives either pool flavor: `SlotCachePool` (admission
+gated on free slots only) or `PagedCachePool` (the engine additionally
+passes `can_admit`, gating the FIFO head on block-reservation capacity).
+
+Invariants (pinned by tests/test_serving_continuous.py and
+tests/test_serving_paged.py):
   * a slot hosts at most one request at a time;
   * admitted set + free set is always exactly {0..n_slots-1};
   * admission order equals arrival order.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.serving.cache_pool import SlotCachePool
 from repro.serving.request import (DEFERRED, DONE, PENDING, RUNNING,
                                    ArrivalQueue, Request)
 
 
 class SlotScheduler:
-    def __init__(self, pool: SlotCachePool):
+    """FIFO admission into free pool slots + retirement bookkeeping.
+    `pool` is a SlotCachePool or PagedCachePool (anything with
+    alloc/release/n_free/in_use)."""
+
+    def __init__(self, pool):
         self.pool = pool
         self.running: Dict[int, Request] = {}     # slot -> request
 
     # -- admission ---------------------------------------------------------
     def admit_ready(self, queue: ArrivalQueue, now: float,
-                    limit: Optional[int] = None
+                    limit: Optional[int] = None,
+                    can_admit: Optional[Callable[[Request], bool]] = None
                     ) -> List[Tuple[int, Request]]:
         """Admit FIFO-ready requests into free slots. Returns
-        [(slot, request), ...] in admission order."""
+        [(slot, request), ...] in admission order.
+
+        `can_admit(req)` (paged backend) vetoes admission of the FIFO
+        head when the pool cannot reserve its worst-case block count;
+        admission then stops entirely — strict FIFO means no later
+        request may overtake the blocked head."""
         queue.release(now)
         admitted: List[Tuple[int, Request]] = []
         budget = self.pool.n_free if limit is None else min(limit,
                                                             self.pool.n_free)
         while budget > 0 and queue.n_ready > 0:
+            if can_admit is not None and not can_admit(queue.peek_ready()):
+                break
             req = queue.pop_ready()
             assert req is not None and req.state == PENDING
             slot = self.pool.alloc()

@@ -144,7 +144,7 @@ def test_static_continuous_greedy_parity(runners):
 
     cont = ContinuousCascadeEngine(small, large, n_slots=8, tau=tau,
                                    early_exit=False)
-    cres = cont.run(make_requests(prompts, 4), 8, 4)
+    cres = cont.run(make_requests(prompts, 4), 4)
     np.testing.assert_array_equal(cres.tokens, sres.tokens)
     np.testing.assert_array_equal(cres.deferred, sres.deferred)
     np.testing.assert_allclose(cres.confidence, sres.confidence, rtol=1e-6)
@@ -159,7 +159,7 @@ def test_parity_with_slot_reuse(runners):
     sres = static.serve(prompts, 8, 4)
     cont = ContinuousCascadeEngine(small, large, n_slots=4, tau=-1e9,
                                    early_exit=False)
-    cres = cont.run(make_requests(prompts, 4), 8, 4)
+    cres = cont.run(make_requests(prompts, 4), 4)
     np.testing.assert_array_equal(cres.tokens, sres.tokens)
     assert cres.deferral_ratio == 0.0
     # 16 requests x 3 decode steps on 4 slots => at least 12 engine steps
@@ -175,7 +175,7 @@ def test_parity_with_multi_step_scheduling(runners):
     sres = static.serve(prompts, 8, 4)
     cont = ContinuousCascadeEngine(small, large, n_slots=4, tau=tau,
                                    early_exit=False, steps_per_sync=3)
-    cres = cont.run(make_requests(prompts, 4), 8, 4)
+    cres = cont.run(make_requests(prompts, 4), 4)
     np.testing.assert_array_equal(cres.tokens, sres.tokens)
     np.testing.assert_array_equal(cres.deferred, sres.deferred)
 
@@ -186,7 +186,7 @@ def test_in_flight_deferral_evicts_and_saves(runners):
     small, large, prompts = runners
     cont = ContinuousCascadeEngine(small, large, n_slots=8, tau=1e9,
                                    min_tokens=2, early_exit=True)
-    res = cont.run(make_requests(prompts, 4), 8, 4)
+    res = cont.run(make_requests(prompts, 4), 4)
     assert res.deferred.all() and res.early_exited.all()
     assert all(r.n_small_steps == 2 for r in res.requests)
     assert res.saved_steps == 16 * (4 - 2)
@@ -204,7 +204,7 @@ def test_calibrated_continuous_run(runners):
     cont = ContinuousCascadeEngine(small, large, n_slots=4, min_tokens=2,
                                    early_exit=True)
     cont.calibrate(prompts, 8, 4, deferral_ratio=0.5)
-    res = cont.run(make_requests(prompts, 4), 8, 4)
+    res = cont.run(make_requests(prompts, 4), 4)
     assert res.tokens.shape == (16, 4)
     assert 0.2 <= res.deferral_ratio <= 0.9
     assert np.isfinite(res.confidence).all()
@@ -217,7 +217,7 @@ def test_max_new_one(runners):
     small, large, prompts = runners
     cont = ContinuousCascadeEngine(small, large, n_slots=8, tau=-1e9,
                                    early_exit=True)
-    res = cont.run(make_requests(prompts, 1), 8, 1)
+    res = cont.run(make_requests(prompts, 1), 1)
     s_tokens, _ = small.generate(prompts, 8, 1)
     np.testing.assert_array_equal(res.tokens, s_tokens)
     assert not res.deferred.any()
@@ -232,7 +232,7 @@ def test_heterogeneous_max_new_clamped(runners):
     reqs = make_requests(prompts[:4], 4)
     reqs[0].max_new = 99                    # larger than the run's budget
     reqs[1].max_new = 2                     # smaller: early device stop
-    res = cont.run(reqs, 8, 4)
+    res = cont.run(reqs, 4)
     assert all(r.state == DONE for r in res.requests)
     assert res.requests[0].n_small_steps == 4
     assert res.requests[1].n_small_steps == 2
@@ -256,5 +256,5 @@ def test_mla_family_parity():
     sres = static.serve(prompts, 8, 3)
     cont = ContinuousCascadeEngine(small, large, n_slots=2, tau=-1e9,
                                    early_exit=False)
-    cres = cont.run(make_requests(prompts, 3), 8, 3)
+    cres = cont.run(make_requests(prompts, 3), 3)
     np.testing.assert_array_equal(cres.tokens, sres.tokens)
