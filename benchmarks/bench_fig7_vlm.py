@@ -20,7 +20,7 @@ from repro.core.gatekeeper import GatekeeperConfig
 from repro.core.metrics import (deferral_performance, pearson_correlation,
                                 summarize_deferral)
 from repro.data.pipeline import BatchIterator
-from repro.data.synthetic import SYMBOL_BASE, CaptionData, caption_factuality, make_captions
+from repro.data.synthetic import SYMBOL_BASE, caption_factuality, make_captions
 from repro.models import transformer as tfm
 from repro.sharding import ParallelContext
 from repro.training import optim

@@ -14,6 +14,12 @@ Scenarios (same models, same calibrated tau, same prompts):
                         block-paged cache with chunked prefill; reported
                         with its cache footprint next to the slot pool's
                         so the memory win on ragged traffic is visible
+  * continuous+thread — in-flight deferral with the THREADED M_L backend:
+                        deferrals stream to a worker thread that batches
+                        (large_batch rows or --large-max-wait seconds)
+                        and regenerates them while M_S keeps decoding;
+                        compare its tokens/s, p95 latency, and deferral
+                        wait against continuous+exit (sync M_L inline)
 
 Ragged mode (--ragged-min/--ragged-max) draws mixed prompt lengths from
 a uniform distribution and sizes the paged budget for the MEAN request,
@@ -23,17 +29,29 @@ all (lock-step batches need one shape).
 
 Each scenario is run once untimed (compile warm-up; in-process runs are
 deterministic, so the warm-up covers every jit shape the timed run needs)
-and once timed. Reported per scenario: tokens/s, latency percentiles,
-deferral ratio, M_S decode steps executed/saved, cache footprint.
+and once timed. Reported per scenario: tokens/s, latency percentiles
+(p50/p95/p99), deferral ratio + wait, M_S decode steps executed/saved,
+cache footprint.
+
+CI regression gating: `--bench-out BENCH_serving.json` emits the rows as
+a machine-readable artifact; `--baseline benchmarks/baselines/serving_cpu.json`
+fails the run (exit 1) when any row's tokens/s drops more than 25% below
+the committed baseline; `--update-baseline` rewrites the baseline file
+from the current run (commit it when a slowdown/speedup is intentional).
 
     PYTHONPATH=src python -m benchmarks.bench_serving
     PYTHONPATH=src python -m benchmarks.bench_serving --backend paged \
         --ragged-min 8 --ragged-max 48 --rate 100
+    PYTHONPATH=src python -m benchmarks.bench_serving --requests 12 \
+        --max-new 12 --slots 4 --bench-out BENCH_serving.json \
+        --baseline benchmarks/baselines/serving_cpu.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import math
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -76,8 +94,10 @@ def run_static(engine: CascadeEngine, requests: List, prompt_len: int,
         "makespan_s": makespan,
         "throughput_tok_s": n * max_new / makespan,
         "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
         "latency_p99_s": float(np.percentile(lat, 99)),
         "deferral_ratio": n_deferred / n,
+        "deferral_wait_p50_ms": float("nan"),
         "ms_steps": steps,
         "saved_steps": 0,
         "cache_mb": float("nan"),
@@ -93,8 +113,11 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         "makespan_s": s["makespan_s"],
         "throughput_tok_s": s["throughput_tok_s"],
         "latency_p50_s": s["latency_p50_s"],
+        "latency_p95_s": s["latency_p95_s"],
         "latency_p99_s": s["latency_p99_s"],
         "deferral_ratio": s["deferral_ratio"],
+        "deferral_wait_p50_ms": s.get("deferral_wait_p50_ms",
+                                      float("nan")),
         "ms_steps": res.steps,
         "saved_steps": res.saved_steps,
         "cache_mb": s["cache_bytes"] / 2**20,
@@ -110,7 +133,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         seed: int = 0, margin: float = 0.02, min_tokens: int = 4,
         backend: str = "slot", block_size: int = 8,
         n_blocks: Optional[int] = None, prefill_chunk: int = 8,
-        ragged_min: int = 0, ragged_max: int = 0) -> Dict:
+        ragged_min: int = 0, ragged_max: int = 0,
+        large_max_wait: float = 0.02) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
     # comparable to `repro.launch.serve`
@@ -178,6 +202,16 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
     rows.append(best_of(lambda: run_continuous(cont_x, fresh(), max_new,
                                                "continuous+exit")))
 
+    # -- threaded M_L backend: deferrals regenerate off the decode loop ----
+    cont_t = ContinuousCascadeEngine(small, large, n_slots=slots, tau=tau,
+                                     min_tokens=min_tokens, margin=margin,
+                                     early_exit=True, large_batch=slots,
+                                     large_backend="thread",
+                                     large_max_wait=large_max_wait,
+                                     steps_per_sync=4)
+    rows.append(best_of(lambda: run_continuous(cont_t, fresh(), max_new,
+                                               "continuous+thread")))
+
     # -- continuous over the block-paged pool ------------------------------
     if backend == "paged":
         if n_blocks is None:
@@ -196,12 +230,15 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
             rows.append(best_of(lambda e=eng, l=label: run_continuous(
                 e, fresh(), max_new, l)))
 
-    print("engine,tok_s,p50_ms,p99_ms,deferral,ms_steps,saved_steps,cache_mb")
+    print("engine,tok_s,p50_ms,p95_ms,p99_ms,deferral,wait_ms,"
+          "ms_steps,saved_steps,cache_mb")
     for r in rows:
         print(f"{r['engine']},{r['throughput_tok_s']:.1f},"
               f"{r['latency_p50_s'] * 1e3:.0f},"
+              f"{r['latency_p95_s'] * 1e3:.0f},"
               f"{r['latency_p99_s'] * 1e3:.0f},"
-              f"{r['deferral_ratio']:.2f},{r['ms_steps']},"
+              f"{r['deferral_ratio']:.2f},"
+              f"{r['deferral_wait_p50_ms']:.0f},{r['ms_steps']},"
               f"{r['saved_steps']},{r['cache_mb']:.2f}")
     base = rows[0]["throughput_tok_s"]
     best = max(rows[1:], key=lambda r: r["throughput_tok_s"]) \
@@ -224,13 +261,66 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         "max_new": max_new, "slots": slots, "rate": rate,
         "target_deferral": target_deferral, "backend": backend,
         "block_size": block_size, "n_blocks": n_blocks,
-        "ragged_min": ragged_min, "ragged_max": ragged_max}, "rows": rows}
+        "ragged_min": ragged_min, "ragged_max": ragged_max,
+        "large_max_wait": large_max_wait}, "rows": rows}
     save_result("serving", payload)
     for r in rows:
         emit_csv_row(f"serving/{r['engine']}",
                      r["makespan_s"] * 1e6,
                      f"{r['throughput_tok_s']:.1f} tok/s")
     return payload
+
+
+def bench_record(payload: Dict) -> Dict:
+    """The machine-readable slice of a bench run that the CI regression
+    gate compares: per-engine tokens/s, p95 latency, deferral ratio and
+    wait. Written to --bench-out / benchmarks/baselines/*.json."""
+    return {
+        "config": payload["config"],
+        "rows": [{
+            "engine": r["engine"],
+            "tokens_per_s": round(r["throughput_tok_s"], 2),
+            "p95_latency_ms": round(r["latency_p95_s"] * 1e3, 2),
+            "deferral_ratio": round(r["deferral_ratio"], 4),
+            "deferral_wait_p50_ms":
+                (round(r["deferral_wait_p50_ms"], 2)
+                 if np.isfinite(r["deferral_wait_p50_ms"]) else None),
+        } for r in payload["rows"]],
+    }
+
+
+def check_baseline(record: Dict, baseline_path: str,
+                   max_drop: float = 0.25) -> List[str]:
+    """Compare a bench record against the committed baseline: any
+    engine row whose tokens/s fell more than `max_drop` below baseline
+    is a regression. Returns failure messages (empty = pass). Rows
+    added since the baseline was written are reported but don't fail;
+    rows *missing* from the current run do."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["engine"]: r for r in base["rows"]}
+    cur_rows = {r["engine"]: r for r in record["rows"]}
+    failures = []
+    for engine, b in base_rows.items():
+        cur = cur_rows.get(engine)
+        if cur is None:
+            failures.append(f"{engine}: present in baseline but missing "
+                            f"from this run")
+            continue
+        floor = b["tokens_per_s"] * (1.0 - max_drop)
+        status = "ok" if cur["tokens_per_s"] >= floor else "REGRESSION"
+        print(f"# baseline {engine}: {cur['tokens_per_s']:.1f} tok/s vs "
+              f"{b['tokens_per_s']:.1f} baseline "
+              f"(floor {floor:.1f}) -> {status}")
+        if status != "ok":
+            failures.append(
+                f"{engine}: {cur['tokens_per_s']:.1f} tok/s is "
+                f">{max_drop:.0%} below baseline "
+                f"{b['tokens_per_s']:.1f} (floor {floor:.1f})")
+    for engine in cur_rows.keys() - base_rows.keys():
+        print(f"# baseline {engine}: new row (not in baseline; run "
+              f"--update-baseline to start gating it)")
+    return failures
 
 
 def main():
@@ -257,13 +347,43 @@ def main():
                     help=">0: ragged workload, prompt lengths uniform in "
                          "[ragged-min, ragged-max]")
     ap.add_argument("--ragged-max", type=int, default=0)
+    ap.add_argument("--large-max-wait", type=float, default=0.02,
+                    help="threaded M_L backend: seconds a partial batch "
+                         "may wait before flushing")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench-out", default=None,
+                    help="write the machine-readable bench record "
+                         "(tokens/s, p95, deferral) to this JSON path")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to gate against: "
+                         "exit 1 if any engine's tokens/s drops >25%% "
+                         "below it")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline from this run instead of "
+                         "gating (commit the result)")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="allowed fractional tokens/s drop vs baseline")
     args = ap.parse_args()
-    run(args.requests, args.prompt_len, args.max_new, args.slots,
-        args.target_deferral, args.rate, args.seed, args.margin,
-        args.min_tokens, args.backend, args.block_size,
-        args.blocks or None, args.prefill_chunk,
-        args.ragged_min, args.ragged_max)
+    payload = run(args.requests, args.prompt_len, args.max_new, args.slots,
+                  args.target_deferral, args.rate, args.seed, args.margin,
+                  args.min_tokens, args.backend, args.block_size,
+                  args.blocks or None, args.prefill_chunk,
+                  args.ragged_min, args.ragged_max, args.large_max_wait)
+    record = bench_record(payload)
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# bench record written to {args.bench_out}")
+    if args.baseline and args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# baseline updated: {args.baseline} (commit this file)")
+    elif args.baseline:
+        failures = check_baseline(record, args.baseline, args.max_drop)
+        if failures:
+            print("# BENCHMARK REGRESSION:\n#  " + "\n#  ".join(failures))
+            sys.exit(1)
+        print("# baseline check passed")
 
 
 if __name__ == "__main__":

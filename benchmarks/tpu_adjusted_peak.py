@@ -29,7 +29,6 @@ import re
 def conversion_bytes(hlo: str, min_bytes: float = 64e6) -> float:
     """Sum output bytes of f32 tensors produced by convert/copy fusions of
     bf16 inputs (the CPU-backend artifact)."""
-    dt = {"f32": 4, "bf16": 2}
     total = 0.0
     pat = re.compile(r"= f32\[([\d,]+)\][^=]*"
                      r"(wrapped_convert|convert\(|convert_|copy_convert)")

@@ -62,7 +62,6 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
     logits: [..., C]; labels: integer [...] -> returns [...] fp32.
     """
     logp = _log_softmax(logits)
-    c = logits.shape[-1]
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     if label_smoothing > 0.0:
         smooth = -logp.mean(axis=-1)

@@ -13,7 +13,7 @@ they run on experiment outputs, not in the training step).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 

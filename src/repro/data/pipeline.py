@@ -3,11 +3,11 @@ device placement with mesh-aware sharding of the batch dim.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Sequence
+from typing import Iterator, Optional
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.sharding import logical_to_spec
 

@@ -82,7 +82,6 @@ def _kernel(x_ref, tbl_ref, tgt_ref, ce_ref, kl_ref, corr_ref, ent_ref,
         tgt = tgt_ref[...]
         loc = tgt - vb * vb_size
         in_blk = (loc >= 0) & (loc < vb_size)
-        row = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0) * 0
         sel = (col == (vb * vb_size + jnp.clip(loc, 0, vb_size - 1))[:, None])
         got = jnp.where(sel, logits, 0.0).sum(axis=1)
         tl_ref[...] = jnp.where(in_blk, got, tl_ref[...])

@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_configs
 from repro.launch import roofline as rf

@@ -6,7 +6,6 @@ jax; smoke tests and benches see the real (1-device) platform.
 """
 from __future__ import annotations
 
-import jax
 from jax.sharding import Mesh
 
 from repro.sharding import ParallelContext, make_mesh as _make_mesh

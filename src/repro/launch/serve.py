@@ -10,6 +10,14 @@ Two engines (see repro.serving):
                   --backend paged (block-paged cache, ragged prompts,
                   chunked prefill; size the budget with --blocks)
 
+Deferred requests regenerate on a pluggable M_L backend
+(--large-backend): sync runs M_L inline on the decode loop (reference);
+thread runs it on a worker thread so M_S decode never stalls on large
+batches; stub adds a serialized request/response pipe with injectable
+latency (--stub-latency), the shape of a real RPC. --large-batch sets
+the regeneration batch size and --large-max-wait bounds how long a
+partial batch may wait before flushing.
+
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --requests 32 --max-new 8 --deferral-ratio 0.3 \
         --engine continuous --slots 8 --arrival-rate 50 \
@@ -26,7 +34,6 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
@@ -62,6 +69,20 @@ def main():
     ap.add_argument("--no-early-exit", action="store_true")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals/s; 0 = all at t=0")
+    ap.add_argument("--large-backend", choices=("sync", "thread", "stub"),
+                    default="sync",
+                    help="M_L regeneration backend: inline (sync), "
+                         "worker thread overlapped with M_S decode "
+                         "(thread), or serialized RPC stub (stub)")
+    ap.add_argument("--large-batch", type=int, default=0,
+                    help="M_L regeneration batch size (0 = one "
+                         "exact-size batch at end of run)")
+    ap.add_argument("--large-max-wait", type=float, default=0.0,
+                    help="seconds a partial M_L batch may wait before "
+                         "flushing padded (0 = wait for a full batch)")
+    ap.add_argument("--stub-latency", type=float, default=0.0,
+                    help="injected per-batch RPC latency for "
+                         "--large-backend stub")
     ap.add_argument("--audit-log", default=None,
                     help="JSONL audit log path (continuous engine)")
     ap.add_argument("--backend", choices=("slot", "paged"), default="slot",
@@ -117,6 +138,10 @@ def main():
     engine = ContinuousCascadeEngine(
         small, large, n_slots=args.slots, min_tokens=args.min_tokens,
         margin=args.margin, early_exit=not args.no_early_exit,
+        large_batch=args.large_batch or None,
+        large_backend=args.large_backend,
+        large_max_wait=args.large_max_wait or None,
+        stub_latency=args.stub_latency,
         backend=args.backend, block_size=args.block_size,
         n_blocks=args.blocks or None,
         prefill_chunk=args.prefill_chunk or None)
@@ -129,7 +154,7 @@ def main():
     reqs = make_requests(live, args.max_new, arrivals)
     res = engine.run(reqs, args.max_new, audit_path=args.audit_log)
     print(f"served {len(live)} requests on {args.slots} slots "
-          f"({args.backend} backend) in "
+          f"({args.backend} backend, M_L via {args.large_backend}) in "
           f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "
           f"early_exits={int(res.early_exited.sum())}, "
           f"saved_M_S_steps={res.saved_steps}")

@@ -13,8 +13,7 @@ from jax.sharding import Mesh, NamedSharding
 from repro.configs import ModelConfig, InputShape
 from repro.models import encdec as encdec_lib
 from repro.models import transformer as tfm
-from repro.sharding import (AbstractParam, logical_to_spec, tree_shardings,
-                            tree_shape_structs)
+from repro.sharding import AbstractParam, logical_to_spec
 from repro.training import optim
 
 

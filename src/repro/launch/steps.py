@@ -14,15 +14,12 @@ in fp32 — the XLA analogue of the fused Pallas kernel in repro/kernels.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ModelConfig, InputShape
+from repro.configs import ModelConfig
 from repro.core.gatekeeper import GatekeeperConfig
 from repro.models import encdec as encdec_lib
 from repro.models import transformer as tfm

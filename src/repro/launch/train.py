@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig, get_config, reduced
 from repro.core.gatekeeper import GatekeeperConfig

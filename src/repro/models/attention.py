@@ -563,7 +563,6 @@ def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
         # chunked (online-softmax) path: the two-term MLA score equals one
         # GQA score over concatenated (nope || rope) head dims — the
         # [T, S] tensor is never live (same schedule as _attend_chunked).
-        H = q_nope.shape[2]
         q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
         k_cat = jnp.concatenate(
             [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],

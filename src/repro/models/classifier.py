@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ParamFactory
-from repro.sharding import ParallelContext
 
 
 @dataclasses.dataclass(frozen=True)

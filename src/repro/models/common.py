@@ -8,9 +8,8 @@ in one of two modes through `ParamFactory`:
 """
 from __future__ import annotations
 
-import dataclasses
 import zlib
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,6 @@ technique and RoPE keeps the decode cache machinery uniform across archs.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +16,7 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import ffn as ffn_lib
-from repro.models.common import embed_tokens, rms_norm, unembed
+from repro.models.common import embed_tokens, rms_norm
 from repro.models.transformer import (attn_config, mlp_config, _maybe_remat,
                                       _logits, init_cache as _dec_init_cache)
 from repro.sharding import ParallelContext

@@ -23,7 +23,6 @@ renormalized); the router aux load-balance loss keeps overflow rare.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -202,7 +201,6 @@ def _pack_by_destination(x2d, tok, dst, valid, n_dst: int, capacity: int):
     Returns (buffer [n_dst, capacity, d], slot [A] position used (>=capacity
     means dropped)).
     """
-    A = dst.shape[0]
     onehot = jax.nn.one_hot(dst, n_dst, dtype=jnp.int32) * valid[:, None]
     pos = jnp.cumsum(onehot, axis=0) - onehot          # rank within dest
     slot = (pos * onehot).sum(-1)                      # [A]

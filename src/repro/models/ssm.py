@@ -23,7 +23,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.common import ParamFactory, rms_norm
 from repro.sharding import ParallelContext
@@ -40,7 +39,6 @@ def linear_attention_scan(q, k, v, logw, state0, *, mode="mamba", u=None):
     state0: [B,H,K,V]. Returns (y [B,T,H,V], state [B,H,K,V]).
     """
     B, T, H, K = q.shape
-    V = v.shape[-1]
     logw = jnp.broadcast_to(logw, (B, T, H, K)).astype(jnp.float32)
 
     def step(S, xs):
@@ -218,7 +216,6 @@ def _token_shift(x, last):
 
 def _rwkv_mix_streams(p, x, shifted):
     """ddlerp: per-stream mixing coefficients with a low-rank data path."""
-    d = x.shape[-1]
     r = p["mix_B"].shape[1]
     base = jnp.tanh(jnp.einsum("btd,dr->btr", x, p["mix_A"]))  # [B,T,5r]
     base = base.reshape(base.shape[:-1] + (5, r))

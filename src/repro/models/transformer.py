@@ -17,8 +17,7 @@ attention block re-uses ONE weight set (scan xs can't express weight tying).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

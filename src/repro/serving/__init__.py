@@ -27,11 +27,16 @@ Architecture
                       │         < tau - margin after min_tokens): evict,
                       │         saving the remaining M_S steps
                       ▼
-                  batched M_L regeneration ──> telemetry.ServingTelemetry
-                                               (tokens/s, latency pXX,
-                                                deferral ratio, savings,
-                                                cache footprint,
-                                                JSONL audit log)
+              large_backend.{Sync,Threaded,RemoteStub}Backend
+                      │ deferrals stream in at retirement; batched
+                      │ M_L regeneration (sync: inline on the decode
+                      │ loop; thread/stub: worker thread overlapped
+                      │ with M_S decode, max-wait bounded batching)
+                      ▼
+                  telemetry.ServingTelemetry
+                      (tokens/s, latency pXX, deferral ratio + wait,
+                       M_L queue depth / batch occupancy, savings,
+                       cache footprint, JSONL audit log)
 
 `engine.CascadeEngine` is the static lock-step reference path; with
 `early_exit=False` the continuous engine reproduces it token-for-token
@@ -49,15 +54,24 @@ paged_pool  Block-paged KV cache: fixed-size blocks + per-slot page
             tables, on-demand mapping, reservation-based admission.
 scheduler   FIFO admission into free slots (optionally capacity-gated),
             retirement, invariants.
+large_backend  Pluggable M_L regeneration backends (submit/poll/drain):
+            sync (inline), thread (worker-thread overlap), stub
+            (serialized RPC shape with injectable latency); shared
+            batch-shape policy (large_batch x max_wait).
 engine      ModelRunner (on-device greedy loop), static CascadeEngine,
             ContinuousCascadeEngine (continuous batching + in-flight
-            deferral over either backend, chunked prefill).
+            deferral over either backend, chunked prefill, streaming
+            M_L deferral).
 telemetry   Event stream, JSONL audit log, throughput/latency summary.
 """
 from repro.serving.cache_pool import SlotCachePool
 from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
                                   ContinuousServeResult, ModelRunner,
                                   ServeResult)
+from repro.serving.large_backend import (BatchPolicy, LargeBackend,
+                                         LargeResult, RemoteStubBackend,
+                                         SyncLocalBackend, ThreadedBackend,
+                                         make_large_backend)
 from repro.serving.paged_pool import PagedCachePool
 from repro.serving.request import (ArrivalQueue, Request, make_requests,
                                    poisson_arrivals)
@@ -65,8 +79,10 @@ from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
 
 __all__ = [
-    "ArrivalQueue", "CascadeEngine", "ContinuousCascadeEngine",
-    "ContinuousServeResult", "ModelRunner", "PagedCachePool", "Request",
-    "ServeResult", "ServingTelemetry", "SlotCachePool", "SlotScheduler",
-    "make_requests", "poisson_arrivals",
+    "ArrivalQueue", "BatchPolicy", "CascadeEngine",
+    "ContinuousCascadeEngine", "ContinuousServeResult", "LargeBackend",
+    "LargeResult", "ModelRunner", "PagedCachePool", "RemoteStubBackend",
+    "Request", "ServeResult", "ServingTelemetry", "SlotCachePool",
+    "SlotScheduler", "SyncLocalBackend", "ThreadedBackend",
+    "make_large_backend", "make_requests", "poisson_arrivals",
 ]

@@ -62,8 +62,10 @@ from repro.core.calibration import (expected_compute_cost,
 from repro.models import transformer as tfm
 from repro.serving.cache_pool import (SlotCachePool, cache_batch_axes,
                                       scatter_rows)
+from repro.serving.large_backend import make_large_backend
 from repro.serving.paged_pool import PagedCachePool
-from repro.serving.request import DONE, ArrivalQueue, Request, make_requests
+from repro.serving.request import (DEFERRED_PENDING, DONE, ArrivalQueue,
+                                   Request, make_requests)
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
 from repro.sharding import ParallelContext
@@ -230,10 +232,18 @@ class ContinuousCascadeEngine:
     gates the FIFO head on worst-case block reservation so an admitted
     request can never run out of cache mid-flight (no preemption path).
 
-    `large_batch=None` defers M_L regeneration to end-of-run exact-size
-    batches (bit-identical to the static path); an int flushes padded
-    batches of that size as soon as enough deferrals accumulate. Ragged
-    deferrals regenerate in per-prompt-length groups.
+    M_L regeneration goes through a pluggable `large_backend`
+    (``"sync"`` — inline on the decode loop, the reference path;
+    ``"thread"`` — a worker thread that overlaps M_L batches with M_S
+    decode; ``"stub"`` — the threaded path behind a serialized
+    request/response pipe with injectable latency, the shape of a real
+    RPC). Each deferral streams into the backend the moment its slot
+    retires; completions fold back in every engine iteration. Batch
+    shape policy lives in the backend (`large_backend.BatchPolicy`):
+    `large_batch=None` batches only at drain, exact-size (bit-identical
+    to the static path); an int cuts per-prompt-length batches of that
+    size as soon as a group fills, and `large_max_wait` seconds bound
+    how long a partial group may wait before flushing padded.
 
     `steps_per_sync` > 1 enables multi-step scheduling: the jitted step
     runs that many decode steps before the host syncs the control
@@ -247,6 +257,9 @@ class ContinuousCascadeEngine:
                  margin: float = 0.0, min_tokens: int = 2,
                  early_exit: bool = True,
                  large_batch: Optional[int] = None,
+                 large_backend: str = "sync",
+                 large_max_wait: Optional[float] = None,
+                 stub_latency: float = 0.0,
                  steps_per_sync: int = 1,
                  backend: str = "slot",
                  block_size: int = 16,
@@ -264,6 +277,9 @@ class ContinuousCascadeEngine:
         self.min_tokens = max(1, min_tokens)
         self.early_exit = early_exit
         self.large_batch = large_batch
+        self.large_backend = large_backend
+        self.large_max_wait = large_max_wait
+        self.stub_latency = stub_latency
         self.steps_per_sync = max(1, steps_per_sync)
         self.backend = backend
         self.block_size = block_size
@@ -486,14 +502,40 @@ class ContinuousCascadeEngine:
             "active": jnp.zeros((S,), bool),
             "tokens": jnp.zeros((S, max_new), jnp.int32),
         }
-        deferred_wait: List[Request] = []
         # paged: requests admitted to a slot but still prefilling, FIFO of
         # [request, slot, next chunk offset]
         prefilling: List[List] = []
         n_steps = 0
         n_prefill_chunks = 0
         peak_active = 0
+        ml = make_large_backend(self.large_backend, self.large, max_new,
+                                self.large_batch, self.large_max_wait,
+                                self.stub_latency)
+        by_rid = {r.rid: r for r in requests}
+        ml_depths: List[int] = []
         tel.reset_clock()
+
+        def submit_large(req: Request):
+            """Stream one deferral into the M_L backend the moment its
+            slot retires — M_S decode proceeds while M_L works."""
+            req.state = DEFERRED_PENDING
+            req.t_submit_large = tel.now
+            ml.submit([req])
+            tel.event("large_submit", rid=req.rid, depth=ml.n_pending)
+
+        def poll_large():
+            """Fold completed M_L regenerations back into the run."""
+            for res in ml.poll():
+                req = by_rid[res.rid]
+                req.tokens = np.asarray(res.tokens, np.int32)
+                req.state = DONE
+                now = tel.now
+                req.t_done = now
+                tel.event("large_complete", rid=req.rid,
+                          batch_id=res.batch_id, n_real=res.n_real,
+                          pad_to=res.pad_to, reason=res.reason,
+                          wait_ms=round((now - req.t_submit_large) * 1e3,
+                                        3))
 
         def sync_retire():
             """Pull the tiny control vectors, retire finished / in-flight
@@ -527,7 +569,7 @@ class ContinuousCascadeEngine:
                 defer = mean < self.tau if finished else True
                 sched.retire(slot, now, deferred=defer, early=evict)
                 if defer:
-                    deferred_wait.append(req)
+                    submit_large(req)
                 else:
                     req.tokens = toks[slot].copy()
                 tel.event("retire", rid=req.rid, slot=slot,
@@ -539,38 +581,6 @@ class ContinuousCascadeEngine:
                 state = dict(state)
                 state["active"] = state["active"].at[
                     jnp.asarray(retired)].set(False)
-
-        def flush_large(batch: List[Request], pad_to: Optional[int]):
-            """Regenerate `batch` on M_L in per-prompt-length groups
-            (ragged deferrals can't share one prefill shape). Padding to
-            `pad_to` only pays when the whole batch is ONE length group
-            (uniform traffic -> one stable compiled shape); ragged groups
-            compile per length anyway, so padding them would just
-            multiply M_L compute."""
-            if not batch:
-                return
-            batch = sorted(batch, key=lambda r: r.rid)
-            by_len: Dict[int, List[Request]] = {}
-            for r in batch:
-                by_len.setdefault(r.prompt_len, []).append(r)
-            if len(by_len) > 1:
-                pad_to = None
-            for P, group in sorted(by_len.items()):
-                prompts = np.stack([r.prompt for r in group])
-                b = len(group)
-                if pad_to is not None and b < pad_to:
-                    prompts = np.concatenate(
-                        [prompts,
-                         np.repeat(prompts[:1], pad_to - b, axis=0)])
-                l_tokens, _ = self.large.generate(prompts, P, max_new)
-                now = tel.now
-                for i, req in enumerate(group):
-                    req.tokens = l_tokens[i].copy()
-                    req.state = DONE
-                    req.t_done = now
-                tel.event("large_batch", rids=[r.rid for r in group],
-                          prompt_len=P,
-                          padded=max(pad_to - b, 0) if pad_to else 0)
 
         def admit_slot_groups(admitted):
             """Slot backend: batched prefill per distinct prompt length
@@ -620,70 +630,80 @@ class ContinuousCascadeEngine:
             mid_prefill = {s for _, s, _ in prefilling}
             return [s for s in sched.active_slots if s not in mid_prefill]
 
-        while len(queue) or sched.n_active:
-            if paged:
-                # admit one at a time: each admission reserves its blocks
-                # immediately, so the capacity check for the next FIFO
-                # head sees the updated reservation
-                admitted = []
-                while True:
-                    got = sched.admit_ready(
-                        queue, tel.now, limit=1,
-                        can_admit=lambda r: pool.can_reserve(
-                            r.prompt_len + r.max_new - 1))
-                    if not got:
-                        break
-                    slot, req = got[0]
-                    pool.reserve(slot, req.prompt_len + req.max_new - 1)
-                    pool.ensure_mapped(slot, req.prompt_len)
-                    prefilling.append([req, slot, 0])
-                    admitted.append((slot, req))
-                if admitted:
-                    tel.event("admit", rids=[r.rid for _, r in admitted],
-                              slots=[s for s, _ in admitted])
-                if prefilling:
-                    run_prefill_chunk()
-            else:
-                admitted = sched.admit_ready(queue, tel.now)
-                if admitted:
-                    admit_slot_groups(admitted)
-                    tel.event("admit", rids=[r.rid for _, r in admitted],
-                              slots=[s for s, _ in admitted])
-                    sync_retire()        # min_tokens=1 / max_new=1 edges
-            peak_active = max(peak_active, sched.n_active)
-            decoding = decoding_slots()
-            if decoding:
+        # the worker backend and audit log must be released even
+        # when the serve loop raises (a leaked worker thread spins
+        # its poll loop for the life of the process)
+        try:
+            while len(queue) or sched.n_active:
                 if paged:
-                    pos_host = np.asarray(state["pos"])
-                    for slot in decoding:
-                        req = sched.running[slot]
-                        total = req.prompt_len + req.max_new - 1
-                        pool.ensure_mapped(
-                            slot, min(int(pos_host[slot])
-                                      + self.steps_per_sync, total))
-                    pool.cache, state = step_fn(self.small.params,
-                                                pool.cache, state,
-                                                pool.tables_device())
+                    # admit one at a time: each admission reserves its blocks
+                    # immediately, so the capacity check for the next FIFO
+                    # head sees the updated reservation
+                    admitted = []
+                    while True:
+                        got = sched.admit_ready(
+                            queue, tel.now, limit=1,
+                            can_admit=lambda r: pool.can_reserve(
+                                r.prompt_len + r.max_new - 1))
+                        if not got:
+                            break
+                        slot, req = got[0]
+                        pool.reserve(slot, req.prompt_len + req.max_new - 1)
+                        pool.ensure_mapped(slot, req.prompt_len)
+                        prefilling.append([req, slot, 0])
+                        admitted.append((slot, req))
+                    if admitted:
+                        tel.event("admit", rids=[r.rid for _, r in admitted],
+                                  slots=[s for s, _ in admitted])
+                    if prefilling:
+                        run_prefill_chunk()
                 else:
-                    pool.cache, state = step_fn(self.small.params,
-                                                pool.cache, state)
-                n_steps += self.steps_per_sync
-                sync_retire()
-            elif not sched.n_active and len(queue):
-                nxt = queue.next_arrival
-                if nxt is not None:
-                    time.sleep(min(max(nxt - tel.now, 0.0), 1e-3) + 1e-5)
-            if (self.large_batch is not None
-                    and len(deferred_wait) >= self.large_batch):
-                flush_large(deferred_wait[:self.large_batch],
-                            self.large_batch)
-                del deferred_wait[:self.large_batch]
+                    admitted = sched.admit_ready(queue, tel.now)
+                    if admitted:
+                        admit_slot_groups(admitted)
+                        tel.event("admit", rids=[r.rid for _, r in admitted],
+                                  slots=[s for s, _ in admitted])
+                        sync_retire()        # min_tokens=1 / max_new=1 edges
+                peak_active = max(peak_active, sched.n_active)
+                decoding = decoding_slots()
+                if decoding:
+                    if paged:
+                        pos_host = np.asarray(state["pos"])
+                        for slot in decoding:
+                            req = sched.running[slot]
+                            total = req.prompt_len + req.max_new - 1
+                            pool.ensure_mapped(
+                                slot, min(int(pos_host[slot])
+                                          + self.steps_per_sync, total))
+                        pool.cache, state = step_fn(self.small.params,
+                                                    pool.cache, state,
+                                                    pool.tables_device())
+                    else:
+                        pool.cache, state = step_fn(self.small.params,
+                                                    pool.cache, state)
+                    n_steps += self.steps_per_sync
+                    tel.event("step", slots=decoding, n=self.steps_per_sync,
+                              ml_pending=ml.n_pending)
+                    sync_retire()
+                elif not sched.n_active and len(queue):
+                    nxt = queue.next_arrival
+                    if nxt is not None:
+                        time.sleep(min(max(nxt - tel.now, 0.0), 1e-3) + 1e-5)
+                ml_depths.append(ml.n_pending)
+                poll_large()
 
-        # drain: pad to large_batch when set (shape-stable M_L compile);
-        # exact-size otherwise (bit-identical to the static path)
-        flush_large(deferred_wait, self.large_batch)
-        makespan = tel.now
-        tel.close()
+            # all M_S work is done: release partial M_L groups and fold in
+            # completions as they land (per-request t_done stays accurate)
+            ml.flush()
+            while True:
+                poll_large()
+                if not ml.n_pending:
+                    break
+                time.sleep(2e-3)
+            makespan = tel.now
+        finally:
+            ml.close()
+            tel.close()
 
         reqs = sorted(requests, key=lambda r: r.rid)
         stats = tel.summary(reqs, makespan, self.cost_small,
@@ -691,6 +711,15 @@ class ContinuousCascadeEngine:
         stats["backend"] = self.backend
         stats["cache_bytes"] = pool.footprint_bytes()
         stats["peak_active"] = peak_active
+        stats["ml_backend"] = self.large_backend
+        stats["ml_batches"] = len(ml.batch_log)
+        stats["ml_batch_occupancy"] = (
+            float(np.mean([b["n_real"] / max(b["pad_to"], 1)
+                           for b in ml.batch_log]))
+            if ml.batch_log else float("nan"))
+        stats["ml_queue_depth_peak"] = int(max(ml_depths, default=0))
+        stats["ml_queue_depth_mean"] = (float(np.mean(ml_depths))
+                                        if ml_depths else 0.0)
         if paged:
             stats.update(block_size=self.block_size,
                          n_blocks=pool.n_blocks,

@@ -1,0 +1,475 @@
+"""Pluggable M_L regeneration backends for the continuous cascade engine.
+
+The engine used to regenerate deferred requests inline on the decode
+loop (`flush_large`), so every M_L batch stalled all resident M_S
+requests.  This module turns M_L into a *backend* behind a small
+submit/poll/drain protocol so the engine can stream each deferral out
+the moment its slot retires and keep decoding while M_L works:
+
+    ``LargeBackend`` protocol
+        submit(requests) -> ticket   enqueue deferred requests
+        poll()           -> finished non-blocking; completed work so far
+        flush()                      no more submissions; release partials
+        drain()          -> finished block until every ticket completes
+        close()                      stop worker resources
+
+Three implementations, all sharing one batching policy (`BatchPolicy`)
+so batch *shape* decisions live here rather than in the engine:
+
+``SyncLocalBackend``
+    The old behavior, extracted: batches run inline in `submit`/`flush`
+    on the caller's thread (M_S decode blocks while M_L runs).  The
+    parity reference.
+
+``ThreadedBackend``
+    A worker thread owns its own `ModelRunner.generate` loop on a
+    queue.  Deferrals batch by prompt-length group up to `large_batch`,
+    with a max-wait timer so partial groups don't starve when the batch
+    never fills.  M_S decode proceeds concurrently: jax releases the
+    GIL while XLA executes, so the small model's decode steps interleave
+    with large-model regeneration on the worker.
+
+``RemoteStubBackend``
+    The shape of a real RPC: requests and responses cross an in-process
+    byte pipe as serialized JSON payloads (no Python objects shared with
+    the worker), with injectable per-batch network latency.  Swap the
+    pipe for a socket and this is a remote M_L server.
+
+Greedy parity is bit-exact per request across all three backends (and
+order-independent): every backend regenerates through the same
+`ModelRunner.generate` per prompt-length group, and XLA's row-wise
+decode makes per-request tokens independent of batch composition —
+pinned by tests/test_serving_async.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.serving.request import Request
+
+# flush reasons recorded per batch (telemetry / no-starvation tests)
+FLUSH_FULL = "full"          # a prompt-length group reached large_batch
+FLUSH_MAX_WAIT = "max_wait"  # oldest pending exceeded max_wait
+FLUSH_DRAIN = "drain"        # end-of-run drain
+
+
+@dataclasses.dataclass
+class LargeResult:
+    """One completed M_L regeneration, as returned by `poll`/`drain`."""
+    rid: int
+    tokens: np.ndarray           # [max_new] int32 final tokens
+    batch_id: int
+    n_real: int                  # real rows in the regeneration batch
+    pad_to: int                  # rows actually dispatched (>= n_real)
+    reason: str                  # FLUSH_FULL | FLUSH_MAX_WAIT | FLUSH_DRAIN
+    prompt_len: int
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Backend-internal view of one submitted request (the stub backend
+    reconstructs these from serialized payloads — no shared objects)."""
+    rid: int
+    prompt: np.ndarray
+    t_submit: float              # backend-internal monotonic clock
+
+
+class BatchPolicy:
+    """Batch *shape* policy shared by every backend (and both the
+    mid-run and end-of-run flush paths — they used to diverge).
+
+    Pending requests group by prompt length (ragged deferrals can't
+    share one prefill shape).  A group flushes when:
+
+      * it reaches `large_batch` rows (FLUSH_FULL, no padding needed);
+      * its oldest member has waited `max_wait` seconds (FLUSH_MAX_WAIT,
+        padded up to `large_batch` so the compiled shape is reused by
+        later partial flushes of the same hot length);
+      * the run drains (FLUSH_DRAIN — padded only when the drain is a
+        SINGLE length group: uniform leftovers then reuse the mid-run
+        compiled shape, while multi-length ragged drains go exact-size,
+        since padding every length group would just multiply M_L
+        compute on shapes that are never reused again).
+
+    `large_batch=None` means batch only at drain, exact-size (the
+    bit-identical-to-static reference path).  Padding duplicates the
+    group's first row; pad rows are discarded on return.
+    """
+
+    def __init__(self, large_batch: Optional[int],
+                 max_wait: Optional[float] = None):
+        self.large_batch = large_batch
+        self.max_wait = max_wait
+        self._groups: Dict[int, List[_Pending]] = {}
+
+    def add(self, item: _Pending) -> None:
+        self._groups.setdefault(int(item.prompt.shape[0]), []).append(item)
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(g) for g in self._groups.values())
+
+    def next_deadline(self) -> Optional[float]:
+        """Monotonic time at which the oldest pending group times out
+        (None when no timer applies)."""
+        if self.max_wait is None or not self._groups:
+            return None
+        oldest = min(g[0].t_submit for g in self._groups.values() if g)
+        return oldest + self.max_wait
+
+    def take(self, now: float, drain: bool = False
+             ) -> List[Tuple[List[_Pending], int, str]]:
+        """Pop every group ready to flush. Returns
+        [(rid-sorted group, pad_to, reason)] — pad_to == len(group) when
+        no padding applies."""
+        out: List[Tuple[List[_Pending], int, str]] = []
+        drain_multi_len = drain and sum(
+            1 for g in self._groups.values()
+            if g and (self.large_batch is None
+                      or len(g) % self.large_batch)) > 1
+        for plen in sorted(self._groups):
+            group = self._groups[plen]
+            while (self.large_batch is not None
+                   and len(group) >= self.large_batch):
+                take, self._groups[plen] = (group[:self.large_batch],
+                                            group[self.large_batch:])
+                group = self._groups[plen]
+                out.append((sorted(take, key=lambda p: p.rid),
+                            self.large_batch, FLUSH_FULL))
+            if not group:
+                continue
+            timed_out = (self.max_wait is not None
+                         and now - group[0].t_submit >= self.max_wait)
+            if drain or timed_out:
+                pad = (self.large_batch
+                       if self.large_batch is not None else len(group))
+                if drain_multi_len:
+                    pad = len(group)
+                out.append((sorted(group, key=lambda p: p.rid), pad,
+                            FLUSH_DRAIN if drain else FLUSH_MAX_WAIT))
+                self._groups[plen] = []
+        self._groups = {p: g for p, g in self._groups.items() if g}
+        return out
+
+
+def _generate_batch(generate: Callable, group: List[_Pending], pad_to: int,
+                    max_new: int) -> np.ndarray:
+    """Run one rid-sorted, uniform-length group through M_L, padded to
+    `pad_to` rows by duplicating the first row (the compiled shape is
+    then reused across partial flushes). Returns [len(group), max_new]."""
+    prompts = np.stack([p.prompt for p in group])
+    b = len(group)
+    if pad_to > b:
+        prompts = np.concatenate(
+            [prompts, np.repeat(prompts[:1], pad_to - b, axis=0)])
+    tokens, _ = generate(prompts, int(prompts.shape[1]), max_new)
+    return tokens[:b]
+
+
+class LargeBackend(Protocol):
+    """Protocol every M_L backend implements (see module docstring)."""
+
+    def submit(self, requests: List[Request]) -> int: ...
+    def poll(self) -> List[LargeResult]: ...
+    def flush(self) -> None: ...
+    def drain(self) -> List[LargeResult]: ...
+    def close(self) -> None: ...
+    @property
+    def n_pending(self) -> int: ...
+
+
+class SyncLocalBackend:
+    """Inline M_L regeneration on the caller's thread (the engine's old
+    `flush_large` behavior, extracted).  `submit` runs any batch the
+    policy releases immediately — blocking M_S decode — and `drain`
+    flushes the leftovers.  Zero concurrency, maximal determinism: the
+    parity reference for the other backends."""
+
+    name = "sync"
+
+    def __init__(self, runner, max_new: int,
+                 large_batch: Optional[int] = None,
+                 max_wait: Optional[float] = None):
+        self._generate = runner.generate
+        self.max_new = max_new
+        self._policy = BatchPolicy(large_batch, max_wait)
+        self._results: List[LargeResult] = []
+        self._n_tickets = 0
+        self._n_open = 0
+        self._n_batches = 0
+        self.batch_log: List[Dict[str, Any]] = []
+
+    def submit(self, requests: List[Request]) -> int:
+        for r in requests:
+            self._policy.add(_Pending(r.rid, r.prompt, time.perf_counter()))
+            self._n_open += 1
+        self._run_ready()
+        self._n_tickets += 1
+        return self._n_tickets
+
+    def _run_ready(self, drain: bool = False) -> None:
+        for group, pad_to, reason in self._policy.take(
+                time.perf_counter(), drain=drain):
+            tokens = _generate_batch(self._generate, group, pad_to,
+                                     self.max_new)
+            bid = self._n_batches
+            self._n_batches += 1
+            self.batch_log.append({
+                "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
+                "reason": reason,
+                "prompt_len": int(group[0].prompt.shape[0])})
+            for i, p in enumerate(group):
+                self._results.append(LargeResult(
+                    rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
+                    n_real=len(group), pad_to=pad_to, reason=reason,
+                    prompt_len=int(p.prompt.shape[0])))
+            self._n_open -= len(group)
+
+    def poll(self) -> List[LargeResult]:
+        self._run_ready()          # max-wait timer also fires on poll
+        out, self._results = self._results, []
+        return out
+
+    def flush(self) -> None:
+        self._run_ready(drain=True)
+
+    def drain(self) -> List[LargeResult]:
+        self.flush()
+        return self.poll()
+
+    def close(self) -> None:
+        pass
+
+    @property
+    def n_pending(self) -> int:
+        return self._n_open
+
+
+class _WorkerBackend:
+    """Shared machinery for backends whose `ModelRunner.generate` loop
+    runs on a worker thread: a submission channel in, a completion
+    channel out, the `BatchPolicy` owned by the worker.  Subclasses
+    define the channel encoding (`_encode_submit`/`_decode_submit`,
+    `_encode_result`/`_decode_result`) and any injected latency."""
+
+    name = "worker"
+
+    def __init__(self, runner, max_new: int,
+                 large_batch: Optional[int] = None,
+                 max_wait: Optional[float] = None,
+                 poll_interval: float = 0.002):
+        self._generate = runner.generate
+        self.max_new = max_new
+        self._poll_interval = poll_interval
+        self._policy = BatchPolicy(large_batch, max_wait)
+        self._inq: "queue.Queue" = queue.Queue()
+        self._outq: "queue.Queue" = queue.Queue()
+        self._drain_flag = threading.Event()
+        self._stop_flag = threading.Event()
+        self._n_tickets = 0
+        self._n_open = 0            # main-thread view: submitted - returned
+        self._n_batches = 0
+        self.batch_log: List[Dict[str, Any]] = []
+        self._error: Optional[BaseException] = None
+        self._worker = threading.Thread(target=self._run_worker,
+                                        daemon=True,
+                                        name=f"large-{self.name}")
+        self._worker.start()
+
+    # -- channel encoding (identity for ThreadedBackend) -------------------
+    def _encode_submit(self, req: Request) -> Any:
+        return _Pending(req.rid, req.prompt, time.perf_counter())
+
+    def _decode_submit(self, payload: Any) -> _Pending:
+        return payload
+
+    def _encode_result(self, res: LargeResult) -> Any:
+        return res
+
+    def _decode_result(self, payload: Any) -> LargeResult:
+        return payload
+
+    def _sleep_latency(self) -> None:
+        """Injected per-batch response latency (stub backend)."""
+
+    # -- worker thread ------------------------------------------------------
+    def _run_worker(self) -> None:
+        """Thread target: a worker death must surface on the caller's
+        thread (via `_check_error` in poll/drain), never hang it."""
+        try:
+            self._loop()
+        except BaseException as e:              # noqa: BLE001
+            self._error = e
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                f"M_L {self.name} backend worker died: "
+                f"{self._error!r}") from self._error
+        if not self._worker.is_alive() and self._n_open > 0 \
+                and not self._stop_flag.is_set():
+            raise RuntimeError(f"M_L {self.name} backend worker exited "
+                               f"with {self._n_open} requests pending")
+
+    def _loop(self) -> None:
+        while not self._stop_flag.is_set():
+            deadline = self._policy.next_deadline()
+            timeout = self._poll_interval
+            if deadline is not None:
+                timeout = min(timeout, max(deadline - time.perf_counter(),
+                                           0.0))
+            try:
+                payload = self._inq.get(timeout=max(timeout, 1e-4))
+                self._policy.add(self._decode_submit(payload))
+                continue            # keep pulling before cutting a batch
+            except queue.Empty:
+                pass
+            drain = self._drain_flag.is_set() and self._inq.empty()
+            for group, pad_to, reason in self._policy.take(
+                    time.perf_counter(), drain=drain):
+                tokens = _generate_batch(self._generate, group, pad_to,
+                                         self.max_new)
+                self._sleep_latency()
+                bid = self._n_batches
+                self._n_batches += 1
+                self.batch_log.append({
+                    "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
+                    "reason": reason,
+                    "prompt_len": int(group[0].prompt.shape[0])})
+                for i, p in enumerate(group):
+                    self._outq.put(self._encode_result(LargeResult(
+                        rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
+                        n_real=len(group), pad_to=pad_to, reason=reason,
+                        prompt_len=int(p.prompt.shape[0]))))
+
+    # -- main-thread API ----------------------------------------------------
+    def submit(self, requests: List[Request]) -> int:
+        if self._stop_flag.is_set():
+            raise RuntimeError("backend is closed")
+        for r in requests:
+            self._inq.put(self._encode_submit(r))
+            self._n_open += 1
+        self._n_tickets += 1
+        return self._n_tickets
+
+    def poll(self, timeout: Optional[float] = None) -> List[LargeResult]:
+        """Completed regenerations so far (non-blocking by default;
+        `timeout` blocks up to that long for the FIRST result)."""
+        self._check_error()
+        out: List[LargeResult] = []
+        try:
+            if timeout:
+                out.append(self._decode_result(
+                    self._outq.get(timeout=timeout)))
+            while True:
+                out.append(self._decode_result(self._outq.get_nowait()))
+        except queue.Empty:
+            pass
+        self._n_open -= len(out)
+        return out
+
+    def flush(self) -> None:
+        """No more submissions are coming: release partial groups."""
+        self._drain_flag.set()
+
+    def drain(self) -> List[LargeResult]:
+        """Block until every submitted request has completed."""
+        self.flush()
+        out: List[LargeResult] = []
+        while self._n_open > 0:
+            out.extend(self.poll(timeout=0.05))
+        return out
+
+    def close(self) -> None:
+        self._stop_flag.set()
+        self._worker.join(timeout=5.0)
+
+    @property
+    def n_pending(self) -> int:
+        return self._n_open
+
+
+class ThreadedBackend(_WorkerBackend):
+    """Worker-thread M_L backend: deferrals stream into a queue, the
+    worker batches them by prompt-length group (`large_batch` rows, or
+    `max_wait` seconds, whichever first) and runs `ModelRunner.generate`
+    concurrently with the engine's M_S decode loop (XLA releases the
+    GIL while executing, so the two genuinely overlap on CPU too)."""
+
+    name = "thread"
+
+
+class RemoteStubBackend(_WorkerBackend):
+    """RPC-shaped M_L backend: every request and response crosses the
+    worker boundary as a serialized JSON payload (rid + token lists —
+    no shared Python objects), with `latency` seconds of injected
+    response delay per batch.  Functionally identical to
+    `ThreadedBackend`; exists to pin the serialization contract a real
+    remote M_L server would use."""
+
+    name = "stub"
+
+    def __init__(self, runner, max_new: int,
+                 large_batch: Optional[int] = None,
+                 max_wait: Optional[float] = None,
+                 latency: float = 0.0,
+                 poll_interval: float = 0.002):
+        self.latency = latency
+        super().__init__(runner, max_new, large_batch, max_wait,
+                         poll_interval)
+
+    def _encode_submit(self, req: Request) -> bytes:
+        return json.dumps({"rid": req.rid,
+                           "prompt": req.prompt.tolist()}).encode()
+
+    def _decode_submit(self, payload: bytes) -> _Pending:
+        msg = json.loads(payload.decode())
+        return _Pending(int(msg["rid"]),
+                        np.asarray(msg["prompt"], np.int32),
+                        time.perf_counter())
+
+    def _encode_result(self, res: LargeResult) -> bytes:
+        return json.dumps({
+            "rid": res.rid, "tokens": res.tokens.tolist(),
+            "batch_id": res.batch_id, "n_real": res.n_real,
+            "pad_to": res.pad_to, "reason": res.reason,
+            "prompt_len": res.prompt_len}).encode()
+
+    def _decode_result(self, payload: bytes) -> LargeResult:
+        msg = json.loads(payload.decode())
+        return LargeResult(
+            rid=int(msg["rid"]),
+            tokens=np.asarray(msg["tokens"], np.int32),
+            batch_id=int(msg["batch_id"]), n_real=int(msg["n_real"]),
+            pad_to=int(msg["pad_to"]), reason=msg["reason"],
+            prompt_len=int(msg["prompt_len"]))
+
+    def _sleep_latency(self) -> None:
+        if self.latency > 0:
+            time.sleep(self.latency)
+
+
+BACKENDS = ("sync", "thread", "stub")
+
+
+def make_large_backend(kind: str, runner, max_new: int,
+                       large_batch: Optional[int] = None,
+                       max_wait: Optional[float] = None,
+                       stub_latency: float = 0.0) -> LargeBackend:
+    """Factory used by the engine/CLI: `kind` in {sync, thread, stub}."""
+    if kind == "sync":
+        return SyncLocalBackend(runner, max_new, large_batch, max_wait)
+    if kind == "thread":
+        return ThreadedBackend(runner, max_new, large_batch, max_wait)
+    if kind == "stub":
+        return RemoteStubBackend(runner, max_new, large_batch, max_wait,
+                                 latency=stub_latency)
+    raise ValueError(f"large backend must be one of {BACKENDS}, "
+                     f"got {kind!r}")

@@ -9,8 +9,12 @@ A `Request` moves through:
                device
     DEFERRED — evicted from M_S (either in-flight, when the running mean
                confidence drops below tau - margin after `min_tokens`, or
-               at end of decode when the final mean is below tau); waiting
-               for batched M_L regeneration
+               at end of decode when the final mean is below tau); about
+               to be handed to the M_L backend
+    DEFERRED_PENDING — submitted to the M_L backend (see
+               `serving.large_backend`); regeneration is in flight —
+               possibly concurrently with M_S decode — until the engine
+               polls the completed tokens back
     DONE     — final tokens attached (M_S output for kept requests, M_L
                output for deferred ones)
 
@@ -29,6 +33,7 @@ import numpy as np
 PENDING = "pending"
 RUNNING = "running"
 DEFERRED = "deferred"
+DEFERRED_PENDING = "deferred_pending"
 DONE = "done"
 
 
@@ -54,7 +59,16 @@ class Request:
     # lifecycle timestamps (seconds from run start; nan until reached)
     t_admit: float = float("nan")
     t_retire: float = float("nan")     # left M_S (finished or evicted)
+    t_submit_large: float = float("nan")  # handed to the M_L backend
     t_done: float = float("nan")       # final tokens available
+
+    @property
+    def deferral_wait_ms(self) -> float:
+        """Milliseconds from M_S retirement to final M_L tokens (nan for
+        requests that never deferred)."""
+        if not self.deferred:
+            return float("nan")
+        return (self.t_done - self.t_retire) * 1e3
 
     @property
     def prompt_len(self) -> int:

@@ -5,8 +5,6 @@ token models alike.
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -16,7 +14,6 @@ import numpy as np
 from repro.core.gatekeeper import (GatekeeperConfig, gatekeeper_loss,
                                    standard_ce_loss)
 from repro.core.baselines import static_partition_loss
-from repro.sharding import ParallelContext
 from repro.training import optim
 
 

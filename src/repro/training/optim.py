@@ -7,7 +7,7 @@ shardings (ZeRO-style: FSDP-sharded params → FSDP-sharded moments).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

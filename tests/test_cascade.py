@@ -8,9 +8,8 @@ from repro.core.baselines import (PromptingBaseline, compute_static_partition,
                                   static_partition_loss)
 from repro.core.cascade import Cascade
 from repro.core.calibration import (expected_compute_cost,
-                                    threshold_for_accuracy,
-                                    threshold_for_deferral_ratio)
-from repro.core.deferral import (defer_mask, max_softmax, selective_predict,
+                                    threshold_for_accuracy)
+from repro.core.deferral import (selective_predict,
                                  sequence_negative_entropy)
 
 

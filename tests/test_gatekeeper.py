@@ -2,13 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.gatekeeper import (GatekeeperConfig, cross_entropy,
                                    gatekeeper_loss, kl_to_uniform,
-                                   predictive_entropy, soft_cross_entropy,
-                                   standard_ce_loss)
+                                   predictive_entropy, standard_ce_loss)
 
 
 def _logits_labels(seed, n=64, c=10):

@@ -9,7 +9,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.common import ParamFactory
 from repro.models.ffn import (MoEConfig, _moe_local_math, _route, init_moe,

@@ -1,6 +1,5 @@
 """Serving-engine tests: generation, calibration, deferral routing."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

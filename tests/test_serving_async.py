@@ -1,0 +1,299 @@
+"""Non-blocking M_L backend tests: sync/thread/stub greedy parity
+(bit-exact per request), max-wait no-starvation, drain completeness,
+batch-shape policy unification, M_L queue-depth telemetry, and the
+acceptance criterion that M_S decode steps interleave with in-flight
+M_L regeneration under the threaded backend."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import make_lm_stream
+from repro.models import transformer as tfm
+from repro.serving import (ContinuousCascadeEngine, ModelRunner, Request,
+                           RemoteStubBackend, ThreadedBackend,
+                           make_requests, poisson_arrivals)
+from repro.serving.large_backend import (FLUSH_DRAIN, FLUSH_FULL,
+                                         FLUSH_MAX_WAIT, BatchPolicy,
+                                         _Pending, make_large_backend)
+from repro.serving.request import DONE
+
+
+@pytest.fixture(scope="module")
+def runners():
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 1)))
+    prompts = make_lm_stream(jax.random.fold_in(key, 2), 16, 8,
+                             s_cfg.vocab_size)
+    return small, large, prompts
+
+
+def ragged_prompts(key, lens, vocab):
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (n,), 0, vocab), np.int32)
+            for i, n in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# Batch-shape policy (unit level)
+# ---------------------------------------------------------------------------
+
+def _pend(rid, plen, t=0.0):
+    return _Pending(rid, np.full((plen,), rid, np.int32), t)
+
+
+def test_batch_policy_full_then_max_wait_then_drain():
+    pol = BatchPolicy(large_batch=3, max_wait=1.0)
+    for i in range(4):
+        pol.add(_pend(i, 8, t=float(i)))
+    # one full batch pops immediately, remainder waits
+    out = pol.take(now=0.0)
+    assert len(out) == 1
+    group, pad_to, reason = out[0]
+    assert [p.rid for p in group] == [0, 1, 2]
+    assert pad_to == 3 and reason == FLUSH_FULL
+    assert pol.n_pending == 1
+    # not timed out yet
+    assert pol.take(now=3.5) == []
+    # max-wait fires: partial group padded to large_batch
+    (group, pad_to, reason), = pol.take(now=4.1)
+    assert [p.rid for p in group] == [3]
+    assert pad_to == 3 and reason == FLUSH_MAX_WAIT
+    # drain flushes whatever remains, per length group, rid-sorted
+    pol.add(_pend(9, 4))
+    pol.add(_pend(7, 4))
+    pol.add(_pend(8, 6))
+    out = pol.take(now=0.0, drain=True)
+    assert [(sorted(p.rid for p in g), r) for g, _, r in out] == [
+        ([7, 9], FLUSH_DRAIN), ([8], FLUSH_DRAIN)]
+    assert pol.n_pending == 0
+
+
+def test_batch_policy_drain_padding():
+    """Drain pads a single-length leftover up to large_batch (reuses the
+    mid-run compiled shape) but flushes multi-length ragged leftovers
+    exact-size — padding per-length groups that will never recur would
+    just multiply M_L compute."""
+    pol = BatchPolicy(large_batch=4, max_wait=None)
+    pol.add(_pend(0, 8)); pol.add(_pend(1, 8))
+    (_, pad_to, _), = pol.take(now=0.0, drain=True)
+    assert pad_to == 4                              # uniform: padded
+    pol.add(_pend(2, 8)); pol.add(_pend(3, 6))
+    out = pol.take(now=0.0, drain=True)
+    assert [(len(g), p) for g, p, _ in out] == [(1, 1), (1, 1)]  # exact
+
+
+def test_batch_policy_none_batches_only_at_drain():
+    pol = BatchPolicy(large_batch=None, max_wait=None)
+    for i in range(5):
+        pol.add(_pend(i, 8))
+    assert pol.take(now=1e9) == []
+    (group, pad_to, _), = pol.take(now=0.0, drain=True)
+    assert len(group) == 5 and pad_to == 5          # exact size, no pad
+    assert pol.next_deadline() is None
+
+
+# ---------------------------------------------------------------------------
+# Backends standalone: submit / poll / drain contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["sync", "thread", "stub"])
+def test_backend_drain_completes_all_pending(runners, kind):
+    """drain() must return every submitted request's tokens, matching a
+    direct M_L generate of the same prompts."""
+    small, large, prompts = runners
+    be = make_large_backend(kind, large, max_new=4, large_batch=3)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=4) for i in range(7)]
+    for r in reqs:
+        be.submit([r])
+    results = list(be.poll())
+    results += be.drain()
+    be.close()
+    assert be.n_pending == 0
+    assert sorted(r.rid for r in results) == list(range(7))
+    want, _ = large.generate(prompts[:7], 8, 4)
+    for res in results:
+        np.testing.assert_array_equal(res.tokens, want[res.rid])
+    # 2 full batches of 3 + a drained leftover of 1 (padded to 3)
+    reasons = sorted(r.reason for r in results)
+    assert reasons.count(FLUSH_FULL) == 6 and reasons.count(FLUSH_DRAIN) == 1
+    leftover = next(r for r in results if r.reason == FLUSH_DRAIN)
+    assert leftover.n_real == 1 and leftover.pad_to == 3
+
+
+def test_threaded_max_wait_fires_partial_batch(runners):
+    """A batch that never fills must still flush after max_wait — no
+    starvation while the engine keeps decoding."""
+    small, large, prompts = runners
+    be = ThreadedBackend(large, max_new=4, large_batch=64, max_wait=0.05)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=4) for i in range(3)]
+    be.submit(reqs)
+    got = []
+    deadline = 100  # x 50ms poll
+    while len(got) < 3 and deadline:
+        got += be.poll(timeout=0.05)
+        deadline -= 1
+    be.close()
+    assert len(got) == 3
+    assert all(r.reason == FLUSH_MAX_WAIT for r in got)
+    assert got[0].n_real == 3 and got[0].pad_to == 64
+
+
+def test_stub_backend_serializes_roundtrip(runners):
+    """The RPC-shaped backend must produce identical tokens through its
+    serialized byte pipe, with injected latency accounted."""
+    small, large, prompts = runners
+    be = RemoteStubBackend(large, max_new=4, large_batch=None,
+                           latency=0.01)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=4) for i in range(4)]
+    be.submit(reqs)
+    results = be.drain()
+    be.close()
+    want, _ = large.generate(prompts[:4], 8, 4)
+    assert sorted(r.rid for r in results) == [0, 1, 2, 3]
+    for res in results:
+        assert res.tokens.dtype == np.int32
+        np.testing.assert_array_equal(res.tokens, want[res.rid])
+
+
+def test_worker_death_surfaces_instead_of_hanging():
+    """An M_L exception on the worker thread must raise on the caller's
+    next poll, not hang drain forever."""
+    class Boom:
+        def generate(self, *a, **k):
+            raise ValueError("boom")
+
+    be = ThreadedBackend(Boom(), max_new=4, large_batch=1)
+    be.submit([Request(rid=0, prompt=np.zeros(4, np.int32), max_new=4)])
+    with pytest.raises(RuntimeError, match="worker died"):
+        for _ in range(100):                    # bounded, not forever
+            be.poll(timeout=0.05)
+    be.close()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: parity across backends (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_engine_parity_sync_thread_stub(runners):
+    """Per-request greedy outputs must be bit-exact across all three
+    M_L backends (and order-independent: results come back rid-sorted
+    regardless of completion order)."""
+    small, large, prompts = runners
+    cont = ContinuousCascadeEngine(small, large, n_slots=8, min_tokens=2)
+    tau = cont.calibrate(prompts, 8, 4, deferral_ratio=0.5)
+    outs = {}
+    for kind, kw in (("sync", {}), ("thread", {}),
+                     ("stub", dict(stub_latency=0.002))):
+        eng = ContinuousCascadeEngine(
+            small, large, n_slots=8, tau=tau, min_tokens=2,
+            early_exit=True, large_batch=4, large_backend=kind,
+            large_max_wait=0.02, **kw)
+        res = eng.run(make_requests(prompts, 4), 4)
+        assert all(r.state == DONE for r in res.requests)
+        assert [r.rid for r in res.requests] == list(range(16))
+        outs[kind] = res
+    np.testing.assert_array_equal(outs["sync"].tokens,
+                                  outs["thread"].tokens)
+    np.testing.assert_array_equal(outs["sync"].tokens, outs["stub"].tokens)
+    np.testing.assert_array_equal(outs["sync"].deferred,
+                                  outs["thread"].deferred)
+    np.testing.assert_array_equal(outs["sync"].deferred,
+                                  outs["stub"].deferred)
+
+
+def test_mixed_flush_paths_identical_tokens(runners):
+    """Regression (batch-shape policy unification): mid-run full-batch
+    flushes + max-wait partials + end-of-run drain leftovers must all
+    produce the same per-request tokens as one exact-size drain batch."""
+    small, large, prompts = runners
+    base = ContinuousCascadeEngine(small, large, n_slots=8, tau=1e9,
+                                   min_tokens=2, early_exit=True,
+                                   large_batch=None, large_backend="sync")
+    want = base.run(make_requests(prompts, 4), 4)
+    assert want.deferred.all()
+    for kind in ("sync", "thread"):
+        eng = ContinuousCascadeEngine(
+            small, large, n_slots=8, tau=1e9, min_tokens=2,
+            early_exit=True, large_batch=3, large_backend=kind,
+            large_max_wait=0.01)
+        res = eng.run(make_requests(prompts, 4), 4)
+        np.testing.assert_array_equal(res.tokens, want.tokens)
+        # 16 deferrals in batches of 3 -> at least one partial flush
+        # (padded) and several full ones; tokens unaffected either way
+        assert res.stats["ml_batches"] >= 6
+        assert res.stats["ml_batch_occupancy"] < 1.0
+
+
+def test_threaded_steps_interleave_with_large_regeneration(runners,
+                                                           tmp_path):
+    """Acceptance: with the ThreadedBackend on a ragged Poisson
+    workload, the audit log must show M_S `step` events BETWEEN a
+    `large_submit` and its `large_complete` — M_S decode proceeded
+    while M_L regenerated — and nonzero M_L queue-depth samples."""
+    small, large, _ = runners
+    key = jax.random.PRNGKey(5)
+    lens = [6, 10] * 8
+    prompts = ragged_prompts(key, lens, small.cfg.vocab_size)
+    arrivals = poisson_arrivals(len(prompts), rate=400.0, seed=1)
+    # pre-warm every M_L shape the run can need so worker-side compile
+    # doesn't serialize the first overlap window
+    for plen in (6, 10):
+        pad = np.zeros((4, plen), np.int32)
+        large.generate(pad, plen, 6)
+    audit = str(tmp_path / "audit.jsonl")
+    eng = ContinuousCascadeEngine(small, large, n_slots=4, tau=1e9,
+                                  min_tokens=2, early_exit=True,
+                                  large_batch=4, large_backend="thread",
+                                  large_max_wait=0.05)
+    res = eng.run(make_requests(prompts, 6, arrivals), 6,
+                  audit_path=audit)
+    assert res.deferred.all()
+    # per-request parity against standalone M_L runs (ragged workloads
+    # have no static reference)
+    for r in res.requests:
+        t, _ = large.generate(r.prompt[None, :], r.prompt_len, 6)
+        np.testing.assert_array_equal(r.tokens, t[0])
+
+    events = [json.loads(l) for l in open(audit)]
+    submits = {e["rid"]: i for i, e in enumerate(events)
+               if e["event"] == "large_submit"}
+    completes = {e["rid"]: i for i, e in enumerate(events)
+                 if e["event"] == "large_complete"}
+    assert set(submits) == set(completes) == set(range(16))
+    interleaved = 0
+    for rid, i in submits.items():
+        j = completes[rid]
+        interleaved += sum(1 for e in events[i + 1:j]
+                           if e["event"] == "step")
+    assert interleaved > 0, "no M_S steps overlapped M_L regeneration"
+    # telemetry saw the M_L queue genuinely backed up mid-run
+    assert res.stats["ml_queue_depth_peak"] > 0
+    assert any(e.get("ml_pending", 0) > 0 for e in events
+               if e["event"] == "step")
+
+
+def test_sync_backend_unchanged_reference(runners):
+    """The sync backend with large_batch=None must stay bit-identical
+    to the static engine (the PR-1 parity guarantee, now routed through
+    the backend layer)."""
+    from repro.serving import CascadeEngine
+    small, large, prompts = runners
+    static = CascadeEngine(small, large)
+    tau = static.calibrate(prompts, 8, 4, deferral_ratio=0.5)
+    sres = static.serve(prompts, 8, 4)
+    cont = ContinuousCascadeEngine(small, large, n_slots=8, tau=tau,
+                                   early_exit=False, large_backend="sync")
+    cres = cont.run(make_requests(prompts, 4), 4)
+    np.testing.assert_array_equal(cres.tokens, sres.tokens)
+    np.testing.assert_array_equal(cres.deferred, sres.deferred)
+    assert cres.stats["ml_backend"] == "sync"
+    # large_batch=None: one exact-size drain batch per prompt length
+    assert cres.stats["ml_batches"] == 1
+    assert cres.stats["ml_batch_occupancy"] == 1.0

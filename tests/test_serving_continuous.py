@@ -11,8 +11,7 @@ from repro.models import transformer as tfm
 from repro.serving import (ArrivalQueue, CascadeEngine,
                            ContinuousCascadeEngine, ModelRunner, Request,
                            SlotCachePool, SlotScheduler, make_requests)
-from repro.serving.cache_pool import scatter_rows
-from repro.serving.request import DONE, PENDING, RUNNING
+from repro.serving.request import DONE, RUNNING
 
 
 @pytest.fixture(scope="module")

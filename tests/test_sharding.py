@@ -4,7 +4,6 @@ import sys
 import os
 import textwrap
 
-import pytest
 
 
 _SCRIPT = textwrap.dedent("""

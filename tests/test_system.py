@@ -7,7 +7,6 @@ We verify this end-to-end at CPU scale on the synthetic classification task.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.cascade import Cascade

@@ -1,5 +1,4 @@
 """Training substrate tests: optimizer, schedules, checkpointing, loop."""
-import os
 import tempfile
 
 import jax
@@ -81,7 +80,6 @@ def test_gatekeeper_stage_reduces_incorrect_confidence():
                             optim.AdamWConfig(lr=3e-3, total_steps=100),
                             loss_kind="gatekeeper",
                             gk_cfg=GatekeeperConfig(alpha=0.2))
-    metrics_before = None
     opt = optim.adamw_init(params)
     batch = {"inputs": jnp.asarray(data.x[:512]),
              "targets": jnp.asarray(data.y[:512])}
