@@ -4,8 +4,16 @@ On CPU the Pallas kernels run in interpret mode (Python — timings are NOT
 hardware-representative); what we measure here is the XLA *fused chunked*
 Gatekeeper loss / entropy path against the naive materialize-[T,V] path,
 plus derived roofline units (bytes avoided) for the TPU target.
+
+Paged serving rows: the dense-gather XLA decode (all M table entries) vs
+the active-prefix gather vs the Pallas paged flash-decode kernel at
+several resident lengths — timed where meaningful, plus the modeled
+HBM bytes/step each path moves on the TPU target — and batched vs
+serial paged prefill-chunk dispatch.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -13,11 +21,115 @@ import numpy as np
 
 from repro.core.deferral import negative_entropy
 from repro.core.gatekeeper import GatekeeperConfig, gatekeeper_loss
+from repro.kernels import ops as kops
 from repro.launch.steps import chunked_gatekeeper_loss, fused_confidence
+from repro.models.attention import gather_blocks
 
 from benchmarks.common import emit_csv_row, save_result, time_call
 
 GK = GatekeeperConfig(alpha=0.3)
+
+
+def bench_paged_decode(key, results):
+    """Per-decoded-token KV traffic of the paged backends. The dense
+    gather reads every table entry (M blocks/row) no matter how short the
+    residents are; the active-prefix gather and the Pallas kernel read
+    only ceil(resident/bs) blocks. CPU timings cover the two XLA paths;
+    the interpret-mode kernel is timed once for reference but its cost
+    model (bytes/step) is the TPU-relevant number."""
+    B, H, KV, hd, bs, max_len = 8, 8, 2, 64, 16, 1024
+    M = max_len // bs
+    N = B * M + 1
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
+    perm = np.random.default_rng(0).permutation(N - 1) + 1
+    tables = jnp.asarray(perm.reshape(B, M), jnp.int32)
+
+    @jax.jit
+    def gather_decode(q, kp, vp, tbl, pos):
+        kk, vv = gather_blocks(kp, tbl), gather_blocks(vp, tbl)
+        S = kk.shape[1]
+        mask = jnp.arange(S)[None, :] <= pos[:, None]
+        qg = q.reshape(B, 1, KV, H // KV, hd)
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, kk) / np.sqrt(hd)
+        s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+        return jnp.einsum("bkgts,bskh->btkgh", jax.nn.softmax(s, -1), vv)
+
+    leaf_bytes = bs * KV * hd * 4 * 2                # k + v, fp32
+    rows = {}
+    for resident in (64, 256, 1024):
+        pos = jnp.full((B,), resident - 1, jnp.int32)
+        mb = math.ceil(resident / bs)
+        t_dense = time_call(
+            lambda: np.asarray(gather_decode(q, kp, vp, tables, pos)))
+        t_active = time_call(
+            lambda: np.asarray(gather_decode(q, kp, vp,
+                                             tables[:, :mb], pos)))
+        row = {
+            "us_xla_dense_gather": t_dense,
+            "us_xla_active_prefix": t_active,
+            "hbm_bytes_step_dense": B * M * leaf_bytes,
+            "hbm_bytes_step_kernel": B * mb * leaf_bytes,
+        }
+        if resident == 64:   # interpret-mode kernel: Python-speed, time once
+            row["us_pallas_interpret"] = time_call(
+                lambda: np.asarray(kops.paged_flash_decode_gqa(
+                    q, kp, vp, tables[:, :mb], pos)), iters=2)
+        rows[f"resident_{resident}"] = row
+        emit_csv_row(f"kernel/paged_decode_r{resident}", t_active,
+                     f"dense={t_dense:.0f}us;"
+                     f"bytes {B * M * leaf_bytes / 1e6:.1f}->"
+                     f"{B * mb * leaf_bytes / 1e6:.1f}MB/step")
+    results["paged_decode"] = rows
+
+
+def bench_batched_prefill(key, results):
+    """Host-dispatch amortization of batched paged prefill: the same
+    8 x [1, C] chunk dispatches packed as 1 x [8, C]."""
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as tfm
+    from repro.sharding import ParallelContext
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = tfm.init_params(cfg, key)
+    ctx = ParallelContext()
+    Bc, C, bs, n_blocks = 8, 16, 8, 64
+    cache = tfm.init_cache(cfg, n_blocks + 1, bs, dtype=cfg.cdtype())
+    M = 4
+    perm = np.random.default_rng(1).permutation(n_blocks)[:Bc * M] + 1
+    tables = jnp.asarray(perm.reshape(Bc, M), jnp.int32)
+    toks = jax.random.randint(jax.random.fold_in(key, 3), (Bc, C), 0,
+                              cfg.vocab_size)
+
+    @jax.jit
+    def chunk(params, tokens, tbl, cache):
+        logits, cache = tfm.prefill(params, cfg, tokens, cache, ctx,
+                                    cache_offset=0, pages=tbl,
+                                    last_index=C - 1)
+        return logits[:, 0, :], cache
+
+    def serial():
+        out = []
+        for i in range(Bc):
+            lg, _ = chunk(params, toks[i:i + 1], tables[i:i + 1], cache)
+            out.append(lg)
+        return np.asarray(jnp.concatenate(out))
+
+    def batched():
+        lg, _ = chunk(params, toks, tables, cache)
+        return np.asarray(lg)
+
+    t_serial = time_call(serial)
+    t_batched = time_call(batched)
+    results["batched_prefill"] = {
+        "us_serial_8x1": t_serial, "us_batched_1x8": t_batched,
+        "dispatches_serial": Bc, "dispatches_batched": 1,
+        "speedup": t_serial / max(t_batched, 1e-9),
+    }
+    emit_csv_row("kernel/batched_prefill", t_batched,
+                 f"serial={t_serial:.0f}us;"
+                 f"{t_serial / max(t_batched, 1e-9):.2f}x")
 
 
 def run():
@@ -86,6 +198,9 @@ def run():
     emit_csv_row("kernel/wkv_chunked", t_chunk,
                  f"naive_scan={t_scan:.0f}us;"
                  f"state_traffic_avoided={state_traffic/1e6:.0f}MB")
+
+    bench_paged_decode(jax.random.fold_in(key, 11), results)
+    bench_batched_prefill(jax.random.fold_in(key, 12), results)
 
     save_result("kernels", results)
     return results

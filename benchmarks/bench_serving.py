@@ -11,9 +11,13 @@ Scenarios (same models, same calibrated tau, same prompts):
                         confidence drops below tau are evicted early,
                         freeing their slot for the next arrival
   * paged[+exit]      — (--backend paged) the same engine over the
-                        block-paged cache with chunked prefill; reported
-                        with its cache footprint next to the slot pool's
-                        so the memory win on ragged traffic is visible
+                        block-paged cache with chunked prefill (batched
+                        same-offset dispatch by default, --serial-prefill
+                        for the old one-request-per-iteration loop;
+                        --paged-kernel routes decode through the Pallas
+                        paged flash-decode kernels); reported with its
+                        cache footprint next to the slot pool's so the
+                        memory win on ragged traffic is visible
   * continuous+thread — in-flight deferral with the THREADED M_L backend:
                         deferrals stream to a worker thread that batches
                         (large_batch rows or --large-max-wait seconds)
@@ -125,6 +129,9 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
     if "peak_blocks" in s:
         row["peak_blocks"] = s["peak_blocks"]
         row["n_blocks"] = s["n_blocks"]
+        row["prefill_dispatches"] = s["prefill_dispatches"]
+        row["prefill_chunks"] = s["prefill_chunks"]
+        row["paged_kernel"] = s["paged_kernel"]
     return row
 
 
@@ -134,7 +141,9 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         backend: str = "slot", block_size: int = 8,
         n_blocks: Optional[int] = None, prefill_chunk: int = 8,
         ragged_min: int = 0, ragged_max: int = 0,
-        large_max_wait: float = 0.02) -> Dict:
+        large_max_wait: float = 0.02,
+        paged_kernel: Optional[bool] = None,
+        batch_prefill: bool = True) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
     # comparable to `repro.launch.serve`
@@ -226,7 +235,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
                 min_tokens=min_tokens, margin=margin, early_exit=exit_,
                 large_batch=slots, steps_per_sync=4, backend="paged",
                 block_size=block_size, n_blocks=n_blocks,
-                prefill_chunk=prefill_chunk or None)
+                prefill_chunk=prefill_chunk or None,
+                paged_kernel=paged_kernel, batch_prefill=batch_prefill)
             rows.append(best_of(lambda e=eng, l=label: run_continuous(
                 e, fresh(), max_new, l)))
 
@@ -256,13 +266,18 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
               f"({paged_row['n_blocks']} x {block_size}-token blocks, peak "
               f"{paged_row['peak_blocks']} mapped); a dense pool in the "
               f"paged budget would hold only {dense_rows} worst-case rows")
+        print(f"# paged prefill: {paged_row['prefill_chunks']} chunks in "
+              f"{paged_row['prefill_dispatches']} dispatches "
+              f"({'batched' if batch_prefill else 'serial'}; "
+              f"kernel={'pallas' if paged_row.get('paged_kernel') else 'xla'})")
     payload = {"tau": tau, "config": {
         "n_requests": n_requests, "prompt_len": prompt_len,
         "max_new": max_new, "slots": slots, "rate": rate,
         "target_deferral": target_deferral, "backend": backend,
         "block_size": block_size, "n_blocks": n_blocks,
         "ragged_min": ragged_min, "ragged_max": ragged_max,
-        "large_max_wait": large_max_wait}, "rows": rows}
+        "large_max_wait": large_max_wait, "paged_kernel": paged_kernel,
+        "batch_prefill": batch_prefill}, "rows": rows}
     save_result("serving", payload)
     for r in rows:
         emit_csv_row(f"serving/{r['engine']}",
@@ -350,6 +365,14 @@ def main():
     ap.add_argument("--large-max-wait", type=float, default=0.02,
                     help="threaded M_L backend: seconds a partial batch "
                          "may wait before flushing")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="route paged decode through the Pallas paged "
+                         "flash-decode kernels (interpret mode on CPU — "
+                         "Python-speed; for kernel-path measurement, not "
+                         "CI gating)")
+    ap.add_argument("--serial-prefill", action="store_true",
+                    help="disable batched paged prefill (one request's "
+                         "chunk per engine iteration, the old loop)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--bench-out", default=None,
                     help="write the machine-readable bench record "
@@ -368,7 +391,8 @@ def main():
                   args.target_deferral, args.rate, args.seed, args.margin,
                   args.min_tokens, args.backend, args.block_size,
                   args.blocks or None, args.prefill_chunk,
-                  args.ragged_min, args.ragged_max, args.large_max_wait)
+                  args.ragged_min, args.ragged_max, args.large_max_wait,
+                  args.paged_kernel or None, not args.serial_prefill)
     record = bench_record(payload)
     if args.bench_out:
         with open(args.bench_out, "w") as f:

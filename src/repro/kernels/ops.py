@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import deferral_entropy as _de
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gatekeeper_loss as _gk
+from repro.kernels import paged_attention as _pa
 
 
 def _default_interpret() -> bool:
@@ -22,6 +23,22 @@ def _default_interpret() -> bool:
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() == "cpu"
+
+
+def paged_kernel_enabled(override: Optional[bool] = None) -> bool:
+    """Should the paged decode paths use the Pallas kernels?
+
+    Resolution order: explicit `override` (engine config / function arg)
+    > REPRO_PAGED_KERNEL env var > backend default (on for TPU, off for
+    CPU — interpret-mode kernels are Python-speed, so the XLA gather
+    fallback stays the CPU default; set REPRO_PAGED_KERNEL=1 to force
+    the kernel path, e.g. for interpret-mode parity runs)."""
+    if override is not None:
+        return bool(override)
+    env = os.environ.get("REPRO_PAGED_KERNEL")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
 
 
 def _pad_tokens(x, tb):
@@ -74,6 +91,43 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     interpret = _default_interpret() if interpret is None else interpret
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                qb=qb, kb=kb, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_decode_gqa(q, k_pages, v_pages, tables, positions, *,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None):
+    """One-token GQA attention directly against the block-paged cache
+    (see paged_attention.py). q [B,1,H,hd]; k/v_pages [N, bs, KV, hd];
+    tables [B, M]; positions [B]. No dense gather is materialized."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pa.paged_flash_decode_gqa(q, k_pages, v_pages, tables,
+                                      positions, scale=scale,
+                                      interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "eps", "interpret"))
+def paged_flash_decode_mla(q_abs, q_rope, ckv_pages, kr_pages, kv_norm,
+                           tables, positions, *, scale: float,
+                           eps: float = 1e-6,
+                           interpret: Optional[bool] = None):
+    """Weight-absorbed MLA decode against the paged compressed cache;
+    returns the latent context [B,1,H,kv_lora] (caller applies W_uv/W_o)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pa.paged_flash_decode_mla(q_abs, q_rope, ckv_pages, kr_pages,
+                                      kv_norm, tables, positions,
+                                      scale=scale, eps=eps,
+                                      interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_write_token(leaf, tables, positions, values, *,
+                      interpret: Optional[bool] = None):
+    """Single-token paged scatter through the page table (in-kernel
+    replacement for the XLA `_paged_write` on the decode hot path)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pa.paged_write_token(leaf, tables, positions, values,
+                                 interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

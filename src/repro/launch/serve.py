@@ -8,7 +8,9 @@ Two engines (see repro.serving):
                   (saves the remaining M_S steps), over one of two KV
                   backends: --backend slot (dense worst-case rows) or
                   --backend paged (block-paged cache, ragged prompts,
-                  chunked prefill; size the budget with --blocks)
+                  chunked prefill batched across same-offset requests;
+                  size the budget with --blocks, pick the Pallas paged
+                  flash-decode kernel with --paged-kernel)
 
 Deferred requests regenerate on a pluggable M_L backend
 (--large-backend): sync runs M_L inline on the decode loop (reference);
@@ -95,6 +97,15 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="paged backend: prefill chunk tokens "
                          "(0 = whole prompt in one chunk)")
+    ap.add_argument("--paged-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="paged backend: route decode through the Pallas "
+                         "paged flash-decode kernels (auto = on for TPU, "
+                         "XLA gather fallback on CPU; env "
+                         "REPRO_PAGED_KERNEL overrides auto)")
+    ap.add_argument("--serial-prefill", action="store_true",
+                    help="paged backend: disable batched same-offset "
+                         "prefill chunk dispatch (debug/parity)")
     ap.add_argument("--ragged-min", type=int, default=0,
                     help=">0: ragged prompt lengths uniform in "
                          "[ragged-min, ragged-max] (continuous engine)")
@@ -144,7 +155,10 @@ def main():
         stub_latency=args.stub_latency,
         backend=args.backend, block_size=args.block_size,
         n_blocks=args.blocks or None,
-        prefill_chunk=args.prefill_chunk or None)
+        prefill_chunk=args.prefill_chunk or None,
+        paged_kernel={"auto": None, "on": True,
+                      "off": False}[args.paged_kernel],
+        batch_prefill=not args.serial_prefill)
     tau = engine.calibrate(cal, cal_len, args.max_new,
                            args.deferral_ratio)
     print(f"calibrated tau={tau:.4f} for target deferral "

@@ -18,6 +18,20 @@ Cache layouts (per layer-sliced leaf):
   Paged mode is selected by passing `pages`; sliding-window ring caches
   cannot be paged (serving.paged_pool rejects those configs).
 
+Paged DECODE has two interchangeable implementations (same masked
+softmax, pinned by tests/test_paged_kernel.py):
+  * XLA fallback (default on CPU) — `gather_blocks` materializes the
+    dense view, then dense attention. Callers tighten it by passing a
+    page table sliced to the active block prefix (the serving engine
+    buckets `ceil((max_pos + steps)/block_size)` to a power of two so
+    only O(log M) shapes ever compile) — the gather then reads only
+    blocks the mask can reach.
+  * Pallas kernel (default on TPU; kernels/paged_attention.py) — walks
+    the page table inside the kernel, one block per kv grid step, no
+    dense view in HBM; the single-token cache write is also a kernel.
+  Selection: the `paged_kernel` argument when given, else the
+  REPRO_PAGED_KERNEL env var, else backend default (kernels/ops.py).
+
 Sharding: head dims carry logical axis "heads"/"kv_heads" (→ `model`);
 the output projection contracts the sharded head axis, so XLA inserts the
 canonical tensor-parallel all-reduce after each attention block.
@@ -31,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kernel_ops
 from repro.models.common import (ParamFactory, apply_rope, make_causal_mask,
                                  make_sliding_mask, rms_norm)
 from repro.sharding import ParallelContext
@@ -70,6 +85,11 @@ def gather_blocks(leaf: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     concatenated in logical order. Unmapped entries point at the trash
     block (id 0); the positions they contribute lie beyond the row's valid
     prefix and are removed by the caller's `idx <= pos` mask.
+
+    Decode callers pass `pages` sliced to the ACTIVE block prefix
+    (columns `[0, ceil((max_pos + steps)/block_size))`, bucketed) so the
+    gather never reads blocks the validity mask cannot reach — the
+    masked softmax over the shorter view is exactly the full-view one.
     """
     B, M = pages.shape
     g = jnp.take(leaf, pages.reshape(-1), axis=0)        # [B*M, bs, ...]
@@ -335,7 +355,8 @@ def _flash_decode_sharded(q, ck, cv, mask, scale, ctx: ParallelContext):
 
 def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                position, cache: dict, ctx: ParallelContext,
-               pages: Optional[jnp.ndarray] = None
+               pages: Optional[jnp.ndarray] = None,
+               paged_kernel: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x [B,1,d]; position is either a scalar int (whole
     batch at the same depth — the static serving engine) or an int vector
@@ -345,9 +366,11 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
 
     With `pages` [B, M] the cache is block-paged: the new K/V scatters to
     (pages[b, pos // block_size], pos % block_size) and attention runs
-    over the gathered logical view with the same `idx <= pos` mask —
-    token-identical to the dense path over a valid prefix. Requires
-    per-row positions.
+    over each row's valid prefix with the `idx <= pos` mask —
+    token-identical to the dense path. Requires per-row positions.
+    `paged_kernel` picks the Pallas paged flash-decode kernel (walks the
+    page table in-kernel, no dense gather) vs the XLA gather fallback;
+    None = REPRO_PAGED_KERNEL env / backend default.
 
     For sliding-window configs the cache is a ring buffer of size `window`;
     the write slot is position % window and relative order is handled by
@@ -371,13 +394,26 @@ def gqa_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     if pages is not None:
         assert per_row and cfg.sliding_window is None, \
             "paged decode needs per-row positions and no sliding window"
-        ck = _paged_write(cache["k"], pages, pos[:, None], k[:, 0:1])
-        cv = _paged_write(cache["v"], pages, pos[:, None], v[:, 0:1])
-        kk = gather_blocks(ck, pages)
-        vv = gather_blocks(cv, pages)
-        mask = (jnp.arange(kk.shape[1])[None, :] <= pos[:, None])[:, None, :]
-        out = _attend(q, kk.astype(q.dtype), vv.astype(q.dtype), mask, scale,
-                      ctx)
+        if kernel_ops.paged_kernel_enabled(paged_kernel):
+            # Pallas path: in-kernel paged write + flash-decode walking
+            # the page table — no dense [B, M*bs, ...] view in HBM
+            ck = kernel_ops.paged_write_token(cache["k"], pages, pos,
+                                              k[:, 0])
+            cv = kernel_ops.paged_write_token(cache["v"], pages, pos,
+                                              v[:, 0])
+            out = kernel_ops.paged_flash_decode_gqa(q, ck, cv, pages, pos,
+                                                    scale=scale)
+        else:
+            # XLA fallback / parity reference: scatter + dense gather of
+            # the (caller-tightened) active block prefix
+            ck = _paged_write(cache["k"], pages, pos[:, None], k[:, 0:1])
+            cv = _paged_write(cache["v"], pages, pos[:, None], v[:, 0:1])
+            kk = gather_blocks(ck, pages)
+            vv = gather_blocks(cv, pages)
+            mask = (jnp.arange(kk.shape[1])[None, :]
+                    <= pos[:, None])[:, None, :]
+            out = _attend(q, kk.astype(q.dtype), vv.astype(q.dtype), mask,
+                          scale, ctx)
         y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
                        preferred_element_type=jnp.float32).astype(x.dtype)
         return y, {"k": ck, "v": cv}
@@ -585,7 +621,8 @@ def mla_forward(params: dict, cfg: AttnConfig, x: jnp.ndarray,
 
 def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
                position, cache: dict, ctx: ParallelContext,
-               pages: Optional[jnp.ndarray] = None
+               pages: Optional[jnp.ndarray] = None,
+               paged_kernel: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, dict]:
     """Weight-absorbed decode: scores/values computed directly against the
     compressed cache — per-step FLOPs and cache reads are O(kv_lora), not
@@ -593,7 +630,9 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
 
     `position` is a scalar or an int vector [B] of per-row depths
     (continuous batching), mirroring `gqa_decode`. `pages` [B, M] selects
-    the block-paged cache layout (requires per-row positions)."""
+    the block-paged cache layout (requires per-row positions);
+    `paged_kernel` picks the Pallas paged flash-decode kernel over the
+    XLA gather fallback (None = env / backend default, see ops.py)."""
     B, T, d = x.shape
     assert T == 1
     dn, dr, dv = cfg.head_dim, cfg.rope_dim, cfg.v_head_dim or cfg.head_dim
@@ -604,6 +643,23 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     ckv_new = jnp.einsum("btd,dr->btr", x, params["wdkv"])
     kr_new = apply_rope(jnp.einsum("btd,dk->btk", x, params["wkr"])[:, :, None, :],
                         pos_bt, cfg.rope_theta)[:, :, 0, :]
+    scale = 1.0 / np.sqrt(dn + dr)
+    if pages is not None and kernel_ops.paged_kernel_enabled(paged_kernel):
+        assert per_row, "paged decode needs per-row positions"
+        cckv = kernel_ops.paged_write_token(cache["ckv"], pages, pos,
+                                            ckv_new[:, 0])
+        ckr = kernel_ops.paged_write_token(cache["kr"], pages, pos,
+                                           kr_new[:, 0])
+        # absorb W_uk into q; the kernel rms-norms each ckv block in
+        # fp32 and returns the latent context — no dense gather
+        q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["wuk"])
+        ctx_lat = kernel_ops.paged_flash_decode_mla(
+            q_abs, q_rope, cckv, ckr, params["kv_norm"], pages, pos,
+            scale=scale).astype(x.dtype)
+        out = jnp.einsum("bthr,rhk->bthk", ctx_lat, params["wuv"])
+        y = jnp.einsum("bthk,hkd->btd", out, params["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        return y, {"ckv": cckv, "kr": ckr}
     if pages is not None:
         assert per_row, "paged decode needs per-row positions"
         cckv = _paged_write(cache["ckv"], pages, pos[:, None], ckv_new)
@@ -627,7 +683,6 @@ def mla_decode(params: dict, cfg: AttnConfig, x: jnp.ndarray,
     ckv_n = rms_norm(ckv_seq.astype(x.dtype), params["kv_norm"])
     # absorb W_uk into q: q_abs [B,1,H,kv_lora]
     q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["wuk"])
-    scale = 1.0 / np.sqrt(dn + dr)
     scores = (jnp.einsum("bthr,bsr->bhts", q_abs, ckv_n,
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bthk,bsk->bhts", q_rope, kr_seq.astype(x.dtype),

@@ -213,16 +213,17 @@ def _maybe_remat(fn, cfg: ModelConfig):
 
 def _attn_ffn_block(p, cfg: ModelConfig, x, positions, ctx,
                     cache=None, cache_offset=0, decode=False, position=None,
-                    ffn_kind="mlp", pages=None):
+                    ffn_kind="mlp", pages=None, paged_kernel=None):
     """One pre-norm transformer block (attention or MLA + dense/MoE FFN).
     Returns (x, new_cache, aux). `pages` selects the block-paged cache
-    layout (see models.attention)."""
+    layout; `paged_kernel` the Pallas-vs-XLA paged decode implementation
+    (see models.attention)."""
     ac = attn_config(cfg)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if decode:
         fwd = attn_lib.mla_decode if cfg.mla else attn_lib.gqa_decode
         y, new_cache = fwd(p["attn"], ac, h, position, cache, ctx,
-                           pages=pages)
+                           pages=pages, paged_kernel=paged_kernel)
     else:
         fwd = attn_lib.mla_forward if cfg.mla else attn_lib.gqa_forward
         y, new_cache = fwd(p["attn"], ac, h, positions, ctx, cache,
@@ -278,11 +279,12 @@ def _scan_group(block_fn, stacked_params, x, stacked_cache, cfg: ModelConfig):
 
 def _trunk(params, cfg: ModelConfig, x, positions, ctx,
            cache=None, cache_offset=0, decode=False, position=None,
-           pages=None):
+           pages=None, paged_kernel=None):
     """Runs all layer groups. x [B,T,d] embeddings. Returns (x, cache, aux).
     `pages` [B, M] routes attention caches through a page table (the
     physical block storage is shared by value, the table by structure:
-    every stacked layer's leaf is indexed by the same table)."""
+    every stacked layer's leaf is indexed by the same table);
+    `paged_kernel` selects the Pallas paged-decode kernels per layer."""
     blocks = params["blocks"]
     new_cache: Dict[str, Any] = {}
     aux_total = jnp.zeros((), jnp.float32)
@@ -295,7 +297,7 @@ def _trunk(params, cfg: ModelConfig, x, positions, ctx,
             return _attn_ffn_block(p, cfg, x_, positions, ctx, c_,
                                    cache_offset, decode, position,
                                    ffn_kind=("moe" if _kind == "moe" else "mlp"),
-                                   pages=pages)
+                                   pages=pages, paged_kernel=paged_kernel)
         c = cache.get(kind) if cache is not None else None
         x, nc, aux = _scan_group(block_fn, blocks[kind], x, c, cfg)
         if nc is not None:
@@ -422,18 +424,21 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: ParallelContext,
 
 
 def decode_step(params, cfg: ModelConfig, token, position, cache,
-                ctx: ParallelContext, pages=None):
+                ctx: ParallelContext, pages=None, paged_kernel=None):
     """One-token decode. token [B] or [B,1]; position scalar OR int vector
     [B] of per-row decode depths (continuous batching over a slot pool —
     each row attends/writes at its own position). `pages` [B, M] routes
     the per-row cache access through a page table (block-paged backend;
-    requires vector positions). Returns (logits [B, V], cache)."""
+    requires vector positions); `paged_kernel` picks the Pallas paged
+    flash-decode kernels over the XLA gather fallback (None = env /
+    backend default). Returns (logits [B, V], cache)."""
     if token.ndim == 1:
         token = token[:, None]
     x = _embed_inputs(params, cfg, token, None, ctx)
     pos = jnp.asarray(position)
     positions = pos[:, None] if pos.ndim == 1 else jnp.full((1, 1), position)
     x, new_cache, _ = _trunk(params, cfg, x, positions, ctx, cache=cache,
-                             decode=True, position=position, pages=pages)
+                             decode=True, position=position, pages=pages,
+                             paged_kernel=paged_kernel)
     logits = _logits(params, cfg, x, ctx)
     return logits[:, 0, :], new_cache

@@ -59,11 +59,12 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.core.calibration import (expected_compute_cost,
                                     threshold_for_deferral_ratio)
+from repro.kernels import ops as kernel_ops
 from repro.models import transformer as tfm
 from repro.serving.cache_pool import (SlotCachePool, cache_batch_axes,
                                       scatter_rows)
 from repro.serving.large_backend import make_large_backend
-from repro.serving.paged_pool import PagedCachePool
+from repro.serving.paged_pool import PagedCachePool, next_pow2
 from repro.serving.request import (DEFERRED_PENDING, DONE, ArrivalQueue,
                                    Request, make_requests)
 from repro.serving.scheduler import SlotScheduler
@@ -232,6 +233,26 @@ class ContinuousCascadeEngine:
     gates the FIFO head on worst-case block reservation so an admitted
     request can never run out of cache mid-flight (no preemption path).
 
+    Paged hot-path controls:
+
+    * ``paged_kernel`` — True routes paged decode through the Pallas
+      paged flash-decode kernels (kernels/paged_attention.py: page-table
+      walk in-kernel, no dense gather); False forces the XLA gather
+      fallback; None (default) defers to REPRO_PAGED_KERNEL / backend
+      default (kernel on TPU, fallback on CPU).
+    * every decode step slices the page table to the bucketed ACTIVE
+      block prefix (`pool.active_prefix_blocks`), so both paths touch
+      only `ceil((max_pos + steps_per_sync)/block_size)` blocks per row
+      instead of all `max_blocks` — the dominant per-token HBM saving
+      when residents are short.
+    * ``batch_prefill`` (default True) packs same-offset prefill chunks
+      of different mid-prefill requests into ONE `[B_chunk, C]` dispatch
+      (per-row page tables + per-row last-index; B_chunk bucketed to a
+      power of two with trash-table pad rows), instead of one request
+      per engine iteration — at high arrival rates the host dispatch
+      count per prompt token drops by ~the batch width. False restores
+      the serial one-request-per-iteration loop (parity reference).
+
     M_L regeneration goes through a pluggable `large_backend`
     (``"sync"`` — inline on the decode loop, the reference path;
     ``"thread"`` — a worker thread that overlaps M_L batches with M_S
@@ -265,6 +286,8 @@ class ContinuousCascadeEngine:
                  block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 paged_kernel: Optional[bool] = None,
+                 batch_prefill: bool = True,
                  cost_small: float = 0.2, cost_large: float = 1.0):
         if backend not in ("slot", "paged"):
             raise ValueError(f"backend must be 'slot' or 'paged', "
@@ -285,6 +308,8 @@ class ContinuousCascadeEngine:
         self.block_size = block_size
         self.n_blocks = n_blocks
         self.prefill_chunk = prefill_chunk
+        self.paged_kernel = paged_kernel
+        self.batch_prefill = batch_prefill
         self.cost_small = cost_small
         self.cost_large = cost_large
         self._fns: Dict[Tuple, Tuple] = {}
@@ -299,21 +324,25 @@ class ContinuousCascadeEngine:
         return self.tau
 
     # -- jitted device programs -------------------------------------------
-    def _decode_body(self, params, cache, state, pages, max_new):
+    def _decode_body(self, params, cache, state, pages, max_new,
+                     paged_kernel=None):
         """One decode step over ALL slots at per-slot positions; inactive
         slots compute but their state/cache rows are inert. Slots
         self-deactivate when n_gen reaches their budget so multi-step
         chunks never decode past a request's max_new. In paged mode the
         page table rows of inactive slots are masked to the trash block,
         so a stale `pos` from a previous tenant can never scribble into a
-        block that now belongs to someone else."""
+        block that now belongs to someone else; `pages` arrives already
+        sliced to the bucketed active block prefix, and `paged_kernel`
+        picks Pallas flash-decode vs the XLA gather fallback."""
         cfg, ctx = self.small.cfg, self.small.ctx
         n_slots = state["active"].shape[0]
         if pages is not None:
             pages = jnp.where(state["active"][:, None], pages, 0)
         logits, cache = tfm.decode_step(params, cfg, state["last_tok"],
                                         state["pos"], cache, ctx,
-                                        pages=pages)
+                                        pages=pages,
+                                        paged_kernel=paged_kernel)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         neg_ent = _neg_entropy(logits)
         act = state["active"]
@@ -375,20 +404,21 @@ class ContinuousCascadeEngine:
 
         return jax.jit(admit_fn), jax.jit(step_fn)
 
-    def _build_paged_fns(self, max_new: int):
+    def _build_paged_fns(self, max_new: int, paged_kernel: bool):
         """Jitted (prefill_chunk, finish, step) triple for the paged
-        backend. `prefill_chunk` runs ONE chunk of ONE prompt through the
-        trunk at a traced cache offset, scattering K/V through the
-        request's page-table row; `finish` seeds the slot's decode state
-        from the final chunk's last-real-position logits; `step` mirrors
-        the slot backend but routes every cache access through the page
-        table."""
+        backend. `prefill_chunk` runs one `[B_chunk, C]` batch of
+        same-offset chunks through the trunk at a traced cache offset,
+        each row scattering K/V through its own page-table row (serial
+        mode is just B_chunk == 1); `finish` seeds a slot's decode state
+        from its row's last-real-position logits; `step` mirrors the slot
+        backend but routes every cache access through the (active-prefix
+        sliced) page table, via Pallas kernels when `paged_kernel`."""
         cfg, ctx = self.small.cfg, self.small.ctx
 
-        def prefill_chunk_fn(params, tokens, table, offset, last_index,
+        def prefill_chunk_fn(params, tokens, tables, offset, last_index,
                              cache):
             logits, cache = tfm.prefill(params, cfg, tokens, cache, ctx,
-                                        cache_offset=offset, pages=table,
+                                        cache_offset=offset, pages=tables,
                                         last_index=last_index)
             return logits[:, 0, :], cache
 
@@ -410,7 +440,8 @@ class ContinuousCascadeEngine:
             def one(carry, _):
                 params, cache, state = carry
                 cache, state = self._decode_body(params, cache, state,
-                                                 tables, max_new)
+                                                 tables, max_new,
+                                                 paged_kernel=paged_kernel)
                 return (params, cache, state), None
             (_, cache, state), _ = jax.lax.scan(
                 one, (params, cache, state), None,
@@ -473,10 +504,12 @@ class ContinuousCascadeEngine:
                     f"n_blocks={n_blocks} cannot hold the largest request "
                     f"({biggest} blocks of {bs}); raise n_blocks")
             pool = PagedCachePool(cfg, self.n_slots, n_blocks, bs, max_len)
-            fkey = ("paged", max_new, n_blocks, bs, pool.max_blocks)
+            use_kernel = kernel_ops.paged_kernel_enabled(self.paged_kernel)
+            fkey = ("paged", max_new, n_blocks, bs, pool.max_blocks,
+                    use_kernel)
             fns = self._fns.get(fkey)
             if fns is None:
-                fns = self._build_paged_fns(max_new)
+                fns = self._build_paged_fns(max_new, use_kernel)
                 self._fns[fkey] = fns
             prefill_fn, finish_fn, step_fn = fns
         else:
@@ -507,6 +540,7 @@ class ContinuousCascadeEngine:
         prefilling: List[List] = []
         n_steps = 0
         n_prefill_chunks = 0
+        n_prefill_dispatches = 0
         peak_active = 0
         ml = make_large_backend(self.large_backend, self.large, max_new,
                                 self.large_batch, self.large_max_wait,
@@ -600,31 +634,53 @@ class ContinuousCascadeEngine:
                                              state)
 
         def run_prefill_chunk():
-            """Paged backend: run ONE chunk of the oldest mid-prefill
-            request, so long prompts interleave with resident decode
-            steps instead of stalling them."""
-            nonlocal state, n_prefill_chunks
-            req, slot, off = prefilling[0]
-            P = req.prompt_len
-            C = self.prefill_chunk or P
-            chunk = req.prompt[off:off + C]
-            if chunk.shape[0] < C:       # right-pad the final chunk; the
-                chunk = np.concatenate(  # padded K/V lands in the trash
-                    [chunk, np.zeros(C - chunk.shape[0], np.int32)])
-            last_index = min(P - 1 - off, C - 1)
-            logits, pool.cache = prefill_fn(
-                self.small.params, jnp.asarray(chunk)[None, :],
-                pool.tables_device()[slot][None, :], off, last_index,
-                pool.cache)
-            n_prefill_chunks += 1
-            if off + C >= P:             # final chunk: seed decode state
-                state = finish_fn(state, slot, logits, req.max_new, P)
-                prefilling.pop(0)
-                tel.event("prefill_done", rid=req.rid, slot=slot,
-                          chunks=math.ceil(P / C))
-                sync_retire()            # max_new == 1: already finished
+            """Paged backend: run one chunk of the oldest mid-prefill
+            request — PLUS, with `batch_prefill`, the same-offset chunks
+            of every other mid-prefill request — in a single dispatch,
+            so long prompts interleave with resident decode steps and
+            simultaneous arrivals don't serialize on host overhead."""
+            nonlocal state, n_prefill_chunks, n_prefill_dispatches
+            head_req, _, off0 = prefilling[0]
+            C = self.prefill_chunk or head_req.prompt_len
+            if self.batch_prefill:
+                # pack every request at the head's offset whose chunk
+                # width matches (differing widths only arise with
+                # prefill_chunk=None, where C is the prompt length)
+                group = [e for e in prefilling if e[2] == off0
+                         and (self.prefill_chunk or e[0].prompt_len) == C]
             else:
-                prefilling[0][2] = off + C
+                group = [prefilling[0]]
+            k = len(group)
+            # bucket the dispatch width to a power of two: pad rows
+            # write to the trash block, their logits are ignored
+            Bc = next_pow2(k)
+            chunks = np.zeros((Bc, C), np.int32)
+            tbl = np.zeros((Bc, pool.max_blocks), np.int32)
+            last_idx = np.zeros((Bc,), np.int32)
+            for i, (req, slot, off) in enumerate(group):
+                piece = req.prompt[off:off + C]
+                chunks[i, :piece.shape[0]] = piece  # right-pad final chunk;
+                tbl[i] = pool.tables[slot]          # padded K/V -> trash
+                last_idx[i] = min(req.prompt_len - 1 - off, C - 1)
+            logits, pool.cache = prefill_fn(
+                self.small.params, jnp.asarray(chunks), jnp.asarray(tbl),
+                off0, jnp.asarray(last_idx), pool.cache)
+            n_prefill_dispatches += 1
+            n_prefill_chunks += k
+            finished = False
+            for i, entry in enumerate(group):
+                req, slot, off = entry
+                if off + C >= req.prompt_len:   # final chunk: seed decode
+                    state = finish_fn(state, slot, logits[i:i + 1],
+                                      req.max_new, req.prompt_len)
+                    prefilling.remove(entry)
+                    tel.event("prefill_done", rid=req.rid, slot=slot,
+                              chunks=math.ceil(req.prompt_len / C))
+                    finished = True
+                else:
+                    entry[2] = off + C
+            if finished:
+                sync_retire()            # max_new == 1: already finished
 
         def decoding_slots() -> List[int]:
             mid_prefill = {s for _, s, _ in prefilling}
@@ -669,15 +725,21 @@ class ContinuousCascadeEngine:
                 if decoding:
                     if paged:
                         pos_host = np.asarray(state["pos"])
+                        need = 1
                         for slot in decoding:
                             req = sched.running[slot]
                             total = req.prompt_len + req.max_new - 1
-                            pool.ensure_mapped(
-                                slot, min(int(pos_host[slot])
-                                          + self.steps_per_sync, total))
+                            cover = min(int(pos_host[slot])
+                                        + self.steps_per_sync, total)
+                            pool.ensure_mapped(slot, cover)
+                            need = max(need, cover)
+                        # active-prefix tightening: hand the jitted step
+                        # only the bucketed block prefix the masks can
+                        # reach — the gather/kernel walk shrinks with it
+                        mb = pool.active_prefix_blocks(need)
                         pool.cache, state = step_fn(self.small.params,
                                                     pool.cache, state,
-                                                    pool.tables_device())
+                                                    pool.tables_device(mb))
                     else:
                         pool.cache, state = step_fn(self.small.params,
                                                     pool.cache, state)
@@ -724,7 +786,9 @@ class ContinuousCascadeEngine:
             stats.update(block_size=self.block_size,
                          n_blocks=pool.n_blocks,
                          peak_blocks=pool.peak_mapped,
-                         prefill_chunks=n_prefill_chunks)
+                         prefill_chunks=n_prefill_chunks,
+                         prefill_dispatches=n_prefill_dispatches,
+                         paged_kernel=use_kernel)
         result = ContinuousServeResult(
             requests=reqs,
             tokens=np.stack([r.tokens for r in reqs]),

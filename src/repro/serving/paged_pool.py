@@ -37,7 +37,7 @@ paged; construction raises with a clear message.
 from __future__ import annotations
 
 import math
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +47,16 @@ from repro.configs import ModelConfig
 from repro.models import transformer as tfm
 from repro.models.attention import gather_blocks
 from repro.serving.cache_pool import _is_abstract
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — the shared bucketing policy
+    for jit-shape control (active-prefix table slicing, batched prefill
+    dispatch width): O(log n) distinct shapes ever compile."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def validate_pageable(cfg: ModelConfig, max_len: int) -> None:
@@ -133,6 +143,7 @@ class PagedCachePool:
         self.generations = [0] * n_slots
         self.peak_mapped = 0                          # high-water block usage
         self._tables_dev = jnp.asarray(self.tables)
+        self._tables_prefix_cache: dict = {}
         self._tables_dirty = False
 
     # -- capacity / accounting --------------------------------------------
@@ -230,13 +241,31 @@ class PagedCachePool:
             self.peak_mapped = max(self.peak_mapped, self.n_mapped_total)
         return newly
 
-    def tables_device(self) -> jnp.ndarray:
+    def active_prefix_blocks(self, n_tokens: int) -> int:
+        """Logical blocks needed to cover `n_tokens` cache entries,
+        bucketed UP to a power of two (and clamped to `max_blocks`) so
+        table-prefix slicing compiles only O(log max_blocks) shapes.
+        The decode paths gather/walk only this prefix instead of all
+        `max_blocks` table entries — the active-prefix tightening."""
+        return min(next_pow2(self.blocks_for(n_tokens)), self.max_blocks)
+
+    def tables_device(self, prefix: Optional[int] = None) -> jnp.ndarray:
         """Device copy of the page table, refreshed only when the host
-        table changed since the last call."""
+        table changed since the last call. `prefix` returns only the
+        first `prefix` logical-block columns (see
+        `active_prefix_blocks`); each distinct prefix is cached until
+        the next table mutation."""
         if self._tables_dirty:
             self._tables_dev = jnp.asarray(self.tables)
+            self._tables_prefix_cache = {}
             self._tables_dirty = False
-        return self._tables_dev
+        if prefix is None or prefix >= self.max_blocks:
+            return self._tables_dev
+        got = self._tables_prefix_cache.get(prefix)
+        if got is None:
+            got = jnp.asarray(self.tables[:, :prefix])
+            self._tables_prefix_cache[prefix] = got
+        return got
 
     # -- invariants (tests) ------------------------------------------------
     def check_invariants(self) -> None:
