@@ -131,8 +131,22 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         row["n_blocks"] = s["n_blocks"]
         row["prefill_dispatches"] = s["prefill_dispatches"]
         row["prefill_chunks"] = s["prefill_chunks"]
+        row["prefill_tokens"] = s["prefill_tokens"]
+        row["shared_tokens"] = s["shared_tokens"]
+        row["cow_clones"] = s["cow_clones"]
         row["paged_kernel"] = s["paged_kernel"]
     return row
+
+
+def make_shared_prefix_stream(key, n: int, prefix_len: int,
+                              suffix_len: int, vocab: int) -> List:
+    """`n` prompts sharing one `prefix_len`-token prefix (a system
+    prompt / few-shot header) with distinct `suffix_len`-token tails."""
+    base = np.asarray(make_lm_stream(key, n + 1, prefix_len + suffix_len,
+                                     vocab))
+    prefix = base[0, :prefix_len]
+    return [np.concatenate([prefix, base[i + 1, prefix_len:]]
+                           ).astype(np.int32) for i in range(n)]
 
 
 def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
@@ -143,7 +157,9 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         ragged_min: int = 0, ragged_max: int = 0,
         large_max_wait: float = 0.02,
         paged_kernel: Optional[bool] = None,
-        batch_prefill: bool = True) -> Dict:
+        batch_prefill: bool = True,
+        shared_prefix_len: int = 0,
+        shared_head_start: float = 1.0) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
     # comparable to `repro.launch.serve`
@@ -240,6 +256,36 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
             rows.append(best_of(lambda e=eng, l=label: run_continuous(
                 e, fresh(), max_new, l)))
 
+    # -- prefix sharing: shared-system-prompt workload ---------------------
+    if backend == "paged" and shared_prefix_len > 0:
+        # 75%-shared prompts: prefix L + per-request L/3 suffix. The
+        # first request arrives alone (head start) so its prompt blocks
+        # are registered — and, after it retires, CACHED — before the
+        # rest arrive together and map them by refcount instead of
+        # prefilling them again. tau = -inf: these rows measure the
+        # paged cache, not the cascade.
+        L = shared_prefix_len
+        suffix = max(L // 3, block_size)
+        sp_prompts = make_shared_prefix_stream(
+            jax.random.fold_in(key, 4), n_requests, L, suffix,
+            s_cfg.vocab_size)
+        sp_arrivals = np.concatenate(
+            [[0.0], np.full(n_requests - 1, shared_head_start)])
+        per_req = math.ceil((L + suffix + max_new - 1) / block_size)
+        sp_blocks = (slots + 1) * per_req     # noshare worst case fits
+        for label, share in (("paged+share", True),
+                             ("paged+noshare", False)):
+            eng = ContinuousCascadeEngine(
+                small, large, n_slots=slots, tau=-1e9, early_exit=False,
+                large_batch=slots, steps_per_sync=4, backend="paged",
+                block_size=block_size, n_blocks=sp_blocks,
+                prefill_chunk=prefill_chunk or None,
+                paged_kernel=paged_kernel, batch_prefill=batch_prefill,
+                prefix_sharing=share)
+            rows.append(best_of(lambda e=eng, l=label: run_continuous(
+                e, make_requests(sp_prompts, max_new, sp_arrivals),
+                max_new, l)))
+
     print("engine,tok_s,p50_ms,p95_ms,p99_ms,deferral,wait_ms,"
           "ms_steps,saved_steps,cache_mb")
     for r in rows:
@@ -270,6 +316,20 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
               f"{paged_row['prefill_dispatches']} dispatches "
               f"({'batched' if batch_prefill else 'serial'}; "
               f"kernel={'pallas' if paged_row.get('paged_kernel') else 'xla'})")
+    if backend == "paged" and shared_prefix_len > 0:
+        sh = next(r for r in rows if r["engine"] == "paged+share")
+        ns = next(r for r in rows if r["engine"] == "paged+noshare")
+        suffix = max(shared_prefix_len // 3, block_size)
+        blk_x = ns["peak_blocks"] / max(sh["peak_blocks"], 1)
+        tok_x = ns["prefill_tokens"] / max(sh["prefill_tokens"], 1)
+        print(f"# prefix sharing ({shared_prefix_len}-token prefix + "
+              f"{suffix}-token suffix, "
+              f"{shared_prefix_len / (shared_prefix_len + suffix):.0%} "
+              f"shared): peak mapped blocks {ns['peak_blocks']} -> "
+              f"{sh['peak_blocks']} ({blk_x:.1f}x), prefilled tokens "
+              f"{ns['prefill_tokens']} -> {sh['prefill_tokens']} "
+              f"({tok_x:.1f}x); {sh['shared_tokens']} prompt tokens "
+              f"served from shared blocks, {sh['cow_clones']} CoW clones")
     payload = {"tau": tau, "config": {
         "n_requests": n_requests, "prompt_len": prompt_len,
         "max_new": max_new, "slots": slots, "rate": rate,
@@ -277,7 +337,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         "block_size": block_size, "n_blocks": n_blocks,
         "ragged_min": ragged_min, "ragged_max": ragged_max,
         "large_max_wait": large_max_wait, "paged_kernel": paged_kernel,
-        "batch_prefill": batch_prefill}, "rows": rows}
+        "batch_prefill": batch_prefill,
+        "shared_prefix_len": shared_prefix_len}, "rows": rows}
     save_result("serving", payload)
     for r in rows:
         emit_csv_row(f"serving/{r['engine']}",
@@ -373,6 +434,16 @@ def main():
     ap.add_argument("--serial-prefill", action="store_true",
                     help="disable batched paged prefill (one request's "
                          "chunk per engine iteration, the old loop)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help=">0: add paged+share / paged+noshare rows on a "
+                         "shared-system-prompt workload (prefix of this "
+                         "many tokens + per-request suffix of a third), "
+                         "reporting peak-mapped-block and prefill-token "
+                         "reductions (needs --backend paged)")
+    ap.add_argument("--shared-head-start", type=float, default=1.0,
+                    help="seconds the first shared-prefix request runs "
+                         "alone so its prompt blocks are registered "
+                         "before the rest arrive together")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--bench-out", default=None,
                     help="write the machine-readable bench record "
@@ -392,7 +463,8 @@ def main():
                   args.min_tokens, args.backend, args.block_size,
                   args.blocks or None, args.prefill_chunk,
                   args.ragged_min, args.ragged_max, args.large_max_wait,
-                  args.paged_kernel or None, not args.serial_prefill)
+                  args.paged_kernel or None, not args.serial_prefill,
+                  args.shared_prefix_len, args.shared_head_start)
     record = bench_record(payload)
     if args.bench_out:
         with open(args.bench_out, "w") as f:

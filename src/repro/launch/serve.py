@@ -106,6 +106,11 @@ def main():
     ap.add_argument("--serial-prefill", action="store_true",
                     help="paged backend: disable batched same-offset "
                          "prefill chunk dispatch (debug/parity)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="paged backend: disable copy-on-write prefix "
+                         "sharing (every request prefills and maps its "
+                         "whole prompt even when the blocks are already "
+                         "resident)")
     ap.add_argument("--ragged-min", type=int, default=0,
                     help=">0: ragged prompt lengths uniform in "
                          "[ragged-min, ragged-max] (continuous engine)")
@@ -158,7 +163,8 @@ def main():
         prefill_chunk=args.prefill_chunk or None,
         paged_kernel={"auto": None, "on": True,
                       "off": False}[args.paged_kernel],
-        batch_prefill=not args.serial_prefill)
+        batch_prefill=not args.serial_prefill,
+        prefix_sharing=not args.no_prefix_sharing)
     tau = engine.calibrate(cal, cal_len, args.max_new,
                            args.deferral_ratio)
     print(f"calibrated tau={tau:.4f} for target deferral "

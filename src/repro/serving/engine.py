@@ -202,6 +202,9 @@ class ContinuousServeResult:
     """Continuous-engine output (requests sorted by rid)."""
     requests: List[Request]
     tokens: np.ndarray            # [N, max_new] final tokens, rid order
+                                  # (rows with a smaller per-request
+                                  # budget are zero-padded; the exact
+                                  # vectors are requests[i].tokens)
     confidence: np.ndarray        # [N] mean neg entropy at retirement
     deferred: np.ndarray          # [N] bool
     early_exited: np.ndarray      # [N] bool (in-flight deferrals)
@@ -252,6 +255,16 @@ class ContinuousCascadeEngine:
       per engine iteration — at high arrival rates the host dispatch
       count per prompt token drops by ~the batch width. False restores
       the serial one-request-per-iteration loop (parity reference).
+    * ``prefix_sharing`` (default True) — admission consults the pool's
+      prefix registry: prompt blocks already resident (or cached from a
+      retired request) are mapped into the new slot's page table by
+      refcount instead of prefilled again, and prefill starts at the
+      first unshared token. Blocks stay read-only while shared — every
+      write path first runs `pool.ensure_writable`, which copy-on-write
+      clones a shared block into a private one, and
+      `pool.check_write_disjoint` asserts per dispatch that no physical
+      block is writable from two rows (the paged write kernels' safety
+      contract). Greedy outputs are bit-exact vs an unshared run.
 
     M_L regeneration goes through a pluggable `large_backend`
     (``"sync"`` — inline on the decode loop, the reference path;
@@ -288,6 +301,7 @@ class ContinuousCascadeEngine:
                  prefill_chunk: Optional[int] = None,
                  paged_kernel: Optional[bool] = None,
                  batch_prefill: bool = True,
+                 prefix_sharing: bool = True,
                  cost_small: float = 0.2, cost_large: float = 1.0):
         if backend not in ("slot", "paged"):
             raise ValueError(f"backend must be 'slot' or 'paged', "
@@ -310,6 +324,7 @@ class ContinuousCascadeEngine:
         self.prefill_chunk = prefill_chunk
         self.paged_kernel = paged_kernel
         self.batch_prefill = batch_prefill
+        self.prefix_sharing = prefix_sharing
         self.cost_small = cost_small
         self.cost_large = cost_large
         self._fns: Dict[Tuple, Tuple] = {}
@@ -523,248 +538,310 @@ class ContinuousCascadeEngine:
 
         sched = SlotScheduler(pool)
         queue = ArrivalQueue(requests)
+        # the audit-log handle must be released even when setup or the
+        # serve loop raises: ServingTelemetry is a context manager, and
+        # the worker backend gets its own try/finally inside (a leaked
+        # worker thread spins its poll loop for the life of the process)
         tel = ServingTelemetry(audit_path)
-
-        S = self.n_slots
-        state = {
-            "last_tok": jnp.zeros((S,), jnp.int32),
-            "pos": jnp.zeros((S,), jnp.int32),
-            "n_gen": jnp.zeros((S,), jnp.int32),
-            "budget": jnp.full((S,), max_new, jnp.int32),
-            "conf_sum": jnp.zeros((S,), jnp.float32),
-            "active": jnp.zeros((S,), bool),
-            "tokens": jnp.zeros((S, max_new), jnp.int32),
-        }
-        # paged: requests admitted to a slot but still prefilling, FIFO of
-        # [request, slot, next chunk offset]
-        prefilling: List[List] = []
-        n_steps = 0
-        n_prefill_chunks = 0
-        n_prefill_dispatches = 0
-        peak_active = 0
-        ml = make_large_backend(self.large_backend, self.large, max_new,
-                                self.large_batch, self.large_max_wait,
-                                self.stub_latency)
-        by_rid = {r.rid: r for r in requests}
-        ml_depths: List[int] = []
-        tel.reset_clock()
-
-        def submit_large(req: Request):
-            """Stream one deferral into the M_L backend the moment its
-            slot retires — M_S decode proceeds while M_L works."""
-            req.state = DEFERRED_PENDING
-            req.t_submit_large = tel.now
-            ml.submit([req])
-            tel.event("large_submit", rid=req.rid, depth=ml.n_pending)
-
-        def poll_large():
-            """Fold completed M_L regenerations back into the run."""
-            for res in ml.poll():
-                req = by_rid[res.rid]
-                req.tokens = np.asarray(res.tokens, np.int32)
-                req.state = DONE
-                now = tel.now
-                req.t_done = now
-                tel.event("large_complete", rid=req.rid,
-                          batch_id=res.batch_id, n_real=res.n_real,
-                          pad_to=res.pad_to, reason=res.reason,
-                          wait_ms=round((now - req.t_submit_large) * 1e3,
-                                        3))
-
-        def sync_retire():
-            """Pull the tiny control vectors, retire finished / in-flight
-            deferred slots, release them, and deactivate on device. Slots
-            still prefilling are skipped — their device state is stale
-            until the final chunk seeds it."""
-            nonlocal state
-            mid_prefill = {s for _, s, _ in prefilling}
-            n_gen = np.asarray(state["n_gen"])
-            conf_sum = np.asarray(state["conf_sum"])
-            toks = None
-            retired: List[int] = []
-            now = tel.now
-            for slot in sched.active_slots:
-                if slot in mid_prefill:
-                    continue
-                req = sched.running[slot]
-                n = int(n_gen[slot])
-                mean = float(conf_sum[slot]) / max(n, 1)
-                finished = n >= req.max_new
-                evict = (not finished and self.early_exit
-                         and n >= self.min_tokens
-                         and mean < self.tau - self.margin)
-                if not (finished or evict):
-                    continue
-                if toks is None:
-                    toks = np.asarray(state["tokens"])
-                req.n_small_steps = n
-                req.confidence = mean
-                req.small_tokens = toks[slot, :n].copy()
-                defer = mean < self.tau if finished else True
-                sched.retire(slot, now, deferred=defer, early=evict)
-                if defer:
-                    submit_large(req)
-                else:
-                    req.tokens = toks[slot].copy()
-                tel.event("retire", rid=req.rid, slot=slot,
-                          reason=("defer_early" if evict else
-                                  "defer_final" if defer else "finish"),
-                          n_gen=n, confidence=round(mean, 6))
-                retired.append(slot)
-            if retired:
-                state = dict(state)
-                state["active"] = state["active"].at[
-                    jnp.asarray(retired)].set(False)
-
-        def admit_slot_groups(admitted):
-            """Slot backend: batched prefill per distinct prompt length
-            (mixed lengths can't share one dense prefill shape; grouping
-            keeps each group's math identical to a uniform run)."""
-            nonlocal state
-            by_len: Dict[int, List[Tuple[int, Request]]] = {}
-            for s, r in admitted:
-                by_len.setdefault(r.prompt_len, []).append((s, r))
-            for P, group in sorted(by_len.items()):
-                slots = jnp.asarray([s for s, _ in group])
-                prompts = jnp.asarray(np.stack([r.prompt for _, r in group]))
-                budgets = jnp.asarray([r.max_new for _, r in group],
-                                      jnp.int32)
-                pool.cache, state = admit_fn(self.small.params, prompts,
-                                             slots, budgets, pool.cache,
-                                             state)
-
-        def run_prefill_chunk():
-            """Paged backend: run one chunk of the oldest mid-prefill
-            request — PLUS, with `batch_prefill`, the same-offset chunks
-            of every other mid-prefill request — in a single dispatch,
-            so long prompts interleave with resident decode steps and
-            simultaneous arrivals don't serialize on host overhead."""
-            nonlocal state, n_prefill_chunks, n_prefill_dispatches
-            head_req, _, off0 = prefilling[0]
-            C = self.prefill_chunk or head_req.prompt_len
-            if self.batch_prefill:
-                # pack every request at the head's offset whose chunk
-                # width matches (differing widths only arise with
-                # prefill_chunk=None, where C is the prompt length)
-                group = [e for e in prefilling if e[2] == off0
-                         and (self.prefill_chunk or e[0].prompt_len) == C]
-            else:
-                group = [prefilling[0]]
-            k = len(group)
-            # bucket the dispatch width to a power of two: pad rows
-            # write to the trash block, their logits are ignored
-            Bc = next_pow2(k)
-            chunks = np.zeros((Bc, C), np.int32)
-            tbl = np.zeros((Bc, pool.max_blocks), np.int32)
-            last_idx = np.zeros((Bc,), np.int32)
-            for i, (req, slot, off) in enumerate(group):
-                piece = req.prompt[off:off + C]
-                chunks[i, :piece.shape[0]] = piece  # right-pad final chunk;
-                tbl[i] = pool.tables[slot]          # padded K/V -> trash
-                last_idx[i] = min(req.prompt_len - 1 - off, C - 1)
-            logits, pool.cache = prefill_fn(
-                self.small.params, jnp.asarray(chunks), jnp.asarray(tbl),
-                off0, jnp.asarray(last_idx), pool.cache)
-            n_prefill_dispatches += 1
-            n_prefill_chunks += k
-            finished = False
-            for i, entry in enumerate(group):
-                req, slot, off = entry
-                if off + C >= req.prompt_len:   # final chunk: seed decode
-                    state = finish_fn(state, slot, logits[i:i + 1],
-                                      req.max_new, req.prompt_len)
-                    prefilling.remove(entry)
-                    tel.event("prefill_done", rid=req.rid, slot=slot,
-                              chunks=math.ceil(req.prompt_len / C))
-                    finished = True
-                else:
-                    entry[2] = off + C
-            if finished:
-                sync_retire()            # max_new == 1: already finished
-
-        def decoding_slots() -> List[int]:
-            mid_prefill = {s for _, s, _ in prefilling}
-            return [s for s in sched.active_slots if s not in mid_prefill]
-
-        # the worker backend and audit log must be released even
-        # when the serve loop raises (a leaked worker thread spins
-        # its poll loop for the life of the process)
+        ml = None
         try:
-            while len(queue) or sched.n_active:
-                if paged:
-                    # admit one at a time: each admission reserves its blocks
-                    # immediately, so the capacity check for the next FIFO
-                    # head sees the updated reservation
-                    admitted = []
-                    while True:
-                        got = sched.admit_ready(
-                            queue, tel.now, limit=1,
-                            can_admit=lambda r: pool.can_reserve(
-                                r.prompt_len + r.max_new - 1))
-                        if not got:
-                            break
-                        slot, req = got[0]
-                        pool.reserve(slot, req.prompt_len + req.max_new - 1)
-                        pool.ensure_mapped(slot, req.prompt_len)
-                        prefilling.append([req, slot, 0])
-                        admitted.append((slot, req))
-                    if admitted:
-                        tel.event("admit", rids=[r.rid for _, r in admitted],
-                                  slots=[s for s, _ in admitted])
-                    if prefilling:
-                        run_prefill_chunk()
-                else:
-                    admitted = sched.admit_ready(queue, tel.now)
-                    if admitted:
-                        admit_slot_groups(admitted)
-                        tel.event("admit", rids=[r.rid for _, r in admitted],
-                                  slots=[s for s, _ in admitted])
-                        sync_retire()        # min_tokens=1 / max_new=1 edges
-                peak_active = max(peak_active, sched.n_active)
-                decoding = decoding_slots()
-                if decoding:
-                    if paged:
-                        pos_host = np.asarray(state["pos"])
-                        need = 1
-                        for slot in decoding:
-                            req = sched.running[slot]
-                            total = req.prompt_len + req.max_new - 1
-                            cover = min(int(pos_host[slot])
-                                        + self.steps_per_sync, total)
-                            pool.ensure_mapped(slot, cover)
-                            need = max(need, cover)
-                        # active-prefix tightening: hand the jitted step
-                        # only the bucketed block prefix the masks can
-                        # reach — the gather/kernel walk shrinks with it
-                        mb = pool.active_prefix_blocks(need)
-                        pool.cache, state = step_fn(self.small.params,
-                                                    pool.cache, state,
-                                                    pool.tables_device(mb))
-                    else:
-                        pool.cache, state = step_fn(self.small.params,
-                                                    pool.cache, state)
-                    n_steps += self.steps_per_sync
-                    tel.event("step", slots=decoding, n=self.steps_per_sync,
-                              ml_pending=ml.n_pending)
-                    sync_retire()
-                elif not sched.n_active and len(queue):
-                    nxt = queue.next_arrival
-                    if nxt is not None:
-                        time.sleep(min(max(nxt - tel.now, 0.0), 1e-3) + 1e-5)
-                ml_depths.append(ml.n_pending)
-                poll_large()
+            S = self.n_slots
+            state = {
+                "last_tok": jnp.zeros((S,), jnp.int32),
+                "pos": jnp.zeros((S,), jnp.int32),
+                "n_gen": jnp.zeros((S,), jnp.int32),
+                "budget": jnp.full((S,), max_new, jnp.int32),
+                "conf_sum": jnp.zeros((S,), jnp.float32),
+                "active": jnp.zeros((S,), bool),
+                "tokens": jnp.zeros((S, max_new), jnp.int32),
+            }
+            # paged: requests admitted to a slot but still prefilling,
+            # FIFO of [request, slot, next chunk offset]
+            prefilling: List[List] = []
+            n_steps = 0
+            n_prefill_chunks = 0
+            n_prefill_dispatches = 0
+            n_prefill_tokens = 0
+            n_shared_tokens = 0
+            peak_active = 0
+            ml = make_large_backend(self.large_backend, self.large, max_new,
+                                    self.large_batch, self.large_max_wait,
+                                    self.stub_latency)
+            by_rid = {r.rid: r for r in requests}
+            ml_depths: List[int] = []
+            tel.reset_clock()
 
-            # all M_S work is done: release partial M_L groups and fold in
-            # completions as they land (per-request t_done stays accurate)
-            ml.flush()
-            while True:
-                poll_large()
-                if not ml.n_pending:
-                    break
-                time.sleep(2e-3)
-            makespan = tel.now
+            def submit_large(req: Request):
+                """Stream one deferral into the M_L backend the moment its
+                slot retires — M_S decode proceeds while M_L works."""
+                req.state = DEFERRED_PENDING
+                req.t_submit_large = tel.now
+                ml.submit([req])
+                tel.event("large_submit", rid=req.rid, depth=ml.n_pending)
+
+            def poll_large():
+                """Fold completed M_L regenerations back into the run."""
+                for res in ml.poll():
+                    req = by_rid[res.rid]
+                    # trim to the request's own budget: the backend pads
+                    # generation width to the run-wide max_new
+                    req.tokens = np.asarray(res.tokens,
+                                            np.int32)[:req.max_new].copy()
+                    req.state = DONE
+                    now = tel.now
+                    req.t_done = now
+                    tel.event("large_complete", rid=req.rid,
+                              batch_id=res.batch_id, n_real=res.n_real,
+                              pad_to=res.pad_to, reason=res.reason,
+                              wait_ms=round((now - req.t_submit_large) * 1e3,
+                                            3))
+
+            def sync_retire():
+                """Pull the tiny control vectors, retire finished /
+                in-flight deferred slots, release them, and deactivate on
+                device. Slots still prefilling are skipped — their device
+                state is stale until the final chunk seeds it."""
+                nonlocal state
+                mid_prefill = {s for _, s, _ in prefilling}
+                n_gen = np.asarray(state["n_gen"])
+                conf_sum = np.asarray(state["conf_sum"])
+                toks = None
+                retired: List[int] = []
+                now = tel.now
+                for slot in sched.active_slots:
+                    if slot in mid_prefill:
+                        continue
+                    req = sched.running[slot]
+                    n = int(n_gen[slot])
+                    mean = float(conf_sum[slot]) / max(n, 1)
+                    finished = n >= req.max_new
+                    evict = (not finished and self.early_exit
+                             and n >= self.min_tokens
+                             and mean < self.tau - self.margin)
+                    if not (finished or evict):
+                        continue
+                    if toks is None:
+                        toks = np.asarray(state["tokens"])
+                    req.n_small_steps = n
+                    req.confidence = mean
+                    req.small_tokens = toks[slot, :n].copy()
+                    defer = mean < self.tau if finished else True
+                    sched.retire(slot, now, deferred=defer, early=evict)
+                    if defer:
+                        submit_large(req)
+                    else:
+                        req.tokens = toks[slot, :req.max_new].copy()
+                    tel.event("retire", rid=req.rid, slot=slot,
+                              reason=("defer_early" if evict else
+                                      "defer_final" if defer else "finish"),
+                              n_gen=n, confidence=round(mean, 6))
+                    retired.append(slot)
+                if retired:
+                    state = dict(state)
+                    state["active"] = state["active"].at[
+                        jnp.asarray(retired)].set(False)
+
+            def admit_slot_groups(admitted):
+                """Slot backend: batched prefill per distinct prompt length
+                (mixed lengths can't share one dense prefill shape;
+                grouping keeps each group's math identical to a uniform
+                run)."""
+                nonlocal state
+                by_len: Dict[int, List[Tuple[int, Request]]] = {}
+                for s, r in admitted:
+                    by_len.setdefault(r.prompt_len, []).append((s, r))
+                for P, group in sorted(by_len.items()):
+                    slots = jnp.asarray([s for s, _ in group])
+                    prompts = jnp.asarray(np.stack([r.prompt
+                                                    for _, r in group]))
+                    budgets = jnp.asarray([r.max_new for _, r in group],
+                                          jnp.int32)
+                    pool.cache, state = admit_fn(self.small.params, prompts,
+                                                 slots, budgets, pool.cache,
+                                                 state)
+
+            def run_prefill_chunk():
+                """Paged backend: run one chunk of the oldest mid-prefill
+                request — PLUS, with `batch_prefill`, the same-offset
+                chunks of every other mid-prefill request — in a single
+                dispatch, so long prompts interleave with resident decode
+                steps and simultaneous arrivals don't serialize on host
+                overhead. Before the dispatch, every row's chunk span is
+                made write-private (`ensure_writable` CoW-clones a shared
+                tail block) and the rows' writable blocks are asserted
+                pairwise disjoint — the paged write paths' contract."""
+                nonlocal state, n_prefill_chunks, n_prefill_dispatches, \
+                    n_prefill_tokens
+                head_req, _, off0 = prefilling[0]
+                C = self.prefill_chunk or (head_req.prompt_len
+                                           - head_req.shared_prefix_tokens)
+                if self.batch_prefill:
+                    # pack every request at the head's offset whose chunk
+                    # width matches (differing widths only arise with
+                    # prefill_chunk=None, where C spans the whole
+                    # unshared prompt tail)
+                    group = [e for e in prefilling if e[2] == off0
+                             and (self.prefill_chunk
+                                  or e[0].prompt_len
+                                  - e[0].shared_prefix_tokens) == C]
+                else:
+                    group = [prefilling[0]]
+                k = len(group)
+                for req, slot, off in group:
+                    pool.ensure_writable(slot, off, off + C)
+                pool.check_write_disjoint(
+                    (slot, off, off + C) for _, slot, off in group)
+                # bucket the dispatch width to a power of two: pad rows
+                # write to the trash block, their logits are ignored
+                Bc = next_pow2(k)
+                chunks = np.zeros((Bc, C), np.int32)
+                tbl = np.zeros((Bc, pool.max_blocks), np.int32)
+                last_idx = np.zeros((Bc,), np.int32)
+                for i, (req, slot, off) in enumerate(group):
+                    piece = req.prompt[off:off + C]
+                    chunks[i, :piece.shape[0]] = piece  # right-pad final
+                    tbl[i] = pool.tables[slot]          # chunk; padded
+                    last_idx[i] = min(req.prompt_len - 1 - off, C - 1)
+                    n_prefill_tokens += int(piece.shape[0])  # K/V -> trash
+                logits, pool.cache = prefill_fn(
+                    self.small.params, jnp.asarray(chunks), jnp.asarray(tbl),
+                    off0, jnp.asarray(last_idx), pool.cache)
+                n_prefill_dispatches += 1
+                n_prefill_chunks += k
+                finished = False
+                for i, entry in enumerate(group):
+                    req, slot, off = entry
+                    if off + C >= req.prompt_len:  # final chunk: seed decode
+                        state = finish_fn(state, slot, logits[i:i + 1],
+                                          req.max_new, req.prompt_len)
+                        prefilling.remove(entry)
+                        if self.prefix_sharing:
+                            # publish the fully-written prompt blocks so
+                            # later same-prefix arrivals can map them
+                            pool.register_prefix(slot, req.prompt)
+                        tel.event("prefill_done", rid=req.rid, slot=slot,
+                                  chunks=math.ceil(
+                                      max(req.prompt_len
+                                          - req.shared_prefix_tokens, 1)
+                                      / C),
+                                  shared=req.shared_prefix_tokens)
+                        finished = True
+                    else:
+                        entry[2] = off + C
+                if finished:
+                    sync_retire()        # max_new == 1: already finished
+
+            def decoding_slots() -> List[int]:
+                mid_prefill = {s for _, s, _ in prefilling}
+                return [s for s in sched.active_slots
+                        if s not in mid_prefill]
+
+            try:
+                while len(queue) or sched.n_active:
+                    if paged:
+                        # admit one at a time: each admission reserves its
+                        # blocks immediately, so the capacity check for the
+                        # next FIFO head sees the updated reservation
+                        admitted = []
+                        while True:
+                            got = sched.admit_ready(
+                                queue, tel.now, limit=1,
+                                can_admit=lambda r: pool.can_reserve(
+                                    r.prompt_len + r.max_new - 1))
+                            if not got:
+                                break
+                            slot, req = got[0]
+                            pool.reserve(slot,
+                                         req.prompt_len + req.max_new - 1)
+                            start = 0
+                            if self.prefix_sharing:
+                                # map already-resident (or cached) prefix
+                                # blocks by refcount; prefill resumes at
+                                # the first unshared token. A fully-shared
+                                # prompt still recomputes its final token
+                                # for the seed logits — run_prefill_chunk
+                                # CoW-clones that block before the write.
+                                shared = pool.share_prefix(slot, req.prompt)
+                                start = min(shared, req.prompt_len - 1)
+                                req.shared_prefix_tokens = start
+                                n_shared_tokens += start
+                            pool.ensure_mapped(slot, req.prompt_len)
+                            prefilling.append([req, slot, start])
+                            admitted.append((slot, req))
+                        if admitted:
+                            tel.event("admit",
+                                      rids=[r.rid for _, r in admitted],
+                                      slots=[s for s, _ in admitted],
+                                      shared=[r.shared_prefix_tokens
+                                              for _, r in admitted])
+                        if prefilling:
+                            run_prefill_chunk()
+                    else:
+                        admitted = sched.admit_ready(queue, tel.now)
+                        if admitted:
+                            admit_slot_groups(admitted)
+                            tel.event("admit",
+                                      rids=[r.rid for _, r in admitted],
+                                      slots=[s for s, _ in admitted])
+                            sync_retire()   # min_tokens=1 / max_new=1 edges
+                    peak_active = max(peak_active, sched.n_active)
+                    decoding = decoding_slots()
+                    if decoding:
+                        if paged:
+                            pos_host = np.asarray(state["pos"])
+                            need = 1
+                            covers = {}
+                            for slot in decoding:
+                                req = sched.running[slot]
+                                total = req.prompt_len + req.max_new - 1
+                                cover = min(int(pos_host[slot])
+                                            + self.steps_per_sync, total)
+                                pool.ensure_mapped(slot, cover)
+                                # decode writes [pos, cover): CoW-clone any
+                                # still-shared block in that span so the
+                                # in-flight write scatter stays row-disjoint
+                                pool.ensure_writable(
+                                    slot, int(pos_host[slot]), cover)
+                                covers[slot] = cover
+                                need = max(need, cover)
+                            pool.check_write_disjoint(
+                                (s, int(pos_host[s]), c)
+                                for s, c in covers.items())
+                            # active-prefix tightening: hand the jitted step
+                            # only the bucketed block prefix the masks can
+                            # reach — the gather/kernel walk shrinks with it
+                            mb = pool.active_prefix_blocks(need)
+                            pool.cache, state = step_fn(
+                                self.small.params, pool.cache, state,
+                                pool.tables_device(mb))
+                        else:
+                            pool.cache, state = step_fn(self.small.params,
+                                                        pool.cache, state)
+                        n_steps += self.steps_per_sync
+                        tel.event("step", slots=decoding,
+                                  n=self.steps_per_sync,
+                                  ml_pending=ml.n_pending)
+                        sync_retire()
+                    elif not sched.n_active and len(queue):
+                        nxt = queue.next_arrival
+                        if nxt is not None:
+                            time.sleep(min(max(nxt - tel.now, 0.0), 1e-3)
+                                       + 1e-5)
+                    ml_depths.append(ml.n_pending)
+                    poll_large()
+
+                # all M_S work is done: release partial M_L groups and fold
+                # in completions as they land (t_done stays accurate)
+                ml.flush()
+                while True:
+                    poll_large()
+                    if not ml.n_pending:
+                        break
+                    time.sleep(2e-3)
+                makespan = tel.now
+            finally:
+                ml.close()
         finally:
-            ml.close()
             tel.close()
 
         reqs = sorted(requests, key=lambda r: r.rid)
@@ -788,10 +865,20 @@ class ContinuousCascadeEngine:
                          peak_blocks=pool.peak_mapped,
                          prefill_chunks=n_prefill_chunks,
                          prefill_dispatches=n_prefill_dispatches,
+                         prefill_tokens=n_prefill_tokens,
+                         prefix_sharing=self.prefix_sharing,
+                         shared_tokens=n_shared_tokens,
+                         shared_blocks=pool.shared_blocks_total,
+                         cow_clones=pool.cow_clones,
                          paged_kernel=use_kernel)
+        # per-request final tokens are trimmed to each request's budget;
+        # the matrix view pads the short rows back to the run width
+        tokens = np.zeros((len(reqs), max_new), np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, :len(r.tokens)] = r.tokens
         result = ContinuousServeResult(
             requests=reqs,
-            tokens=np.stack([r.tokens for r in reqs]),
+            tokens=tokens,
             confidence=np.array([r.confidence for r in reqs]),
             deferred=np.array([r.deferred for r in reqs]),
             early_exited=np.array([r.early_exited for r in reqs]),

@@ -24,10 +24,36 @@ the per-request worst case is still far below the slot pool's global
 worst case on ragged traffic, which is the memory win this pool exists
 for.
 
-Invariants (pinned by tests/test_serving_paged.py):
-  * mapped blocks are pairwise disjoint across slots and never include 0;
-  * mapped + free is always exactly {1..n_blocks};
+**Prefix sharing (copy-on-write).** Physical blocks carry reference
+counts, so one block may appear in several slots' tables. A **prefix
+registry** keys each fully-prefilled prompt block on the hash chain of
+its token ids (`prefix_block_keys`); `share_prefix` maps the longest
+registered prefix of a new request's prompt straight into its table —
+those tokens are never prefilled again. Shared blocks are read-only:
+any write first goes through `ensure_writable`, which `cow_clone`s a
+block whose refcount exceeds one into a fresh private copy, so the
+paged write paths (`models.attention._paged_write` and the Pallas
+`paged_write_token` kernel) keep their "writable blocks are pairwise
+disjoint across rows" contract — `check_write_disjoint` asserts it per
+dispatch. Reservation accounting covers the CoW worst case (sharing
+gives the matched blocks' reservation back, withholding one block of
+slack exactly when a fully-shared prompt could clone its tail), so
+`ensure_mapped` and `cow_clone` stay infallible for admitted requests.
+Released blocks whose refcount hits zero keep their registry entry
+("cached"): their content is intact until reallocated, so a later
+same-prefix request can resurrect them even after the donor retired.
+Allocation prefers unregistered free blocks (lowest id first) and
+evicts cached ones — also lowest id first — only when it must.
+
+Invariants (pinned by tests/test_serving_paged.py and
+tests/test_serving_prefix.py):
+  * per-slot table rows never repeat a block and never map block 0;
+  * every block's refcount equals the number of table rows of in-use
+    slots that map it; blocks with refcount 0 are exactly the free set;
+  * refcounted + free is always exactly {1..n_blocks};
   * len(free) >= total outstanding reservation;
+  * registry entries point at blocks that are mapped or cached-free,
+    bijectively with the reverse map;
   * a slot's table row is all-zero whenever the slot is free.
 
 Families whose cache carries state without a ``cache_seq`` axis (RWKV,
@@ -36,8 +62,10 @@ paged; construction raises with a clear message.
 """
 from __future__ import annotations
 
+import hashlib
+import heapq
 import math
-from typing import Any, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +85,25 @@ def next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def prefix_block_keys(tokens: np.ndarray, block_size: int) -> List[bytes]:
+    """Hash-chain keys of every FULL block of `tokens`.
+
+    Key m digests (key of block m-1, tokens of block m), so equal keys
+    mean equal whole prefixes, not just equal blocks — the registry can
+    match block-granular longest prefixes without storing token arrays.
+    Only fully-populated blocks get keys: a partial tail block is still
+    written by its owner's prefill/decode and must never be shared."""
+    out: List[bytes] = []
+    prev = b""
+    toks = np.ascontiguousarray(tokens, np.int32)
+    for m in range(len(toks) // block_size):
+        h = hashlib.blake2b(prev, digest_size=16)
+        h.update(toks[m * block_size:(m + 1) * block_size].tobytes())
+        prev = h.digest()
+        out.append(prev)
+    return out
 
 
 def validate_pageable(cfg: ModelConfig, max_len: int) -> None:
@@ -95,12 +142,15 @@ class PagedCachePool:
     Device state: ``.cache`` (paged leaves, replaced functionally after
     each jitted step) and ``.tables_device()`` (the int32 page table the
     jitted programs index through). Host state: free lists, per-slot
-    mapped/reserved counts, lifetime counters.
+    mapped/reserved counts, per-block refcounts, the prefix registry,
+    lifetime counters.
 
     The **slot** API (`alloc`/`release`/`n_free`/`in_use`) matches
     `SlotCachePool`, so `SlotScheduler` drives either pool; the **block**
     API (`can_reserve`/`reserve`/`ensure_mapped`) is what makes admission
-    ragged-aware.
+    ragged-aware; the **sharing** API (`share_prefix`/`register_prefix`/
+    `ensure_writable`/`cow_clone`/`check_write_disjoint`) is what lets
+    slots alias read-only prompt blocks safely.
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
@@ -135,13 +185,25 @@ class PagedCachePool:
         # host bookkeeping
         self.tables = np.zeros((n_slots, self.max_blocks), np.int32)
         self.n_mapped = np.zeros(n_slots, np.int64)
+        self.ref = np.zeros(n_blocks + 1, np.int64)  # per-block refcount
         self._owed = np.zeros(n_slots, np.int64)     # reserved, not yet mapped
         self._reserved_total = 0
-        self._free_blocks: List[int] = list(range(n_blocks, 0, -1))
-        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        # free blocks: two min-heaps with a lazy-deletion membership set —
+        # plain (never registered) preferred over cached (registered: a
+        # retired prefix whose content is still intact). Deterministic:
+        # lowest id first within each class.
+        self._free_plain: List[int] = list(range(1, n_blocks + 1))
+        self._free_cached: List[int] = []
+        self._free_set: set = set(self._free_plain)
+        self._free_slots: List[int] = list(range(n_slots))  # min-heap
         self._in_use: set = set()
+        # prefix registry: chain key -> physical block, plus reverse map
+        self._prefix_registry: Dict[bytes, int] = {}
+        self._registered_key: Dict[int, bytes] = {}
         self.generations = [0] * n_slots
-        self.peak_mapped = 0                          # high-water block usage
+        self.peak_mapped = 0           # high-water PHYSICAL blocks in use
+        self.shared_blocks_total = 0   # lifetime blocks mapped via sharing
+        self.cow_clones = 0            # lifetime copy-on-write clones
         self._tables_dev = jnp.asarray(self.tables)
         self._tables_prefix_cache: dict = {}
         self._tables_dirty = False
@@ -153,10 +215,18 @@ class PagedCachePool:
 
     @property
     def n_free_blocks(self) -> int:
-        return len(self._free_blocks)
+        return len(self._free_set)
+
+    @property
+    def n_physical_in_use(self) -> int:
+        """Physical blocks currently allocated (refcount > 0). Shared
+        blocks count ONCE — this is the footprint number."""
+        return self.n_blocks - len(self._free_set)
 
     @property
     def n_mapped_total(self) -> int:
+        """Total table entries over in-use slots (shared blocks count
+        once per slot mapping them)."""
         return int(self.n_mapped.sum())
 
     def footprint_bytes(self) -> int:
@@ -176,42 +246,90 @@ class PagedCachePool:
         """Lowest-numbered free slot (deterministic placement)."""
         if not self._free_slots:
             raise RuntimeError("cache pool exhausted")
-        slot = self._free_slots.pop()
+        slot = heapq.heappop(self._free_slots)
         self._in_use.add(slot)
         self.generations[slot] += 1
         return slot
 
     def release(self, slot: int) -> None:
-        """Free the slot: unmap its blocks, drop its outstanding
-        reservation, and zero its table row (so stale decode writes from
-        the retired tenant land in the trash block)."""
+        """Free the slot: decrement its blocks' refcounts — only blocks
+        that hit zero return to the free list (a block still shared by
+        another slot lives on; a zero-ref block that is REGISTERED keeps
+        its registry entry and goes to the cached free heap, reusable by
+        a later same-prefix request until evicted) — drop its
+        outstanding reservation, and zero its table row (so stale decode
+        writes from the retired tenant land in the trash block)."""
         if slot not in self._in_use:
             raise RuntimeError(f"releasing slot {slot} that is not in use")
         self._in_use.remove(slot)
-        self._free_slots.append(slot)
-        self._free_slots.sort(reverse=True)
+        heapq.heappush(self._free_slots, slot)
         for m in range(int(self.n_mapped[slot])):
-            self._free_blocks.append(int(self.tables[slot, m]))
-        self._free_blocks.sort(reverse=True)
+            blk = int(self.tables[slot, m])
+            self.ref[blk] -= 1
+            if self.ref[blk] == 0:
+                self._push_free(blk)
         self._reserved_total -= int(self._owed[slot])
         self._owed[slot] = 0
         self.n_mapped[slot] = 0
         self.tables[slot] = 0
         self._tables_dirty = True
 
+    # -- free-block heaps (lazy deletion) ----------------------------------
+    def _push_free(self, blk: int) -> None:
+        heap = (self._free_cached if blk in self._registered_key
+                else self._free_plain)
+        heapq.heappush(heap, blk)
+        self._free_set.add(blk)
+
+    def _pop_free(self) -> int:
+        """Lowest-id unregistered free block, else evict (deregister) the
+        lowest-id cached one. Caller owns the block (ref set to 1)."""
+        for heap in (self._free_plain, self._free_cached):
+            while heap:
+                blk = heapq.heappop(heap)
+                if blk not in self._free_set:
+                    continue                    # stale lazy-deleted entry
+                self._free_set.remove(blk)
+                key = self._registered_key.pop(blk, None)
+                if key is not None:             # evict the cached prefix
+                    del self._prefix_registry[key]
+                self.ref[blk] = 1
+                return blk
+        raise RuntimeError("paged pool out of blocks — reservation "
+                           "invariant violated")
+
+    def _take_free_block(self, slot: int) -> int:
+        """Allocate one fresh block for `slot`, charged against its
+        reservation — or, beyond it, against UNRESERVED free headroom.
+        The over-map case raises rather than silently draining blocks
+        that other slots' reservations are counting on."""
+        if self._owed[slot] > 0:
+            self._owed[slot] -= 1
+            self._reserved_total -= 1
+        elif len(self._free_set) - 1 < self._reserved_total:
+            raise RuntimeError(
+                f"slot {slot} mapping beyond its reservation would leave "
+                f"free ({len(self._free_set) - 1}) < reserved "
+                f"({self._reserved_total}) — raise n_blocks or reserve "
+                f"the slack explicitly")
+        blk = self._pop_free()
+        self.peak_mapped = max(self.peak_mapped, self.n_physical_in_use)
+        return blk
+
     # -- block reservation / mapping --------------------------------------
     def can_reserve(self, n_tokens: int) -> bool:
         """True if a request needing `n_tokens` total cache entries can be
         admitted without ever starving an already-admitted request."""
-        return (len(self._free_blocks) - self._reserved_total
+        return (len(self._free_set) - self._reserved_total
                 >= self.blocks_for(n_tokens))
 
     def reserve(self, slot: int, n_tokens: int) -> None:
         """Reserve the slot's worst-case block count. Must hold
         `can_reserve(n_tokens)`; blocks are mapped later by
-        `ensure_mapped`."""
+        `ensure_mapped` (or aliased by `share_prefix`, which returns the
+        matched blocks' share of this reservation)."""
         need = self.blocks_for(n_tokens)
-        if len(self._free_blocks) - self._reserved_total < need:
+        if len(self._free_set) - self._reserved_total < need:
             raise RuntimeError("paged pool over-reserved: admission must "
                                "check can_reserve() first")
         self._owed[slot] = need
@@ -225,21 +343,164 @@ class PagedCachePool:
         need = self.blocks_for(n_tokens)
         newly = 0
         while int(self.n_mapped[slot]) < need:
-            if not self._free_blocks:
-                raise RuntimeError("paged pool out of blocks — reservation "
-                                   "invariant violated")
-            blk = self._free_blocks.pop()
+            blk = self._take_free_block(slot)
             m = int(self.n_mapped[slot])
             self.tables[slot, m] = blk
             self.n_mapped[slot] += 1
-            if self._owed[slot] > 0:
-                self._owed[slot] -= 1
-                self._reserved_total -= 1
             newly += 1
         if newly:
             self._tables_dirty = True
-            self.peak_mapped = max(self.peak_mapped, self.n_mapped_total)
         return newly
+
+    # -- prefix sharing / copy-on-write ------------------------------------
+    def share_prefix(self, slot: int, tokens: np.ndarray) -> int:
+        """Map the longest registered prefix of `tokens` into `slot`'s
+        table without prefilling it. Must run right after `reserve`,
+        before any `ensure_mapped` for the slot (shared blocks occupy
+        the leading table entries). Returns the number of prompt tokens
+        covered (a multiple of `block_size`; the caller starts prefill
+        at the first unshared token).
+
+        Matched blocks that are still refcounted are aliased (ref+1);
+        matched blocks sitting cached on the free list are resurrected
+        (ref 0 -> 1, leaving the free list, charged to the slot's
+        reservation like a fresh mapping). Aliased blocks give their
+        reservation back — minus ONE block of slack when the prompt is
+        fully shared with an aliased tail, so the worst-case `cow_clone`
+        (a fully-shared prompt recomputes its final token in place) can
+        never fail. Partial shares restart prefill at a block boundary
+        and never write shared blocks, so they keep no slack."""
+        assert int(self.n_mapped[slot]) == 0, \
+            "share_prefix needs an empty table row"
+        keys = prefix_block_keys(tokens, self.block_size)
+        shared = 0
+        aliased = 0
+        for m, key in enumerate(keys):
+            blk = self._prefix_registry.get(key)
+            if blk is None:
+                break
+            if self.ref[blk] == 0:
+                # cached free block: resurrect (consumes a free block,
+                # so it is charged like a fresh mapping)
+                self._free_set.remove(blk)
+                if self._owed[slot] > 0:
+                    self._owed[slot] -= 1
+                    self._reserved_total -= 1
+                self.ref[blk] = 1
+            else:
+                self.ref[blk] += 1
+                aliased += 1
+            self.tables[slot, m] = blk
+            self.n_mapped[slot] += 1
+            shared += 1
+        if shared:
+            # aliased blocks consumed no free block: return their owed
+            # share. Only a FULLY-shared prompt can ever CoW-clone (its
+            # final token is recomputed inside the last shared block; a
+            # partial share restarts prefill at a block boundary, so no
+            # write ever targets a shared block) — withhold one owed
+            # block of slack exactly when that clone is possible: full
+            # cover AND a tail block that is still aliased (ref > 1).
+            give = aliased
+            if (shared * self.block_size >= len(tokens)
+                    and self.ref[int(self.tables[slot, shared - 1])] > 1):
+                give -= 1
+            give = min(max(give, 0), int(self._owed[slot]))
+            self._owed[slot] -= give
+            self._reserved_total -= give
+            self.shared_blocks_total += shared
+            self._tables_dirty = True
+            self.peak_mapped = max(self.peak_mapped, self.n_physical_in_use)
+        return shared * self.block_size
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> int:
+        """Publish `slot`'s fully-prefilled prompt blocks so later
+        requests can `share_prefix` them. Call once the prompt's K/V
+        writes have all been dispatched (the engine does it at
+        prefill-done). First registration of a key wins; blocks whose
+        content chain is already registered (e.g. the donor's own shared
+        prefix, or a CoW clone that rewrote identical values) are
+        skipped. Returns how many entries were added."""
+        n = 0
+        for m, key in enumerate(prefix_block_keys(tokens, self.block_size)):
+            if m >= int(self.n_mapped[slot]):
+                break
+            blk = int(self.tables[slot, m])
+            if key in self._prefix_registry or blk in self._registered_key:
+                continue
+            self._prefix_registry[key] = blk
+            self._registered_key[blk] = key
+            n += 1
+        return n
+
+    def cow_clone(self, slot: int, m: int) -> int:
+        """Copy-on-write: replace `slot`'s logical block `m` — currently
+        aliased by another slot — with a private copy of its contents.
+        The clone is charged to the slot's reservation (see
+        `share_prefix`'s CoW slack); the original keeps its refcount
+        minus one and its registry entry. Returns the new physical id."""
+        old = int(self.tables[slot, m])
+        assert old > 0 and self.ref[old] > 1, \
+            f"cow_clone: slot {slot} block {m} (phys {old}) is not shared"
+        new = self._take_free_block(slot)
+        self.ref[old] -= 1
+        self.tables[slot, m] = new
+        self._tables_dirty = True
+        self.cow_clones += 1
+
+        def copy(leaf, ax):
+            if ax == 0:
+                return leaf.at[new].set(leaf[old])
+            return leaf.at[:, new].set(leaf[:, old])
+        self.cache = jax.tree.map(copy, self.cache, self.block_axes)
+        return new
+
+    def ensure_writable(self, slot: int, lo: int, hi: int) -> int:
+        """CoW-clone every mapped block of `slot` holding a logical
+        position in [lo, hi) whose refcount exceeds one. Writes beyond
+        the mapped frontier land in the trash block and need no clone.
+        Call before ANY write dispatch targeting those positions —
+        afterwards the slot's writable table entries are private.
+        Returns the number of clones made."""
+        if hi <= lo:
+            return 0
+        m_lo = lo // self.block_size
+        m_hi = min((hi - 1) // self.block_size, int(self.n_mapped[slot]) - 1)
+        n = 0
+        for m in range(m_lo, m_hi + 1):
+            blk = int(self.tables[slot, m])
+            if blk > 0 and self.ref[blk] > 1:
+                self.cow_clone(slot, m)
+                n += 1
+        return n
+
+    def check_write_disjoint(self,
+                             ranges: Iterable[Tuple[int, int, int]]) -> None:
+        """Assert that the physical blocks writable by a single dispatch
+        are pairwise disjoint across rows. `ranges` is (slot, lo, hi)
+        token spans about to be written (one per dispatch row). Both
+        paged write paths — the XLA `_paged_write` scatter and the
+        input/output-aliased `paged_write_token` kernel — assume this;
+        an aliased writable block means a missed `ensure_writable` and
+        would silently corrupt a neighbor's cache. Trash-block targets
+        (unmapped tail positions) are exempt."""
+        owner: Dict[int, int] = {}
+        for slot, lo, hi in ranges:
+            if hi <= lo:
+                continue
+            m_hi = min((hi - 1) // self.block_size,
+                       int(self.n_mapped[slot]) - 1)
+            for m in range(lo // self.block_size, m_hi + 1):
+                blk = int(self.tables[slot, m])
+                if blk == 0:
+                    continue
+                prev = owner.get(blk)
+                if prev is not None and prev != slot:
+                    raise RuntimeError(
+                        f"paged write aliasing: block {blk} is writable "
+                        f"from slots {prev} and {slot} in one dispatch — "
+                        f"CoW guard failed (ensure_writable not called?)")
+                owner[blk] = slot
 
     def active_prefix_blocks(self, n_tokens: int) -> int:
         """Logical blocks needed to cover `n_tokens` cache entries,
@@ -269,14 +530,29 @@ class PagedCachePool:
 
     # -- invariants (tests) ------------------------------------------------
     def check_invariants(self) -> None:
-        mapped = [int(self.tables[s, m]) for s in range(self.n_slots)
-                  for m in range(int(self.n_mapped[s]))]
-        assert 0 not in mapped, "trash block mapped"
-        assert len(mapped) == len(set(mapped)), "block double-mapped"
-        assert set(mapped) | set(self._free_blocks) == set(
-            range(1, self.n_blocks + 1)), "blocks leaked"
-        assert len(self._free_blocks) >= self._reserved_total >= 0, \
+        counts = np.zeros(self.n_blocks + 1, np.int64)
+        for s in range(self.n_slots):
+            row = [int(self.tables[s, m])
+                   for m in range(int(self.n_mapped[s]))]
+            assert 0 not in row, "trash block mapped"
+            assert len(row) == len(set(row)), \
+                f"slot {s} maps a block twice in its own row"
+            for b in row:
+                counts[b] += 1
+        assert (counts[1:] == self.ref[1:]).all(), \
+            "refcount drift: ref[] != table-row mapping counts"
+        mapped = {b for b in range(1, self.n_blocks + 1) if self.ref[b] > 0}
+        free = set(self._free_set)
+        assert mapped.isdisjoint(free), "free block still referenced"
+        assert mapped | free == set(range(1, self.n_blocks + 1)), \
+            "blocks leaked"
+        assert len(free) >= self._reserved_total >= 0, \
             "reservation exceeds free blocks"
+        for key, blk in self._prefix_registry.items():
+            assert self._registered_key.get(blk) == key, \
+                "registry / reverse-map mismatch"
+            assert blk in mapped or blk in free  # always true, documents it
+        assert len(self._registered_key) == len(self._prefix_registry)
         for s in range(self.n_slots):
             if s not in self._in_use:
                 assert (self.tables[s] == 0).all(), \

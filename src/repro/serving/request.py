@@ -56,6 +56,8 @@ class Request:
     n_small_steps: int = 0             # M_S tokens decoded before retire
     deferred: bool = False
     early_exited: bool = False         # evicted before max_new (in-flight)
+    shared_prefix_tokens: int = 0      # prompt tokens mapped from the
+                                       # prefix registry (never prefilled)
     # lifecycle timestamps (seconds from run start; nan until reached)
     t_admit: float = float("nan")
     t_retire: float = float("nan")     # left M_S (finished or evicted)

@@ -1,0 +1,545 @@
+"""Prefix-sharing / copy-on-write paged-cache tests: hash-chain registry,
+ref-count conservation under churn (hypothesis), CoW cloning, the
+paged-write aliasing guard (the hazard this machinery exists to prevent),
+release-while-shared and cached-block resurrection, reservation
+accounting at the CoW worst case, and bit-exact greedy parity of
+shared-prefix serving vs unshared runs on both paged decode paths."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_shim import given, settings, st
+from repro.configs import get_config, reduced
+from repro.data.synthetic import make_lm_stream
+from repro.models import transformer as tfm
+from repro.models.attention import _paged_write
+from repro.serving import (ContinuousCascadeEngine, ModelRunner,
+                           PagedCachePool, make_requests)
+from repro.serving.paged_pool import prefix_block_keys
+from repro.serving.request import DONE, Request
+from repro.serving.telemetry import ServingTelemetry
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return reduced(get_config("internlm2-1.8b"))
+
+
+@pytest.fixture(scope="module")
+def runners():
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 1)))
+    return small, large
+
+
+def shared_prefix_prompts(key, n, prefix_len, suffix_len, vocab):
+    """`n` prompts sharing one `prefix_len`-token prefix with distinct
+    `suffix_len`-token suffixes."""
+    base = make_lm_stream(key, n + 1, prefix_len + suffix_len, vocab)
+    prefix = np.asarray(base[0, :prefix_len], np.int32)
+    return [np.concatenate([prefix, base[i + 1, prefix_len:]]
+                           ).astype(np.int32) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Hash-chain keys
+# ---------------------------------------------------------------------------
+
+def test_prefix_block_keys_chain_property():
+    a = np.arange(16, dtype=np.int32)
+    b = a.copy()
+    ka, kb = prefix_block_keys(a, 4), prefix_block_keys(b, 4)
+    assert ka == kb and len(ka) == 4
+    # diverging block m invalidates keys m.. (chain, not per-block hash)
+    c = a.copy()
+    c[5] += 1
+    kc = prefix_block_keys(c, 4)
+    assert kc[0] == ka[0] and all(kc[m] != ka[m] for m in (1, 2, 3))
+    # equal blocks at different depths must NOT collide (prefix identity)
+    d = np.concatenate([a[4:8], a[4:8]]).astype(np.int32)
+    kd = prefix_block_keys(d, 4)
+    assert kd[0] != kd[1]
+    # partial tail blocks are never keyed
+    assert len(prefix_block_keys(a[:15], 4)) == 3
+    assert prefix_block_keys(a[:3], 4) == []
+
+
+# ---------------------------------------------------------------------------
+# Pool: share / CoW / release-while-shared / resurrection
+# ---------------------------------------------------------------------------
+
+def test_share_cow_release_lifecycle(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=3, n_blocks=12, block_size=4,
+                          max_len=24)
+    toks = np.arange(16, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 19)
+    pool.ensure_mapped(s0, 16)
+    assert pool.register_prefix(s0, toks) == 4
+    pool.check_invariants()
+
+    # sharing maps the registered blocks by refcount, no fresh allocation
+    free_before = pool.n_free_blocks
+    s1 = pool.alloc()
+    pool.reserve(s1, 19)
+    assert pool.share_prefix(s1, toks) == 16
+    assert pool.n_free_blocks == free_before
+    assert (pool.tables[s1, :4] == pool.tables[s0, :4]).all()
+    assert all(pool.ref[pool.tables[s1, m]] == 2 for m in range(4))
+    pool.check_invariants()
+
+    # the shared span is read-only: a write into it must CoW-clone first
+    assert pool.ensure_writable(s1, 15, 16) == 1
+    assert pool.tables[s1, 3] != pool.tables[s0, 3]
+    assert pool.ref[pool.tables[s1, 3]] == 1
+    assert pool.cow_clones == 1
+    pool.check_write_disjoint([(s0, 16, 19), (s1, 15, 19)])
+    pool.check_invariants()
+
+    # release-while-shared: the donor's still-shared blocks survive
+    pool.release(s0)
+    pool.check_invariants()
+    assert all(pool.ref[pool.tables[s1, m]] == 1 for m in range(4))
+
+    # releasing the last holder caches registered blocks: a later
+    # same-prefix request resurrects them even with no donor resident
+    pool.release(s1)
+    pool.check_invariants()
+    s2 = pool.alloc()
+    pool.reserve(s2, 19)
+    assert pool.share_prefix(s2, toks) == 16
+    pool.check_invariants()
+    pool.release(s2)
+    pool.check_invariants()
+
+
+def test_shared_blocks_not_double_freed(tiny_cfg):
+    """Releasing both holders of a shared block must return it to the
+    free list exactly once (refcount, not ownership)."""
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=8, block_size=4,
+                          max_len=16)
+    toks = np.arange(8, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 11)
+    pool.ensure_mapped(s0, 8)
+    pool.register_prefix(s0, toks)
+    s1 = pool.alloc()
+    pool.reserve(s1, 11)
+    pool.share_prefix(s1, toks)
+    pool.release(s1)
+    pool.check_invariants()
+    pool.release(s0)
+    pool.check_invariants()
+    assert pool.n_free_blocks == 8
+
+
+def test_partial_share_returns_full_reservation(tiny_cfg):
+    """A partially-shared prompt can never CoW (prefill restarts at a
+    block boundary), so sharing must hand ALL aliased blocks' owed
+    share back — no phantom slack eating admission headroom."""
+    pool = PagedCachePool(tiny_cfg, n_slots=3, n_blocks=12, block_size=4,
+                          max_len=24)
+    toks = np.arange(16, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 19)
+    pool.ensure_mapped(s0, 16)
+    pool.register_prefix(s0, toks)
+    # 12-of-16-token overlap: 3 of 4 prompt blocks match, share partial
+    other = np.concatenate([toks[:12], toks[:4] + 100]).astype(np.int32)
+    s1 = pool.alloc()
+    pool.reserve(s1, 19)                      # 5 blocks
+    reserved_before = pool._reserved_total
+    assert pool.share_prefix(s1, other) == 12
+    # needs exactly blocks 3 (tail of prompt) + 4 (decode) fresh: the
+    # 3 aliased blocks' reservation came back in full
+    assert reserved_before - pool._reserved_total == 3
+    pool.ensure_mapped(s1, 19)
+    pool.check_invariants()
+
+
+def test_cow_reservation_covers_fully_shared_prompt(tiny_cfg):
+    """A fully-shared prompt whose tail block must be CoW-cloned cannot
+    run out of blocks: share_prefix keeps one owed block of slack, so
+    the clone allocates within the reservation even at zero headroom."""
+    # budget exactly two requests' worst case: 4 prompt blocks + 1 decode
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=10, block_size=4,
+                          max_len=20)
+    toks = np.arange(16, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 19)                      # 5 blocks
+    pool.ensure_mapped(s0, 16)
+    pool.register_prefix(s0, toks)
+    s1 = pool.alloc()
+    assert pool.can_reserve(19)
+    pool.reserve(s1, 19)
+    assert pool.share_prefix(s1, toks) == 16  # all 4 prompt blocks aliased
+    # free headroom is now exactly the two slots' unmapped needs; the
+    # CoW clone of the recompute block must still succeed
+    assert pool.ensure_writable(s1, 15, 16) == 1
+    pool.ensure_mapped(s1, 17)                # first decode block
+    pool.ensure_mapped(s0, 17)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# The write-aliasing hazard (why CoW exists) + the dispatch guard
+# ---------------------------------------------------------------------------
+
+def test_paged_write_aliasing_guard():
+    """Two rows whose tables alias one physical block at their write
+    positions corrupt each other under the XLA paged scatter — exactly
+    the hazard shared blocks introduce. The pool must (a) detect such a
+    dispatch via check_write_disjoint and (b) never produce one, because
+    ensure_writable CoW-clones the shared block first."""
+    # demonstrate the raw hazard: both rows write "their" position of
+    # the SAME physical block 3; row 1's value lands in row 0's view
+    leaf = jnp.zeros((5, 4, 2), jnp.float32)
+    pages = jnp.asarray([[3], [3]], jnp.int32)
+    tpos = jnp.asarray([[1], [2]], jnp.int32)
+    vals = jnp.asarray([[[1.0, 1.0]], [[2.0, 2.0]]], jnp.float32)
+    out = _paged_write(leaf, pages, tpos, vals)
+    # row 0's block now ALSO contains row 1's token — shared-state leak
+    assert np.asarray(out)[3, 2, 0] == 2.0 and np.asarray(out)[3, 1, 0] == 1.0
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    pool = PagedCachePool(cfg, n_slots=2, n_blocks=8, block_size=4,
+                          max_len=16)
+    toks = np.arange(8, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 11)
+    pool.ensure_mapped(s0, 8)
+    pool.register_prefix(s0, toks)
+    s1 = pool.alloc()
+    pool.reserve(s1, 11)
+    pool.share_prefix(s1, toks)
+    # both rows "writing" inside the shared span in one dispatch = alias
+    with pytest.raises(RuntimeError, match="aliasing"):
+        pool.check_write_disjoint([(s0, 4, 8), (s1, 4, 8)])
+    # the engine's guard path: make each row's span private first
+    pool.ensure_writable(s0, 4, 8)
+    pool.ensure_writable(s1, 4, 8)
+    pool.check_write_disjoint([(s0, 4, 8), (s1, 4, 8)])
+    pool.check_invariants()
+
+
+def test_cow_clone_preserves_contents(tiny_cfg):
+    """cow_clone must copy the donor block's device contents bit-exactly
+    into the private clone (reads of the shared prefix stay identical)."""
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=8, block_size=4,
+                          max_len=16, dtype=jnp.float32)
+    toks = np.arange(8, dtype=np.int32)
+    s0 = pool.alloc()
+    pool.reserve(s0, 11)
+    pool.ensure_mapped(s0, 8)
+    # fill the mapped blocks with recognizable values
+    pool.cache = jax.tree.map(
+        lambda a: jnp.arange(a.size, dtype=a.dtype).reshape(a.shape),
+        pool.cache)
+    pool.register_prefix(s0, toks)
+    s1 = pool.alloc()
+    pool.reserve(s1, 11)
+    pool.share_prefix(s1, toks)
+    old = int(pool.tables[s1, 1])
+    new = pool.cow_clone(s1, 1)
+    assert new != old
+
+    def check(leaf, ax):
+        l = np.asarray(leaf)
+        if ax == 0:
+            np.testing.assert_array_equal(l[new], l[old])
+        else:
+            np.testing.assert_array_equal(l[:, new], l[:, old])
+    jax.tree.map(check, pool.cache, pool.block_axes)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Reservation accounting regressions (heap free lists, over-map)
+# ---------------------------------------------------------------------------
+
+def test_overmap_beyond_reservation_raises(tiny_cfg):
+    """Regression: ensure_mapped beyond a slot's own reservation used to
+    silently pop blocks other slots' reservations were counting on. It
+    must now raise when the over-map would break free >= reserved, and
+    leave the victim's reservation servable."""
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=4, block_size=4,
+                          max_len=16)
+    a = pool.alloc()
+    pool.reserve(a, 8)
+    pool.ensure_mapped(a, 8)                  # A's reservation fully mapped
+    b = pool.alloc()
+    pool.reserve(b, 8)                        # free=2 == reserved=2
+    with pytest.raises(RuntimeError, match="beyond its reservation"):
+        pool.ensure_mapped(a, 12)
+    pool.check_invariants()
+    pool.ensure_mapped(b, 8)                  # the victim still maps fine
+    pool.check_invariants()
+
+    # with real headroom the over-map (padded-chunk slack) is allowed
+    pool2 = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=6, block_size=4,
+                           max_len=16)
+    a2 = pool2.alloc()
+    pool2.reserve(a2, 8)
+    pool2.ensure_mapped(a2, 8)
+    b2 = pool2.alloc()
+    pool2.reserve(b2, 8)
+    pool2.ensure_mapped(a2, 12)               # headroom: 3 free > 2 reserved
+    pool2.check_invariants()
+    pool2.ensure_mapped(b2, 8)
+    pool2.check_invariants()
+
+
+def test_free_lists_stay_lowest_id_first(tiny_cfg):
+    """The heapq free lists must preserve deterministic lowest-id-first
+    allocation across out-of-order releases (the old list.sort
+    behavior), and prefer evicting unregistered blocks over cached
+    prefixes."""
+    pool = PagedCachePool(tiny_cfg, n_slots=3, n_blocks=9, block_size=4,
+                          max_len=12)
+    slots = [pool.alloc() for _ in range(3)]
+    assert slots == [0, 1, 2]
+    for s in slots:
+        pool.reserve(s, 11)
+        pool.ensure_mapped(s, 11)             # 3 blocks each, ids in order
+    assert pool.tables[0, :3].tolist() == [1, 2, 3]
+    # release out of order; realloc must hand back lowest ids first
+    pool.release(slots[2])
+    pool.release(slots[0])
+    assert pool.alloc() == 0
+    pool.reserve(0, 11)
+    pool.ensure_mapped(0, 11)
+    assert pool.tables[0, :3].tolist() == [1, 2, 3]
+    pool.check_invariants()
+
+    # cached (registered) free blocks are evicted only after plain ones
+    toks = np.arange(8, dtype=np.int32)
+    pool.release(0)
+    pool.release(1)
+    s = pool.alloc()
+    pool.reserve(s, 8)
+    pool.ensure_mapped(s, 8)                  # blocks 1, 2
+    pool.register_prefix(s, toks)
+    pool.release(s)                           # 1, 2 cached; rest plain
+    t = pool.alloc()
+    pool.reserve(t, 12)
+    pool.ensure_mapped(t, 12)
+    assert pool.tables[t, :3].tolist() == [3, 4, 5]   # skipped cached 1, 2
+    s2 = pool.alloc()
+    pool.reserve(s2, 8)
+    assert pool.share_prefix(s2, toks) == 8           # cache still intact
+    assert pool.tables[s2, :2].tolist() == [1, 2]
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Ref-count conservation under churn (property test)
+# ---------------------------------------------------------------------------
+
+_CHURN_CFG = None
+
+
+def _churn_cfg():
+    global _CHURN_CFG
+    if _CHURN_CFG is None:
+        _CHURN_CFG = reduced(get_config("internlm2-1.8b"))
+    return _CHURN_CFG
+
+
+@given(st.lists(st.tuples(st.integers(0, 4),     # op
+                          st.integers(0, 5),     # slot / prompt selector
+                          st.integers(1, 24)),   # length / position
+                min_size=1, max_size=60),
+       st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_refcount_invariants_under_churn(ops, pick):
+    """Random admit/share/map/write/release churn: refcount conservation
+    (sum of table mappings == ref[]; ref-0 set == free set; their union
+    partitions {1..n_blocks}), registry consistency, and reservation
+    bounds must hold after every single operation. Writes follow the
+    engine's discipline — only at or beyond the first unshared token —
+    which is what the one-block CoW reservation slack covers."""
+    cfg = _churn_cfg()
+    pool = PagedCachePool(cfg, n_slots=4, n_blocks=14, block_size=4,
+                          max_len=28)
+    base = np.arange(64, dtype=np.int32)
+    # four prompts with heavy prefix overlap so share/CoW paths trigger
+    prompts = [base[:16],
+               base[:16].copy(),
+               np.concatenate([base[:12], base[40:44]]).astype(np.int32),
+               np.concatenate([base[:8], base[48:56]]).astype(np.int32)]
+    live = {}                                  # slot -> (prompt, total, start)
+    for op, sel, ln in ops:
+        if op == 0 and pool.n_free:            # admit
+            prompt = prompts[(sel + pick) % len(prompts)]
+            total = prompt.shape[0] + (ln % 8)
+            if not pool.can_reserve(total):
+                continue
+            slot = pool.alloc()
+            pool.reserve(slot, total)
+            shared = pool.share_prefix(slot, prompt)
+            assert shared % pool.block_size == 0
+            assert shared <= prompt.shape[0]
+            pool.ensure_mapped(slot, prompt.shape[0])
+            live[slot] = (prompt, total, min(shared, prompt.shape[0] - 1))
+        elif op == 1 and live:                 # map further (decode)
+            slot = sorted(live)[sel % len(live)]
+            prompt, total, _ = live[slot]
+            pool.ensure_mapped(slot, min(prompt.shape[0] + ln, total))
+        elif op == 2 and live:                 # write at/after the frontier
+            slot = sorted(live)[sel % len(live)]
+            prompt, total, start = live[slot]
+            lo = start + ln % max(total - start, 1)
+            pool.ensure_writable(slot, lo, min(lo + 4, total))
+        elif op == 3 and live:                 # publish prefix
+            slot = sorted(live)[sel % len(live)]
+            pool.register_prefix(slot, live[slot][0])
+        elif op == 4 and live:                 # retire
+            slot = sorted(live)[sel % len(live)]
+            pool.release(slot)
+            del live[slot]
+        pool.check_invariants()
+        # every live slot must still be able to map its full reservation
+        assert pool.n_free_blocks >= pool._reserved_total
+    for slot in sorted(live):
+        pool.release(slot)
+        pool.check_invariants()
+    assert pool.n_free_blocks == pool.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# Engine: shared-prefix greedy parity (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+def _paged_engine(small, large, **kw):
+    kw.setdefault("n_slots", 2)
+    return ContinuousCascadeEngine(small, large, tau=-1e9,
+                                   early_exit=False, backend="paged",
+                                   block_size=4, prefill_chunk=4, **kw)
+
+
+@pytest.mark.parametrize("kernel", [False, True],
+                         ids=["xla-fallback", "pallas-kernel"])
+def test_shared_prefix_parity_bit_exact(runners, kernel):
+    """Acceptance: greedy outputs of a shared-prefix run are bit-exact
+    vs the unshared run of the identical request stream — on the XLA
+    gather fallback AND the interpret-mode paged kernels — and sharing
+    actually engaged (prefill-token count strictly drops)."""
+    small, large = runners
+    prompts = shared_prefix_prompts(jax.random.PRNGKey(5), 4,
+                                    prefix_len=12, suffix_len=4,
+                                    vocab=small.cfg.vocab_size)
+    # single slot: requests run back-to-back, so every later request
+    # deterministically shares the first one's cached prefix blocks
+    shared = _paged_engine(small, large, n_slots=1, paged_kernel=kernel,
+                           prefix_sharing=True).run(
+        make_requests(prompts, 5), 5)
+    plain = _paged_engine(small, large, n_slots=1, paged_kernel=kernel,
+                          prefix_sharing=False).run(
+        make_requests(prompts, 5), 5)
+
+    np.testing.assert_array_equal(shared.tokens, plain.tokens)
+    np.testing.assert_allclose(shared.confidence, plain.confidence,
+                               rtol=1e-5)
+    assert shared.stats["shared_tokens"] == 3 * 12
+    assert shared.stats["prefill_tokens"] < plain.stats["prefill_tokens"]
+    assert plain.stats["shared_tokens"] == 0
+    assert all(r.state == DONE for r in shared.requests)
+    for r in shared.requests:
+        t, c = small.generate(r.prompt[None, :], r.prompt_len, 5)
+        np.testing.assert_array_equal(r.tokens, t[0])
+        np.testing.assert_allclose(r.confidence, c[0], rtol=1e-5)
+
+
+@pytest.mark.parametrize("kernel", [False, True],
+                         ids=["xla-fallback", "pallas-kernel"])
+def test_fully_shared_prompt_cow_parity(runners, kernel):
+    """Identical prompts (length a multiple of block_size): the whole
+    prompt matches the registry, so the final token is recomputed into
+    a CoW-cloned tail block when two sharers are resident. Two slots +
+    four requests make wave 2 share wave 1's registered blocks
+    concurrently — the clone is deterministic — and every request's
+    greedy tokens must equal its standalone generation."""
+    small, large = runners
+    base = make_lm_stream(jax.random.PRNGKey(9), 1, 16,
+                          small.cfg.vocab_size)
+    prompts = [np.asarray(base[0], np.int32) for _ in range(4)]
+    res = _paged_engine(small, large, n_slots=2, paged_kernel=kernel,
+                        prefix_sharing=True).run(
+        make_requests(prompts, 4), 4)
+    assert res.stats["shared_tokens"] > 0
+    assert res.stats["cow_clones"] >= 1       # wave-2 concurrent sharers
+    t, _ = small.generate(prompts[0][None, :], 16, 4)
+    for r in res.requests:
+        np.testing.assert_array_equal(r.tokens, t[0])
+
+
+def test_shared_prefix_parity_mla(runners):
+    """Prefix sharing + CoW must also hold for the MLA compressed-kv
+    paged cache (ckv/kr leaves clone together)."""
+    key = jax.random.PRNGKey(21)
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    cfg = cfg.replace(moe=None, family="dense", n_layers=2)
+    small = ModelRunner(cfg, tfm.init_params(cfg, key))
+    large = ModelRunner(cfg.replace(name="l"),
+                        tfm.init_params(cfg, jax.random.fold_in(key, 1)))
+    prompts = shared_prefix_prompts(jax.random.fold_in(key, 2), 3,
+                                    prefix_len=8, suffix_len=4,
+                                    vocab=cfg.vocab_size)
+    shared = _paged_engine(small, large, n_slots=1,
+                           prefix_sharing=True).run(
+        make_requests(prompts, 3), 3)
+    plain = _paged_engine(small, large, n_slots=1,
+                          prefix_sharing=False).run(
+        make_requests(prompts, 3), 3)
+    np.testing.assert_array_equal(shared.tokens, plain.tokens)
+    assert shared.stats["shared_tokens"] > 0
+
+
+def test_sharing_disabled_row_matches_pre_sharing_behavior(runners):
+    """prefix_sharing=False keeps the pool on the old one-owner-per-
+    block path: no shared blocks, no CoW, zero registry traffic."""
+    small, large = runners
+    prompts = shared_prefix_prompts(jax.random.PRNGKey(6), 3,
+                                    prefix_len=12, suffix_len=4,
+                                    vocab=small.cfg.vocab_size)
+    res = _paged_engine(small, large, prefix_sharing=False).run(
+        make_requests(prompts, 4), 4)
+    assert res.stats["shared_tokens"] == 0
+    assert res.stats["shared_blocks"] == 0
+    assert res.stats["cow_clones"] == 0
+    assert not res.stats["prefix_sharing"]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry satellites
+# ---------------------------------------------------------------------------
+
+def test_telemetry_context_manager_closes_on_error(tmp_path):
+    path = str(tmp_path / "audit.jsonl")
+    with pytest.raises(ValueError, match="boom"):
+        with ServingTelemetry(path) as tel:
+            tel.event("admit", rid=0)
+            raise ValueError("boom")
+    assert tel._fh is None                     # handle released
+    assert "admit" in open(path).read()        # buffered event flushed
+
+
+def test_summary_counts_real_token_lengths():
+    """out_tokens must be the tokens actually delivered, not the sum of
+    per-request budgets: a clamped / heterogeneous-budget run reports
+    the throughput of what it really produced."""
+    reqs = []
+    for rid, (budget, real) in enumerate([(8, 8), (8, 3), (8, 0)]):
+        r = Request(rid=rid, prompt=np.zeros(4, np.int32), max_new=budget)
+        r.tokens = np.zeros(real, np.int32) if real else None
+        r.t_admit = r.t_retire = r.t_done = 1.0
+        reqs.append(r)
+    tel = ServingTelemetry()
+    s = tel.summary(reqs, makespan=1.0)
+    assert s["throughput_tok_s"] == pytest.approx(11.0)   # 8 + 3 + 0
