@@ -37,8 +37,19 @@ and once timed. Reported per scenario: tokens/s, latency percentiles
 (p50/p95/p99), deferral ratio + wait, M_S decode steps executed/saved,
 cache footprint.
 
+Observability (`--obs-row`, or implied by any obs output flag): adds a
+`continuous+obs` row — the `continuous` configuration re-run with the
+observability layer on (span tracing when --trace-out, Prometheus
+metrics, bounded event retention) — and gates it within `--obs-gate`
+(default 5%) tokens/s of the plain `continuous` row, so instrumentation
+overhead is a CI-checked number, not a hope. `--trace-out` dumps the
+obs row's Chrome trace (Perfetto-loadable), `--metrics-out` its final
+Prometheus scrape.
+
 CI regression gating: `--bench-out BENCH_serving.json` emits the rows as
-a machine-readable artifact; `--baseline benchmarks/baselines/serving_cpu.json`
+a machine-readable artifact (tokens/s, p95, deferral, queueing p95 and
+the per-phase time breakdown per row);
+`--baseline benchmarks/baselines/serving_cpu.json`
 fails the run (exit 1) when any row's tokens/s drops more than 25% below
 the committed baseline; `--update-baseline` rewrites the baseline file
 from the current run (commit it when a slowdown/speedup is intentional).
@@ -49,6 +60,8 @@ from the current run (commit it when a slowdown/speedup is intentional).
     PYTHONPATH=src python -m benchmarks.bench_serving --requests 12 \
         --max-new 12 --slots 4 --bench-out BENCH_serving.json \
         --baseline benchmarks/baselines/serving_cpu.json
+    PYTHONPATH=src python -m benchmarks.bench_serving --obs-row \
+        --trace-out /tmp/serving_trace.json
 """
 from __future__ import annotations
 
@@ -66,6 +79,8 @@ from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.launch.serve import build_runners
 from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
                            make_requests, poisson_arrivals)
+from repro.serving.obs import (ObsConfig, add_obs_args,
+                               obs_config_from_args)
 
 from benchmarks.common import emit_csv_row, save_result
 
@@ -109,8 +124,9 @@ def run_static(engine: CascadeEngine, requests: List, prompt_len: int,
 
 
 def run_continuous(engine: ContinuousCascadeEngine, requests: List,
-                   max_new: int, label: str) -> Dict:
-    res = engine.run(requests, max_new)
+                   max_new: int, label: str,
+                   obs: Optional[ObsConfig] = None) -> Dict:
+    res = engine.run(requests, max_new, obs=obs)
     s = res.stats
     row = {
         "engine": label,
@@ -119,6 +135,7 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         "latency_p50_s": s["latency_p50_s"],
         "latency_p95_s": s["latency_p95_s"],
         "latency_p99_s": s["latency_p99_s"],
+        "queueing_p95_s": s.get("queueing_p95_s", float("nan")),
         "deferral_ratio": s["deferral_ratio"],
         "deferral_wait_p50_ms": s.get("deferral_wait_p50_ms",
                                       float("nan")),
@@ -126,6 +143,9 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         "saved_steps": res.saved_steps,
         "cache_mb": s["cache_bytes"] / 2**20,
     }
+    for k, v in s.items():
+        if k.startswith("phase_"):
+            row[k] = v
     if "peak_blocks" in s:
         row["peak_blocks"] = s["peak_blocks"]
         row["n_blocks"] = s["n_blocks"]
@@ -159,7 +179,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         paged_kernel: Optional[bool] = None,
         batch_prefill: bool = True,
         shared_prefix_len: int = 0,
-        shared_head_start: float = 1.0) -> Dict:
+        shared_head_start: float = 1.0,
+        obs_cfg: Optional[ObsConfig] = None) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
     # comparable to `repro.launch.serve`
@@ -217,6 +238,19 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
                                    steps_per_sync=4)
     rows.append(best_of(lambda: run_continuous(cont, fresh(), max_new,
                                                "continuous")))
+
+    # -- observability overhead row ----------------------------------------
+    if obs_cfg is not None:
+        # same engine/config as `continuous`, run with the observability
+        # layer on: the tokens/s delta vs the row above IS the
+        # instrumentation overhead (each rep re-exports the trace /
+        # metrics dump, so the artifact cost is measured too)
+        cont_o = ContinuousCascadeEngine(small, large, n_slots=slots,
+                                         tau=tau, early_exit=False,
+                                         large_batch=slots,
+                                         steps_per_sync=4)
+        rows.append(best_of(lambda: run_continuous(
+            cont_o, fresh(), max_new, "continuous+obs", obs=obs_cfg)))
 
     # margin > 0 keeps eviction conservative: transient confidence dips
     # shouldn't buy an M_L regeneration that final-mean deferral wouldn't
@@ -302,6 +336,16 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
     print(f"# best continuous ({best['engine']}) vs {rows[0]['engine']}: "
           f"{best['throughput_tok_s'] / base:.2f}x, "
           f"early-exit M_S step savings: {best['saved_steps']}")
+    obs_overhead = None
+    if obs_cfg is not None:
+        plain = next(r for r in rows if r["engine"] == "continuous")
+        obs_row = next(r for r in rows if r["engine"] == "continuous+obs")
+        obs_overhead = 1.0 - (obs_row["throughput_tok_s"]
+                              / plain["throughput_tok_s"])
+        print(f"# observability overhead: "
+              f"{obs_row['throughput_tok_s']:.1f} tok/s with obs on vs "
+              f"{plain['throughput_tok_s']:.1f} off "
+              f"({obs_overhead:+.1%} slower)")
     if backend == "paged":
         slot_row = next(r for r in rows if r["engine"] == "continuous")
         paged_row = next(r for r in rows if r["engine"].startswith("paged"))
@@ -338,7 +382,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         "ragged_min": ragged_min, "ragged_max": ragged_max,
         "large_max_wait": large_max_wait, "paged_kernel": paged_kernel,
         "batch_prefill": batch_prefill,
-        "shared_prefix_len": shared_prefix_len}, "rows": rows}
+        "shared_prefix_len": shared_prefix_len}, "rows": rows,
+        "obs_overhead": obs_overhead}
     save_result("serving", payload)
     for r in rows:
         emit_csv_row(f"serving/{r['engine']}",
@@ -357,10 +402,18 @@ def bench_record(payload: Dict) -> Dict:
             "engine": r["engine"],
             "tokens_per_s": round(r["throughput_tok_s"], 2),
             "p95_latency_ms": round(r["latency_p95_s"] * 1e3, 2),
+            "queueing_p95_s":
+                (round(r["queueing_p95_s"], 4)
+                 if np.isfinite(r.get("queueing_p95_s", float("nan")))
+                 else None),
             "deferral_ratio": round(r["deferral_ratio"], 4),
             "deferral_wait_p50_ms":
                 (round(r["deferral_wait_p50_ms"], 2)
                  if np.isfinite(r["deferral_wait_p50_ms"]) else None),
+            "phase_breakdown_s": {
+                k[len("phase_"):-len("_s")]: round(v, 4)
+                for k, v in r.items()
+                if k.startswith("phase_") and k.endswith("_s")},
         } for r in payload["rows"]],
     }
 
@@ -445,9 +498,19 @@ def main():
                          "alone so its prompt blocks are registered "
                          "before the rest arrive together")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-row", action="store_true",
+                    help="add a continuous+obs row (the continuous "
+                         "config with the observability layer on) and "
+                         "gate its tokens/s within --obs-gate of the "
+                         "plain row; implied by any obs output flag")
+    ap.add_argument("--obs-gate", type=float, default=0.05,
+                    help="allowed fractional tokens/s overhead of the "
+                         "continuous+obs row vs continuous (exit 1 "
+                         "beyond it)")
     ap.add_argument("--bench-out", default=None,
                     help="write the machine-readable bench record "
-                         "(tokens/s, p95, deferral) to this JSON path")
+                         "(tokens/s, p95, deferral, queueing p95, phase "
+                         "breakdown) to this JSON path")
     ap.add_argument("--baseline", default=None,
                     help="committed baseline JSON to gate against: "
                          "exit 1 if any engine's tokens/s drops >25%% "
@@ -457,14 +520,19 @@ def main():
                          "gating (commit the result)")
     ap.add_argument("--max-drop", type=float, default=0.25,
                     help="allowed fractional tokens/s drop vs baseline")
+    add_obs_args(ap)
     args = ap.parse_args()
+    base_obs = obs_config_from_args(args)
+    obs_cfg = (base_obs if (args.obs_row or base_obs.any_enabled
+                            or base_obs.max_events is not None) else None)
     payload = run(args.requests, args.prompt_len, args.max_new, args.slots,
                   args.target_deferral, args.rate, args.seed, args.margin,
                   args.min_tokens, args.backend, args.block_size,
                   args.blocks or None, args.prefill_chunk,
                   args.ragged_min, args.ragged_max, args.large_max_wait,
                   args.paged_kernel or None, not args.serial_prefill,
-                  args.shared_prefix_len, args.shared_head_start)
+                  args.shared_prefix_len, args.shared_head_start,
+                  obs_cfg=obs_cfg)
     record = bench_record(payload)
     if args.bench_out:
         with open(args.bench_out, "w") as f:
@@ -480,6 +548,15 @@ def main():
             print("# BENCHMARK REGRESSION:\n#  " + "\n#  ".join(failures))
             sys.exit(1)
         print("# baseline check passed")
+    if payload.get("obs_overhead") is not None:
+        oh = payload["obs_overhead"]
+        if oh > args.obs_gate:
+            print(f"# OBSERVABILITY OVERHEAD REGRESSION: continuous+obs "
+                  f"is {oh:.1%} slower than continuous "
+                  f"(allowed {args.obs_gate:.0%})")
+            sys.exit(1)
+        print(f"# observability overhead gate passed "
+              f"({oh:+.1%} <= {args.obs_gate:.0%})")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,13 @@ partial batch may wait before flushing.
     PYTHONPATH=src python -m repro.launch.serve --engine continuous \
         --backend paged --ragged-min 8 --ragged-max 32 --block-size 8 \
         --prefill-chunk 8
+
+Observability (continuous engine; see docs/observability.md):
+--trace-out dumps a Perfetto-loadable Chrome trace of the run,
+--metrics-out / --metrics-port export the Prometheus metrics registry
+(file dump / live scrape endpoint), --device-timing splits host vs
+device wall time per phase, and --profile-dir captures a jax.profiler
+window of the first --profile-iters engine iterations.
 """
 from __future__ import annotations
 
@@ -42,6 +49,8 @@ from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.models import transformer as tfm
 from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
                            ModelRunner, make_requests, poisson_arrivals)
+from repro.serving.obs import (Observability, add_obs_args,
+                               obs_config_from_args)
 
 
 def build_runners(arch: str, seed: int):
@@ -116,11 +125,16 @@ def main():
                          "[ragged-min, ragged-max] (continuous engine)")
     ap.add_argument("--ragged-max", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.ragged_min > 0 and args.engine == "static":
         ap.error("--ragged-min/--ragged-max need --engine continuous "
                  "(the static engine serves lock-step uniform batches)")
+    obs_cfg = obs_config_from_args(args)
+    if args.engine == "static" and obs_cfg.any_enabled:
+        ap.error("observability flags (--trace-out/--metrics-*/"
+                 "--device-timing/--profile-dir) need --engine continuous")
 
     key = jax.random.PRNGKey(args.seed)
     small, large, small_cfg = build_runners(args.arch, args.seed)
@@ -172,7 +186,18 @@ def main():
     arrivals = (poisson_arrivals(len(live), args.arrival_rate, args.seed)
                 if args.arrival_rate > 0 else None)
     reqs = make_requests(live, args.max_new, arrivals)
-    res = engine.run(reqs, args.max_new, audit_path=args.audit_log)
+    # caller-owned observability runtime: the /metrics endpoint stays up
+    # (and announced) before the run starts and until after the final
+    # scrape is dumped
+    obs = Observability(obs_cfg)
+    server = obs.start_server()
+    if server is not None:
+        print(f"metrics endpoint: {server.url}")
+    try:
+        res = engine.run(reqs, args.max_new, audit_path=args.audit_log,
+                         obs=obs)
+    finally:
+        obs.finish()
     print(f"served {len(live)} requests on {args.slots} slots "
           f"({args.backend} backend, M_L via {args.large_backend}) in "
           f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "
@@ -182,6 +207,13 @@ def main():
                       for k, v in res.stats.items()}, indent=1))
     if args.audit_log:
         print(f"audit log written to {args.audit_log}")
+    if args.trace_out:
+        print(f"trace written to {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        print(f"metrics scrape written to {args.metrics_out}")
+    if args.profile_dir:
+        print(f"jax.profiler trace in {args.profile_dir}")
     print("first tokens:", res.tokens[:4].tolist())
 
 

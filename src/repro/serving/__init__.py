@@ -62,7 +62,11 @@ engine      ModelRunner (on-device greedy loop), static CascadeEngine,
             ContinuousCascadeEngine (continuous batching + in-flight
             deferral over either backend, chunked prefill, streaming
             M_L deferral).
-telemetry   Event stream, JSONL audit log, throughput/latency summary.
+telemetry   Event stream, JSONL audit log, throughput/latency summary +
+            phase-time breakdown, built on the obs metrics registry.
+obs         Observability layer: span tracing with Chrome-trace export
+            (Perfetto), bounded Prometheus metrics registry + /metrics
+            endpoint, host/device time attribution, jax.profiler window.
 """
 from repro.serving.cache_pool import SlotCachePool
 from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
@@ -72,6 +76,8 @@ from repro.serving.large_backend import (BatchPolicy, LargeBackend,
                                          LargeResult, RemoteStubBackend,
                                          SyncLocalBackend, ThreadedBackend,
                                          make_large_backend)
+from repro.serving.obs import (MetricsRegistry, Observability, ObsConfig,
+                               Tracer, validate_chrome_trace)
 from repro.serving.paged_pool import PagedCachePool
 from repro.serving.request import (ArrivalQueue, Request, make_requests,
                                    poisson_arrivals)
@@ -81,8 +87,9 @@ from repro.serving.telemetry import ServingTelemetry
 __all__ = [
     "ArrivalQueue", "BatchPolicy", "CascadeEngine",
     "ContinuousCascadeEngine", "ContinuousServeResult", "LargeBackend",
-    "LargeResult", "ModelRunner", "PagedCachePool", "RemoteStubBackend",
-    "Request", "ServeResult", "ServingTelemetry", "SlotCachePool",
-    "SlotScheduler", "SyncLocalBackend", "ThreadedBackend",
-    "make_large_backend", "make_requests", "poisson_arrivals",
+    "LargeResult", "MetricsRegistry", "ModelRunner", "ObsConfig",
+    "Observability", "PagedCachePool", "RemoteStubBackend", "Request",
+    "ServeResult", "ServingTelemetry", "SlotCachePool", "SlotScheduler",
+    "SyncLocalBackend", "ThreadedBackend", "Tracer", "make_large_backend",
+    "make_requests", "poisson_arrivals", "validate_chrome_trace",
 ]

@@ -64,6 +64,8 @@ from repro.models import transformer as tfm
 from repro.serving.cache_pool import (SlotCachePool, cache_batch_axes,
                                       scatter_rows)
 from repro.serving.large_backend import make_large_backend
+from repro.serving.obs import Observability
+from repro.serving.obs.trace import emit_request_spans
 from repro.serving.paged_pool import PagedCachePool, next_pow2
 from repro.serving.request import (DEFERRED_PENDING, DONE, ArrivalQueue,
                                    Request, make_requests)
@@ -469,13 +471,24 @@ class ContinuousCascadeEngine:
     # -- host-side control loop -------------------------------------------
     def run(self, requests: List[Request], max_new: Optional[int] = None,
             audit_path: Optional[str] = None, *,
-            prompt_len: Optional[int] = None) -> ContinuousServeResult:
+            prompt_len: Optional[int] = None,
+            obs=None) -> ContinuousServeResult:
         """Serve `requests` (each carrying its own prompt and budget).
 
         `max_new` is the run-wide token-buffer width and budget cap
         (default: the largest request budget); per-request `max_new`
         larger than it is clamped so the device budget, retirement check,
         and saved-step accounting agree.
+
+        `obs` selects the observability surface (`repro.serving.obs`):
+        ``None`` (default) keeps only the always-on bounded metrics +
+        phase attribution; an `ObsConfig` makes the engine build the
+        runtime, run, and export/finish it (the one-shot CLI/bench
+        path); a prebuilt `Observability` is caller-owned — the engine
+        feeds it but never finishes it (e.g. serve.py keeping the
+        /metrics endpoint open across runs). Instrumentation never
+        changes what the device computes: greedy outputs are bit-exact
+        with observability on or off.
 
         .. deprecated:: the old ``run(requests, prompt_len, max_new)``
            call shape is gone — prompt lengths are per-request
@@ -538,11 +551,20 @@ class ContinuousCascadeEngine:
 
         sched = SlotScheduler(pool)
         queue = ArrivalQueue(requests)
+        # a passed-in Observability is caller-owned; anything else
+        # (None or an ObsConfig) the engine builds and finishes itself
+        own_obs = not isinstance(obs, Observability)
+        obs_rt = obs if isinstance(obs, Observability) else Observability(obs)
+        if own_obs:
+            obs_rt.start_server()
+        tr = obs_rt.tracer
+        dev_timer = obs_rt.device_timer
+        profiler = obs_rt.profiler
         # the audit-log handle must be released even when setup or the
         # serve loop raises: ServingTelemetry is a context manager, and
         # the worker backend gets its own try/finally inside (a leaked
         # worker thread spins its poll loop for the life of the process)
-        tel = ServingTelemetry(audit_path)
+        tel = ServingTelemetry(audit_path, obs=obs_rt)
         ml = None
         try:
             S = self.n_slots
@@ -566,9 +588,32 @@ class ContinuousCascadeEngine:
             peak_active = 0
             ml = make_large_backend(self.large_backend, self.large, max_new,
                                     self.large_batch, self.large_max_wait,
-                                    self.stub_latency)
+                                    self.stub_latency,
+                                    registry=tel.registry)
             by_rid = {r.rid: r for r in requests}
             ml_depths: List[int] = []
+            # pull-mode gauges: evaluated only when someone scrapes
+            # /metrics or renders the registry — zero loop cost
+            reg = tel.registry
+            reg.gauge("serving_active_slots",
+                      "requests resident in M_S decode slots",
+                      fn=lambda: sched.n_active)
+            reg.gauge("serving_queue_ready",
+                      "arrived requests awaiting slot admission",
+                      fn=lambda: queue.n_ready)
+            reg.gauge("serving_requests_admitted",
+                      "requests admitted into slots (lifetime)",
+                      fn=lambda: sched.n_admitted)
+            reg.gauge("serving_requests_retired",
+                      "requests retired from slots (lifetime)",
+                      fn=lambda: sched.n_retired)
+            if paged:
+                pool.register_metrics(reg)
+            # host mirrors of the device confidence accumulators, used
+            # only when span tracing is on to derive the per-token
+            # confidence record from per-sync deltas of conf_sum
+            conf_prev = np.zeros(S, np.float64)
+            ngen_prev = np.zeros(S, np.int64)
             tel.reset_clock()
 
             def submit_large(req: Request):
@@ -590,6 +635,7 @@ class ContinuousCascadeEngine:
                     req.state = DONE
                     now = tel.now
                     req.t_done = now
+                    tel.m_tokens.labels(model="large").inc(len(req.tokens))
                     tel.event("large_complete", rid=req.rid,
                               batch_id=res.batch_id, n_real=res.n_real,
                               pad_to=res.pad_to, reason=res.reason,
@@ -631,15 +677,48 @@ class ContinuousCascadeEngine:
                         submit_large(req)
                     else:
                         req.tokens = toks[slot, :req.max_new].copy()
+                    reason = ("defer_early" if evict else
+                              "defer_final" if defer else "finish")
                     tel.event("retire", rid=req.rid, slot=slot,
-                              reason=("defer_early" if evict else
-                                      "defer_final" if defer else "finish"),
-                              n_gen=n, confidence=round(mean, 6))
+                              reason=reason, n_gen=n,
+                              confidence=round(mean, 6))
+                    tel.m_requests.labels(outcome=reason).inc()
+                    if not defer:
+                        tel.m_tokens.labels(model="small").inc(
+                            len(req.tokens))
                     retired.append(slot)
                 if retired:
                     state = dict(state)
                     state["active"] = state["active"].at[
                         jnp.asarray(retired)].set(False)
+
+            def seed_conf_trace(pairs):
+                """Start each newly decoding request's per-token
+                confidence record from its prefill seed value (tracing
+                mode only; one transfer for the whole batch)."""
+                cs = np.asarray(state["conf_sum"])
+                ng = np.asarray(state["n_gen"])
+                for slot, req in pairs:
+                    conf_prev[slot] = float(cs[slot])
+                    ngen_prev[slot] = int(ng[slot])
+                    req.conf_trace = [round(conf_prev[slot], 6)]
+
+            def record_conf_trace(decoding):
+                """Extend the per-token confidence records from per-sync
+                deltas of the device-accumulated conf_sum (tracing mode
+                only — sync_retire transfers these vectors right after,
+                so no extra device work is forced; with steps_per_sync>1
+                each entry is the chunk's mean)."""
+                cs, ng = jax.device_get((state["conf_sum"],
+                                         state["n_gen"]))
+                for slot in decoding:
+                    req = sched.running[slot]
+                    dn = int(ng[slot]) - int(ngen_prev[slot])
+                    if req.conf_trace is not None and dn > 0:
+                        req.conf_trace.append(round(
+                            (float(cs[slot]) - conf_prev[slot]) / dn, 6))
+                    conf_prev[slot] = float(cs[slot])
+                    ngen_prev[slot] = int(ng[slot])
 
             def admit_slot_groups(admitted):
                 """Slot backend: batched prefill per distinct prompt length
@@ -659,6 +738,11 @@ class ContinuousCascadeEngine:
                     pool.cache, state = admit_fn(self.small.params, prompts,
                                                  slots, budgets, pool.cache,
                                                  state)
+                now = tel.now
+                for _, r in admitted:
+                    r.t_prefill_done = now
+                if tr is not None:
+                    seed_conf_trace(admitted)
 
             def run_prefill_chunk():
                 """Paged backend: run one chunk of the oldest mid-prefill
@@ -706,9 +790,13 @@ class ContinuousCascadeEngine:
                 logits, pool.cache = prefill_fn(
                     self.small.params, jnp.asarray(chunks), jnp.asarray(tbl),
                     off0, jnp.asarray(last_idx), pool.cache)
+                if dev_timer.enabled:
+                    t_dev = tel.now
+                    jax.block_until_ready((logits, pool.cache))
+                    tel.phase_add("prefill", 0.0, tel.now - t_dev)
                 n_prefill_dispatches += 1
                 n_prefill_chunks += k
-                finished = False
+                seeded: List[Tuple[int, Request]] = []
                 for i, entry in enumerate(group):
                     req, slot, off = entry
                     if off + C >= req.prompt_len:  # final chunk: seed decode
@@ -719,16 +807,19 @@ class ContinuousCascadeEngine:
                             # publish the fully-written prompt blocks so
                             # later same-prefix arrivals can map them
                             pool.register_prefix(slot, req.prompt)
+                        req.t_prefill_done = tel.now
                         tel.event("prefill_done", rid=req.rid, slot=slot,
                                   chunks=math.ceil(
                                       max(req.prompt_len
                                           - req.shared_prefix_tokens, 1)
                                       / C),
                                   shared=req.shared_prefix_tokens)
-                        finished = True
+                        seeded.append((slot, req))
                     else:
                         entry[2] = off + C
-                if finished:
+                if seeded:
+                    if tr is not None:
+                        seed_conf_trace(seeded)
                     sync_retire()        # max_new == 1: already finished
 
             def decoding_slots() -> List[int]:
@@ -738,6 +829,9 @@ class ContinuousCascadeEngine:
 
             try:
                 while len(queue) or sched.n_active:
+                    t_it = tel.now
+                    if profiler.enabled:
+                        profiler.tick()
                     if paged:
                         # admit one at a time: each admission reserves its
                         # blocks immediately, so the capacity check for the
@@ -774,18 +868,27 @@ class ContinuousCascadeEngine:
                                       slots=[s for s, _ in admitted],
                                       shared=[r.shared_prefix_tokens
                                               for _, r in admitted])
-                        if prefilling:
+                        t_sched = tel.now
+                        did_prefill = bool(prefilling)
+                        if did_prefill:
                             run_prefill_chunk()
                     else:
                         admitted = sched.admit_ready(queue, tel.now)
+                        t_sched = tel.now
+                        did_prefill = bool(admitted)
                         if admitted:
                             admit_slot_groups(admitted)
                             tel.event("admit",
                                       rids=[r.rid for _, r in admitted],
                                       slots=[s for s, _ in admitted])
                             sync_retire()   # min_tokens=1 / max_new=1 edges
+                    t_prefill = tel.now
+                    tel.phase_add("schedule", t_sched - t_it)
+                    if did_prefill:
+                        tel.phase_add("prefill", t_prefill - t_sched)
                     peak_active = max(peak_active, sched.n_active)
                     decoding = decoding_slots()
+                    t_dec = tel.now
                     if decoding:
                         if paged:
                             pos_host = np.asarray(state["pos"])
@@ -817,21 +920,59 @@ class ContinuousCascadeEngine:
                         else:
                             pool.cache, state = step_fn(self.small.params,
                                                         pool.cache, state)
+                        if dev_timer.enabled:
+                            t_dev = tel.now
+                            jax.block_until_ready(state)
+                            dec_dev = tel.now - t_dev
+                        else:
+                            dec_dev = 0.0
                         n_steps += self.steps_per_sync
                         tel.event("step", slots=decoding,
                                   n=self.steps_per_sync,
                                   ml_pending=ml.n_pending)
+                        if tr is not None:
+                            record_conf_trace(decoding)
                         sync_retire()
+                        t_dec_end = tel.now
+                        tel.phase_add("decode", t_dec_end - t_dec, dec_dev)
+                        tel.m_decode_step.observe(
+                            (t_dec_end - t_dec) / self.steps_per_sync)
                     elif not sched.n_active and len(queue):
                         nxt = queue.next_arrival
                         if nxt is not None:
                             time.sleep(min(max(nxt - tel.now, 0.0), 1e-3)
                                        + 1e-5)
+                        t_dec_end = tel.now
+                    else:
+                        t_dec_end = t_dec
+                    t_poll = tel.now
                     ml_depths.append(ml.n_pending)
                     poll_large()
+                    t_end = tel.now
+                    tel.phase_add("ml_wait", t_end - t_poll)
+                    if tr is not None:
+                        # engine-iteration span + nested phase spans on
+                        # the engine track (shared timestamps guarantee
+                        # proper nesting in the exported trace)
+                        if admitted:
+                            tr.complete("schedule", "engine", t_it,
+                                        t_sched - t_it, 0)
+                        if did_prefill:
+                            tr.complete("prefill", "engine", t_sched,
+                                        t_prefill - t_sched, 0)
+                        if decoding:
+                            tr.complete("decode", "engine", t_dec,
+                                        t_dec_end - t_dec, 0)
+                        tr.complete("ml_poll", "engine", t_poll,
+                                    t_end - t_poll, 0)
+                        tr.complete("iteration", "engine", t_it,
+                                    t_end - t_it, 0,
+                                    args={"n_active": sched.n_active,
+                                          "ml_pending": ml.n_pending})
 
                 # all M_S work is done: release partial M_L groups and fold
                 # in completions as they land (t_done stays accurate)
+                t_drain = tel.now
                 ml.flush()
                 while True:
                     poll_large()
@@ -839,12 +980,23 @@ class ContinuousCascadeEngine:
                         break
                     time.sleep(2e-3)
                 makespan = tel.now
+                tel.phase_add("drain", makespan - t_drain)
+                if tr is not None:
+                    tr.complete("drain", "engine", t_drain,
+                                makespan - t_drain, 0)
             finally:
                 ml.close()
         finally:
+            # a still-open jax.profiler window must be stopped even when
+            # the run raises (leaking one poisons later profiled runs)
+            profiler.close()
             tel.close()
 
         reqs = sorted(requests, key=lambda r: r.rid)
+        if tr is not None:
+            # request-lifecycle spans come from the recorded timestamps,
+            # so their cost is paid once here, not in the serve loop
+            emit_request_spans(tr, reqs)
         stats = tel.summary(reqs, makespan, self.cost_small,
                             self.cost_large)
         stats["backend"] = self.backend
@@ -871,6 +1023,10 @@ class ContinuousCascadeEngine:
                          shared_blocks=pool.shared_blocks_total,
                          cow_clones=pool.cow_clones,
                          paged_kernel=use_kernel)
+        if own_obs:
+            # engine-owned runtime: export the trace / metrics dump and
+            # stop the endpoint now that the stats are final
+            obs_rt.finish()
         # per-request final tokens are trimmed to each request's budget;
         # the matrix view pads the short rows back to the run width
         tokens = np.zeros((len(reqs), max_new), np.int32)

@@ -59,6 +59,38 @@ FLUSH_FULL = "full"          # a prompt-length group reached large_batch
 FLUSH_MAX_WAIT = "max_wait"  # oldest pending exceeded max_wait
 FLUSH_DRAIN = "drain"        # end-of-run drain
 
+# batch occupancy is a fraction in (0, 1]: fixed fine-grained buckets
+OCCUPANCY_BUCKETS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+
+class _BackendMetrics:
+    """Optional metrics hooks shared by every backend. Built from a
+    `MetricsRegistry` (observability layer) or as a no-op; the worker
+    thread records through it, the engine thread scrapes — the registry
+    primitives are lock-protected."""
+
+    def __init__(self, registry=None, backend=None):
+        self.enabled = registry is not None
+        if not self.enabled:
+            return
+        self._batches = registry.counter(
+            "serving_ml_batches_total",
+            "M_L regeneration batches by flush reason", ("reason",))
+        self._occupancy = registry.histogram(
+            "serving_ml_batch_occupancy",
+            "real rows / dispatched rows per M_L batch",
+            buckets=OCCUPANCY_BUCKETS)
+        if backend is not None:
+            registry.gauge("serving_ml_queue_depth",
+                           "requests submitted to the M_L backend and "
+                           "not yet returned",
+                           fn=lambda: backend.n_pending)
+
+    def record_batch(self, n_real: int, pad_to: int, reason: str) -> None:
+        if self.enabled:
+            self._batches.labels(reason=reason).inc()
+            self._occupancy.observe(n_real / max(pad_to, 1))
+
 
 @dataclasses.dataclass
 class LargeResult:
@@ -196,7 +228,8 @@ class SyncLocalBackend:
 
     def __init__(self, runner, max_new: int,
                  large_batch: Optional[int] = None,
-                 max_wait: Optional[float] = None):
+                 max_wait: Optional[float] = None,
+                 registry=None):
         self._generate = runner.generate
         self.max_new = max_new
         self._policy = BatchPolicy(large_batch, max_wait)
@@ -205,6 +238,7 @@ class SyncLocalBackend:
         self._n_open = 0
         self._n_batches = 0
         self.batch_log: List[Dict[str, Any]] = []
+        self._metrics = _BackendMetrics(registry, self)
 
     def submit(self, requests: List[Request]) -> int:
         for r in requests:
@@ -225,6 +259,7 @@ class SyncLocalBackend:
                 "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
                 "reason": reason,
                 "prompt_len": int(group[0].prompt.shape[0])})
+            self._metrics.record_batch(len(group), pad_to, reason)
             for i, p in enumerate(group):
                 self._results.append(LargeResult(
                     rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
@@ -264,10 +299,12 @@ class _WorkerBackend:
     def __init__(self, runner, max_new: int,
                  large_batch: Optional[int] = None,
                  max_wait: Optional[float] = None,
-                 poll_interval: float = 0.002):
+                 poll_interval: float = 0.002,
+                 registry=None):
         self._generate = runner.generate
         self.max_new = max_new
         self._poll_interval = poll_interval
+        self._metrics = _BackendMetrics(registry, self)
         self._policy = BatchPolicy(large_batch, max_wait)
         self._inq: "queue.Queue" = queue.Queue()
         self._outq: "queue.Queue" = queue.Queue()
@@ -343,6 +380,7 @@ class _WorkerBackend:
                     "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
                     "reason": reason,
                     "prompt_len": int(group[0].prompt.shape[0])})
+                self._metrics.record_batch(len(group), pad_to, reason)
                 for i, p in enumerate(group):
                     self._outq.put(self._encode_result(LargeResult(
                         rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
@@ -420,10 +458,11 @@ class RemoteStubBackend(_WorkerBackend):
                  large_batch: Optional[int] = None,
                  max_wait: Optional[float] = None,
                  latency: float = 0.0,
-                 poll_interval: float = 0.002):
+                 poll_interval: float = 0.002,
+                 registry=None):
         self.latency = latency
         super().__init__(runner, max_new, large_batch, max_wait,
-                         poll_interval)
+                         poll_interval, registry)
 
     def _encode_submit(self, req: Request) -> bytes:
         return json.dumps({"rid": req.rid,
@@ -462,14 +501,19 @@ BACKENDS = ("sync", "thread", "stub")
 def make_large_backend(kind: str, runner, max_new: int,
                        large_batch: Optional[int] = None,
                        max_wait: Optional[float] = None,
-                       stub_latency: float = 0.0) -> LargeBackend:
-    """Factory used by the engine/CLI: `kind` in {sync, thread, stub}."""
+                       stub_latency: float = 0.0,
+                       registry=None) -> LargeBackend:
+    """Factory used by the engine/CLI: `kind` in {sync, thread, stub}.
+    `registry` (a `MetricsRegistry`) turns on per-batch metrics and the
+    queue-depth gauge."""
     if kind == "sync":
-        return SyncLocalBackend(runner, max_new, large_batch, max_wait)
+        return SyncLocalBackend(runner, max_new, large_batch, max_wait,
+                                registry=registry)
     if kind == "thread":
-        return ThreadedBackend(runner, max_new, large_batch, max_wait)
+        return ThreadedBackend(runner, max_new, large_batch, max_wait,
+                               registry=registry)
     if kind == "stub":
         return RemoteStubBackend(runner, max_new, large_batch, max_wait,
-                                 latency=stub_latency)
+                                 latency=stub_latency, registry=registry)
     raise ValueError(f"large backend must be one of {BACKENDS}, "
                      f"got {kind!r}")

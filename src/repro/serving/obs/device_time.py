@@ -1,0 +1,88 @@
+"""Device-time attribution: host/device wall-time split + profiler window.
+
+JAX dispatch is asynchronous: the host returns from a jitted call as
+soon as the work is enqueued, so host-side section timers conflate
+"time spent driving the engine" with "time the accelerator was busy".
+Two opt-in tools recover the split:
+
+``DeviceTimer``
+    When enabled, the engine brackets each dispatch with
+    ``jax.block_until_ready`` on the dispatch result: the time up to
+    the dispatch return is **host** (python + tracing + enqueue), the
+    blocking remainder is **device** (XLA execution + transfer).
+    Blocking serializes dispatch against execution, which can cost
+    real overlap — that is why this is a *mode* (``--device-timing``)
+    and not the default; outputs are bit-identical either way.
+
+``ProfilerWindow``
+    Captures a ``jax.profiler`` trace (XPlane, loadable in
+    TensorBoard/Perfetto) for the first `n_iters` engine iterations of
+    a run into ``profile_dir``. A bounded window rather than
+    whole-run capture: profiler traces grow quickly and one window is
+    what kernel-level analysis needs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+
+
+class DeviceTimer:
+    """Host/device split bracketing for jitted dispatches.
+
+    Usage (engine hot path)::
+
+        t0 = perf_counter()
+        out = jitted_fn(...)
+        host_s, device_s = timer.split(t0, out)
+
+    Disabled (the default), ``split`` never blocks and reports the whole
+    section as host time with device time 0 — callers record the pair
+    unconditionally and the summary only advertises the split when the
+    mode was on."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+
+    def split(self, t_start: float, result: Any) -> tuple:
+        """Returns (host_seconds, device_seconds) for a dispatch started
+        at `t_start` (perf_counter) whose output tree is `result`."""
+        t_disp = time.perf_counter()
+        if not self.enabled:
+            return t_disp - t_start, 0.0
+        jax.block_until_ready(result)
+        return t_disp - t_start, time.perf_counter() - t_disp
+
+
+class ProfilerWindow:
+    """Capture a jax.profiler trace for the first `n_iters` calls to
+    ``tick()`` (one per engine iteration). Idempotent and crash-safe:
+    ``close()`` stops a still-open capture."""
+
+    def __init__(self, profile_dir: Optional[str], n_iters: int = 20):
+        self.profile_dir = profile_dir
+        self.n_iters = max(1, n_iters)
+        self._i = 0
+        self._running = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.profile_dir is not None
+
+    def tick(self) -> None:
+        if not self.enabled or self._i > self.n_iters:
+            return
+        if self._i == 0:
+            jax.profiler.start_trace(self.profile_dir)
+            self._running = True
+        elif self._i == self.n_iters and self._running:
+            jax.profiler.stop_trace()
+            self._running = False
+        self._i += 1
+
+    def close(self) -> None:
+        if self._running:
+            jax.profiler.stop_trace()
+            self._running = False

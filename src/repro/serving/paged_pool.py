@@ -502,6 +502,38 @@ class PagedCachePool:
                         f"CoW guard failed (ensure_writable not called?)")
                 owner[blk] = slot
 
+    # -- observability ------------------------------------------------------
+    @property
+    def n_shared_blocks(self) -> int:
+        """Physical blocks currently aliased by more than one slot."""
+        return int((self.ref > 1).sum())
+
+    @property
+    def n_cached_blocks(self) -> int:
+        """Zero-ref blocks still holding a registered prefix (reusable
+        by a later same-prefix request until evicted)."""
+        return sum(1 for b in self._registered_key if b in self._free_set)
+
+    def register_metrics(self, reg) -> None:
+        """Expose pool occupancy as pull-mode gauges on a
+        `MetricsRegistry` — callbacks are evaluated only at scrape or
+        render time, so the allocation hot paths pay nothing."""
+        g = reg.gauge("serving_pool_blocks",
+                      "paged KV pool physical blocks by state", ("kind",))
+        g.labels(kind="total").set_fn(lambda: self.n_blocks)
+        g.labels(kind="free").set_fn(lambda: len(self._free_set))
+        g.labels(kind="reserved").set_fn(lambda: self._reserved_total)
+        g.labels(kind="in_use").set_fn(lambda: self.n_physical_in_use)
+        g.labels(kind="refcounted").set_fn(lambda: self.n_shared_blocks)
+        g.labels(kind="cached").set_fn(lambda: self.n_cached_blocks)
+        g.labels(kind="peak").set_fn(lambda: self.peak_mapped)
+        reg.gauge("serving_pool_cow_clones_total",
+                  "lifetime copy-on-write block clones",
+                  fn=lambda: self.cow_clones)
+        reg.gauge("serving_pool_shared_blocks_total",
+                  "lifetime blocks mapped via prefix sharing",
+                  fn=lambda: self.shared_blocks_total)
+
     def active_prefix_blocks(self, n_tokens: int) -> int:
         """Logical blocks needed to cover `n_tokens` cache entries,
         bucketed UP to a power of two (and clamped to `max_blocks`) so

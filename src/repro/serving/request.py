@@ -58,8 +58,13 @@ class Request:
     early_exited: bool = False         # evicted before max_new (in-flight)
     shared_prefix_tokens: int = 0      # prompt tokens mapped from the
                                        # prefix registry (never prefilled)
+    conf_trace: Optional[List[float]] = None  # per-token (per-sync-chunk)
+                                       # eq.-8 confidence record; populated
+                                       # only when span tracing is on and
+                                       # attached to the decode span
     # lifecycle timestamps (seconds from run start; nan until reached)
     t_admit: float = float("nan")
+    t_prefill_done: float = float("nan")  # decode seeded (prefill span end)
     t_retire: float = float("nan")     # left M_S (finished or evicted)
     t_submit_large: float = float("nan")  # handed to the M_L backend
     t_done: float = float("nan")       # final tokens available

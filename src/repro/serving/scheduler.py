@@ -35,6 +35,10 @@ class SlotScheduler:
     def __init__(self, pool):
         self.pool = pool
         self.running: Dict[int, Request] = {}     # slot -> request
+        # lifetime counters (observability gauges read these; plain ints
+        # so the admission/retire paths pay nothing extra)
+        self.n_admitted = 0
+        self.n_retired = 0
 
     # -- admission ---------------------------------------------------------
     def admit_ready(self, queue: ArrivalQueue, now: float,
@@ -63,6 +67,7 @@ class SlotScheduler:
             req.t_admit = now
             self.running[slot] = req
             admitted.append((slot, req))
+            self.n_admitted += 1
             budget -= 1
         return admitted
 
@@ -83,6 +88,7 @@ class SlotScheduler:
             req.state = DONE
             req.t_done = now
         self.pool.release(slot)
+        self.n_retired += 1
         return req
 
     # -- views -------------------------------------------------------------
