@@ -24,6 +24,23 @@ Scenarios (same models, same calibrated tau, same prompts):
                         and regenerates them while M_S keeps decoding;
                         compare its tokens/s, p95 latency, and deferral
                         wait against continuous+exit (sync M_L inline)
+  * continuous+socket — the distributed M_L tier (serving.remote): the
+                        same engine config as continuous+thread but
+                        deferrals cross a real localhost socket to one
+                        `MLServer` replica, under Poisson arrivals at
+                        --socket-rate req/s. Each replica injects
+                        --socket-ml-latency seconds of per-batch
+                        service time (the remote accelerator's service
+                        model — a CPU CI box cannot parallelize real
+                        M_L compute across replicas, so without it the
+                        1-vs-2 comparison would measure single-core
+                        contention instead of queueing)
+  * continuous+pool2  — same, behind a 2-replica `ReplicaPool` (health
+                        checks + batch-aware load balancing); its
+                        deferral-wait p95 against continuous+socket is
+                        the headline 1-vs-N-replica number: one replica
+                        serializes batches through the service latency,
+                        two overlap it
 
 Ragged mode (--ragged-min/--ragged-max) draws mixed prompt lengths from
 a uniform distribution and sizes the paged budget for the MEAN request,
@@ -117,6 +134,7 @@ def run_static(engine: CascadeEngine, requests: List, prompt_len: int,
         "latency_p99_s": float(np.percentile(lat, 99)),
         "deferral_ratio": n_deferred / n,
         "deferral_wait_p50_ms": float("nan"),
+        "deferral_wait_p95_ms": float("nan"),
         "ms_steps": steps,
         "saved_steps": 0,
         "cache_mb": float("nan"),
@@ -138,6 +156,8 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         "queueing_p95_s": s.get("queueing_p95_s", float("nan")),
         "deferral_ratio": s["deferral_ratio"],
         "deferral_wait_p50_ms": s.get("deferral_wait_p50_ms",
+                                      float("nan")),
+        "deferral_wait_p95_ms": s.get("deferral_wait_p95_ms",
                                       float("nan")),
         "ms_steps": res.steps,
         "saved_steps": res.saved_steps,
@@ -180,6 +200,8 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         batch_prefill: bool = True,
         shared_prefix_len: int = 0,
         shared_head_start: float = 1.0,
+        socket_rate: float = 100.0,
+        socket_ml_latency: float = 0.05,
         obs_cfg: Optional[ObsConfig] = None) -> Dict:
     key = jax.random.PRNGKey(seed)
     # same proxy pair as the serving driver, so bench numbers stay
@@ -271,6 +293,49 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
     rows.append(best_of(lambda: run_continuous(cont_t, fresh(), max_new,
                                                "continuous+thread")))
 
+    # -- distributed M_L tier: socket RPC, 1 replica vs 2-replica pool -----
+    # deferrals cross a real localhost socket under Poisson arrivals
+    # (socket_rate req/s — the SAME arrival trace for both rows, so the
+    # 1-vs-2-replica deferral wait p95 comparison isolates replica
+    # count). Unlike the in-process rows, M_L batches are cut at
+    # slots//2 so the run produces several batches close together: with
+    # one replica consecutive batches queue behind its injected service
+    # time, with two they overlap — the thing replica count actually
+    # controls. (At large_batch=slots the whole run fits in ~2 batches
+    # that never coexist, and the p95 degenerates to group-fill time,
+    # identical for any replica count.) The servers stay up across
+    # reps; each rep's fresh SocketBackend opens a new session, which
+    # resets server-side state.
+    from repro.launch.serve import make_remote_factory
+    from repro.serving.remote import MLServer
+
+    sock_arrivals = poisson_arrivals(n_requests, socket_rate, seed)
+    sock_batch = max(2, slots // 2)
+    servers = [MLServer(large, max_new=max_new, large_batch=sock_batch,
+                        max_wait=large_max_wait,
+                        latency=socket_ml_latency).start()
+               for _ in range(2)]
+    try:
+        for label, kind, addrs in (
+                ("continuous+socket", "socket", [servers[0].address]),
+                ("continuous+pool2", "pool",
+                 [s.address for s in servers])):
+            eng = ContinuousCascadeEngine(
+                small, large, n_slots=slots, tau=tau,
+                min_tokens=min_tokens, margin=margin, early_exit=True,
+                large_batch=sock_batch,
+                large_backend=make_remote_factory(
+                    kind, addrs, connect_timeout=2.0,
+                    request_timeout=30.0, retries=3,
+                    health_interval=0.5),
+                large_max_wait=large_max_wait, steps_per_sync=4)
+            rows.append(best_of(lambda e=eng, l=label: run_continuous(
+                e, make_requests(live, max_new, sock_arrivals),
+                max_new, l)))
+    finally:
+        for srv in servers:
+            srv.stop()
+
     # -- continuous over the block-paged pool ------------------------------
     if backend == "paged":
         if n_blocks is None:
@@ -321,14 +386,15 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
                 max_new, l)))
 
     print("engine,tok_s,p50_ms,p95_ms,p99_ms,deferral,wait_ms,"
-          "ms_steps,saved_steps,cache_mb")
+          "wait_p95_ms,ms_steps,saved_steps,cache_mb")
     for r in rows:
         print(f"{r['engine']},{r['throughput_tok_s']:.1f},"
               f"{r['latency_p50_s'] * 1e3:.0f},"
               f"{r['latency_p95_s'] * 1e3:.0f},"
               f"{r['latency_p99_s'] * 1e3:.0f},"
               f"{r['deferral_ratio']:.2f},"
-              f"{r['deferral_wait_p50_ms']:.0f},{r['ms_steps']},"
+              f"{r['deferral_wait_p50_ms']:.0f},"
+              f"{r['deferral_wait_p95_ms']:.0f},{r['ms_steps']},"
               f"{r['saved_steps']},{r['cache_mb']:.2f}")
     base = rows[0]["throughput_tok_s"]
     best = max(rows[1:], key=lambda r: r["throughput_tok_s"]) \
@@ -336,6 +402,16 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
     print(f"# best continuous ({best['engine']}) vs {rows[0]['engine']}: "
           f"{best['throughput_tok_s'] / base:.2f}x, "
           f"early-exit M_S step savings: {best['saved_steps']}")
+    sock_row = next(r for r in rows if r["engine"] == "continuous+socket")
+    pool_row = next(r for r in rows if r["engine"] == "continuous+pool2")
+    print(f"# distributed M_L (Poisson {socket_rate:g} req/s, "
+          f"{socket_ml_latency * 1e3:.0f} ms injected per-batch replica "
+          f"service time): deferral wait p95 "
+          f"{sock_row['deferral_wait_p95_ms']:.0f} ms on 1 "
+          f"replica vs {pool_row['deferral_wait_p95_ms']:.0f} ms on a "
+          f"2-replica pool "
+          f"({sock_row['throughput_tok_s']:.1f} vs "
+          f"{pool_row['throughput_tok_s']:.1f} tok/s)")
     obs_overhead = None
     if obs_cfg is not None:
         plain = next(r for r in rows if r["engine"] == "continuous")
@@ -382,7 +458,9 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
         "ragged_min": ragged_min, "ragged_max": ragged_max,
         "large_max_wait": large_max_wait, "paged_kernel": paged_kernel,
         "batch_prefill": batch_prefill,
-        "shared_prefix_len": shared_prefix_len}, "rows": rows,
+        "shared_prefix_len": shared_prefix_len,
+        "socket_rate": socket_rate,
+        "socket_ml_latency": socket_ml_latency}, "rows": rows,
         "obs_overhead": obs_overhead}
     save_result("serving", payload)
     for r in rows:
@@ -410,6 +488,9 @@ def bench_record(payload: Dict) -> Dict:
             "deferral_wait_p50_ms":
                 (round(r["deferral_wait_p50_ms"], 2)
                  if np.isfinite(r["deferral_wait_p50_ms"]) else None),
+            "deferral_wait_p95_ms":
+                (round(r["deferral_wait_p95_ms"], 2)
+                 if np.isfinite(r["deferral_wait_p95_ms"]) else None),
             "phase_breakdown_s": {
                 k[len("phase_"):-len("_s")]: round(v, 4)
                 for k, v in r.items()
@@ -497,6 +578,16 @@ def main():
                     help="seconds the first shared-prefix request runs "
                          "alone so its prompt blocks are registered "
                          "before the rest arrive together")
+    ap.add_argument("--socket-rate", type=float, default=100.0,
+                    help="Poisson arrival rate (req/s) for the "
+                         "continuous+socket / continuous+pool2 rows "
+                         "(the 1-vs-2-replica deferral-wait comparison)")
+    ap.add_argument("--socket-ml-latency", type=float, default=0.05,
+                    help="injected per-batch M_L replica service time "
+                         "(s) for the socket/pool rows — models the "
+                         "remote accelerator so the 1-vs-2-replica "
+                         "comparison measures queueing, not single-"
+                         "core CPU contention")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--obs-row", action="store_true",
                     help="add a continuous+obs row (the continuous "
@@ -532,6 +623,7 @@ def main():
                   args.ragged_min, args.ragged_max, args.large_max_wait,
                   args.paged_kernel or None, not args.serial_prefill,
                   args.shared_prefix_len, args.shared_head_start,
+                  args.socket_rate, args.socket_ml_latency,
                   obs_cfg=obs_cfg)
     record = bench_record(payload)
     if args.bench_out:

@@ -20,6 +20,18 @@ latency (--stub-latency), the shape of a real RPC. --large-batch sets
 the regeneration batch size and --large-max-wait bounds how long a
 partial batch may wait before flushing.
 
+The distributed tier (docs/serving.md): --large-backend socket talks to
+one M_L server process (start it with `python -m repro.launch.ml_server`,
+point at it with --ml-address host:port), --large-backend pool
+load-balances across several (--ml-address host:a,host:b,...) with
+health checks, dead-replica ejection, and in-flight re-dispatch.
+--ml-spawn N starts N in-process demo servers instead of requiring
+separate processes; --ml-request-timeout/--ml-connect-timeout/
+--ml-retries/--ml-health-interval tune the failure handling. With
+socket/pool the batching policy (--large-batch/--large-max-wait) is
+applied server-side — spawned servers inherit this process's flags,
+external servers use their own.
+
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --requests 32 --max-new 8 --deferral-ratio 0.3 \
         --engine continuous --slots 8 --arrival-rate 50 \
@@ -65,6 +77,33 @@ def build_runners(arch: str, seed: int):
     return small, large, small_cfg
 
 
+def make_remote_factory(kind: str, addresses, *, connect_timeout: float,
+                        request_timeout: float, retries: int,
+                        health_interval: float):
+    """Callable `large_backend` for the engine: builds the socket/pool
+    backend with the engine-supplied context (max_new, metrics registry)
+    plus the addresses/timeouts closed over here. The runner argument is
+    ignored — with a remote tier, M_L compute lives in the server."""
+    from repro.serving.remote import ReplicaPool, SocketBackend
+
+    def factory(runner=None, max_new=0, large_batch=None, max_wait=None,
+                stub_latency=0.0, registry=None):
+        if kind == "socket":
+            return SocketBackend(addresses[0],
+                                 connect_timeout=connect_timeout,
+                                 request_timeout=request_timeout,
+                                 retries=retries, registry=registry)
+        return ReplicaPool(addresses,
+                           connect_timeout=connect_timeout,
+                           request_timeout=request_timeout,
+                           retries=retries,
+                           health_interval=health_interval,
+                           max_new=max_new, large_batch=large_batch,
+                           registry=registry)
+
+    return factory
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -80,11 +119,30 @@ def main():
     ap.add_argument("--no-early-exit", action="store_true")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals/s; 0 = all at t=0")
-    ap.add_argument("--large-backend", choices=("sync", "thread", "stub"),
+    ap.add_argument("--large-backend",
+                    choices=("sync", "thread", "stub", "socket", "pool"),
                     default="sync",
                     help="M_L regeneration backend: inline (sync), "
                          "worker thread overlapped with M_S decode "
-                         "(thread), or serialized RPC stub (stub)")
+                         "(thread), serialized RPC stub (stub), one "
+                         "remote M_L server (socket), or N replicas with "
+                         "health checks + re-dispatch (pool)")
+    ap.add_argument("--ml-address", default="",
+                    help="socket/pool: comma-separated host:port of "
+                         "running M_L servers (repro.launch.ml_server); "
+                         "empty with --ml-spawn starts in-process demo "
+                         "servers")
+    ap.add_argument("--ml-spawn", type=int, default=0,
+                    help="socket/pool: start this many in-process M_L "
+                         "servers on ephemeral ports instead of "
+                         "connecting to --ml-address")
+    ap.add_argument("--ml-connect-timeout", type=float, default=2.0)
+    ap.add_argument("--ml-request-timeout", type=float, default=30.0)
+    ap.add_argument("--ml-retries", type=int, default=3,
+                    help="socket/pool: RPC retry attempts "
+                         "(exponential backoff) before giving up")
+    ap.add_argument("--ml-health-interval", type=float, default=2.0,
+                    help="pool: seconds between replica health probes")
     ap.add_argument("--large-batch", type=int, default=0,
                     help="M_L regeneration batch size (0 = one "
                          "exact-size batch at end of run)")
@@ -165,11 +223,41 @@ def main():
         print("first tokens:", res.tokens[:4].tolist())
         return
 
+    ml_servers = []
+    large_backend = args.large_backend
+    if args.large_backend in ("socket", "pool"):
+        if args.ml_spawn > 0:
+            from repro.serving.remote import MLServer
+            n = max(args.ml_spawn,
+                    2 if args.large_backend == "pool" else 1)
+            for _ in range(n):
+                ml_servers.append(MLServer(
+                    large, max_new=args.max_new,
+                    large_batch=args.large_batch or None,
+                    max_wait=args.large_max_wait or None).start())
+            addresses = [s.address for s in ml_servers]
+            print(f"spawned {n} in-process M_L server(s): "
+                  + ", ".join(f"{h}:{p}" for h, p in addresses))
+        elif args.ml_address:
+            addresses = args.ml_address.split(",")
+        else:
+            ap.error("--large-backend socket/pool needs --ml-address "
+                     "host:port[,host:port...] or --ml-spawn N")
+        if args.large_backend == "socket" and len(addresses) != 1:
+            ap.error("--large-backend socket takes exactly one "
+                     "--ml-address; use --large-backend pool for several")
+        large_backend = make_remote_factory(
+            args.large_backend, addresses,
+            connect_timeout=args.ml_connect_timeout,
+            request_timeout=args.ml_request_timeout,
+            retries=args.ml_retries,
+            health_interval=args.ml_health_interval)
+
     engine = ContinuousCascadeEngine(
         small, large, n_slots=args.slots, min_tokens=args.min_tokens,
         margin=args.margin, early_exit=not args.no_early_exit,
         large_batch=args.large_batch or None,
-        large_backend=args.large_backend,
+        large_backend=large_backend,
         large_max_wait=args.large_max_wait or None,
         stub_latency=args.stub_latency,
         backend=args.backend, block_size=args.block_size,
@@ -198,6 +286,8 @@ def main():
                          obs=obs)
     finally:
         obs.finish()
+        for srv in ml_servers:
+            srv.stop()
     print(f"served {len(live)} requests on {args.slots} slots "
           f"({args.backend} backend, M_L via {args.large_backend}) in "
           f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "

@@ -58,6 +58,12 @@ large_backend  Pluggable M_L regeneration backends (submit/poll/drain):
             sync (inline), thread (worker-thread overlap), stub
             (serialized RPC shape with injectable latency); shared
             batch-shape policy (large_batch x max_wait).
+remote      Distributed M_L tier: MLServer (socket RPC server process,
+            entrypoint repro.launch.ml_server), SocketBackend (the
+            LargeBackend protocol over the wire: timeouts, bounded
+            retry, cancellation), ReplicaPool (N replicas with health
+            checks, ejection, in-flight re-dispatch), wire (versioned
+            length-prefixed JSON framing).
 engine      ModelRunner (on-device greedy loop), static CascadeEngine,
             ContinuousCascadeEngine (continuous batching + in-flight
             deferral over either backend, chunked prefill, streaming
@@ -79,6 +85,7 @@ from repro.serving.large_backend import (BatchPolicy, LargeBackend,
 from repro.serving.obs import (MetricsRegistry, Observability, ObsConfig,
                                Tracer, validate_chrome_trace)
 from repro.serving.paged_pool import PagedCachePool
+from repro.serving.remote import (MLServer, ReplicaPool, SocketBackend)
 from repro.serving.request import (ArrivalQueue, Request, make_requests,
                                    poisson_arrivals)
 from repro.serving.scheduler import SlotScheduler
@@ -87,9 +94,10 @@ from repro.serving.telemetry import ServingTelemetry
 __all__ = [
     "ArrivalQueue", "BatchPolicy", "CascadeEngine",
     "ContinuousCascadeEngine", "ContinuousServeResult", "LargeBackend",
-    "LargeResult", "MetricsRegistry", "ModelRunner", "ObsConfig",
-    "Observability", "PagedCachePool", "RemoteStubBackend", "Request",
-    "ServeResult", "ServingTelemetry", "SlotCachePool", "SlotScheduler",
-    "SyncLocalBackend", "ThreadedBackend", "Tracer", "make_large_backend",
-    "make_requests", "poisson_arrivals", "validate_chrome_trace",
+    "LargeResult", "MLServer", "MetricsRegistry", "ModelRunner",
+    "ObsConfig", "Observability", "PagedCachePool", "RemoteStubBackend",
+    "ReplicaPool", "Request", "ServeResult", "ServingTelemetry",
+    "SlotCachePool", "SlotScheduler", "SocketBackend", "SyncLocalBackend",
+    "ThreadedBackend", "Tracer", "make_large_backend", "make_requests",
+    "poisson_arrivals", "validate_chrome_trace",
 ]

@@ -273,7 +273,10 @@ class ContinuousCascadeEngine:
     ``"thread"`` — a worker thread that overlaps M_L batches with M_S
     decode; ``"stub"`` — the threaded path behind a serialized
     request/response pipe with injectable latency, the shape of a real
-    RPC). Each deferral streams into the backend the moment its slot
+    RPC; or a callable factory returning any `LargeBackend` — how the
+    distributed socket/replica-pool backends plug in, see
+    `serving.remote` and launch/serve.py). Each deferral streams into
+    the backend the moment its slot
     retires; completions fold back in every engine iteration. Batch
     shape policy lives in the backend (`large_backend.BatchPolicy`):
     `large_batch=None` batches only at drain, exact-size (bit-identical
@@ -293,7 +296,7 @@ class ContinuousCascadeEngine:
                  margin: float = 0.0, min_tokens: int = 2,
                  early_exit: bool = True,
                  large_batch: Optional[int] = None,
-                 large_backend: str = "sync",
+                 large_backend="sync",      # name or callable factory
                  large_max_wait: Optional[float] = None,
                  stub_latency: float = 0.0,
                  steps_per_sync: int = 1,
@@ -971,13 +974,30 @@ class ContinuousCascadeEngine:
                                           "ml_pending": ml.n_pending})
 
                 # all M_S work is done: release partial M_L groups and fold
-                # in completions as they land (t_done stays accurate)
+                # in completions as they land (t_done stays accurate).
+                # Remote backends advertise drain_stall_timeout: when a
+                # replica dies mid-drain and nothing can make progress,
+                # abort with the pending count instead of spinning forever
                 t_drain = tel.now
+                stall_s = getattr(ml, "drain_stall_timeout", None)
+                last_pending = ml.n_pending
+                t_progress = time.perf_counter()
                 ml.flush()
                 while True:
                     poll_large()
-                    if not ml.n_pending:
+                    pending = ml.n_pending
+                    if not pending:
                         break
+                    if pending != last_pending:
+                        last_pending = pending
+                        t_progress = time.perf_counter()
+                    elif (stall_s is not None
+                          and time.perf_counter() - t_progress > stall_s):
+                        raise RuntimeError(
+                            f"M_L drain stalled: {pending} deferral(s) "
+                            f"still pending on the "
+                            f"{getattr(ml, 'name', '?')} backend with no "
+                            f"progress for {stall_s}s")
                     time.sleep(2e-3)
                 makespan = tel.now
                 tel.phase_add("drain", makespan - t_drain)
@@ -1002,7 +1022,8 @@ class ContinuousCascadeEngine:
         stats["backend"] = self.backend
         stats["cache_bytes"] = pool.footprint_bytes()
         stats["peak_active"] = peak_active
-        stats["ml_backend"] = self.large_backend
+        stats["ml_backend"] = getattr(ml, "name",
+                                      str(self.large_backend))
         stats["ml_batches"] = len(ml.batch_log)
         stats["ml_batch_occupancy"] = (
             float(np.mean([b["n_real"] / max(b["pad_to"], 1)

@@ -8,7 +8,8 @@ the moment its slot retires and keep decoding while M_L works:
 
     ``LargeBackend`` protocol
         submit(requests) -> ticket   enqueue deferred requests
-        poll()           -> finished non-blocking; completed work so far
+        poll(timeout=None) -> finished   completed work so far; blocks up
+                                     to `timeout` s for the first result
         flush()                      no more submissions; release partials
         drain()          -> finished block until every ticket completes
         close()                      stop worker resources
@@ -190,6 +191,21 @@ class BatchPolicy:
         self._groups = {p: g for p, g in self._groups.items() if g}
         return out
 
+    def cancel(self, rids: List[int]) -> List[int]:
+        """Remove still-pending requests by rid (an engine shutting down
+        mid-run withdraws its in-flight deferrals). Returns the rids
+        actually removed — anything already taken into a batch keeps
+        running and completes normally."""
+        wanted = set(rids)
+        removed: List[int] = []
+        for plen, group in list(self._groups.items()):
+            keep = [p for p in group if p.rid not in wanted]
+            if len(keep) != len(group):
+                removed.extend(p.rid for p in group if p.rid in wanted)
+                self._groups[plen] = keep
+        self._groups = {p: g for p, g in self._groups.items() if g}
+        return removed
+
 
 def _generate_batch(generate: Callable, group: List[_Pending], pad_to: int,
                     max_new: int) -> np.ndarray:
@@ -206,10 +222,17 @@ def _generate_batch(generate: Callable, group: List[_Pending], pad_to: int,
 
 
 class LargeBackend(Protocol):
-    """Protocol every M_L backend implements (see module docstring)."""
+    """Protocol every M_L backend implements (see module docstring).
+
+    `poll` takes an optional `timeout`: None/0 returns whatever has
+    completed without blocking; a positive value may block up to that
+    long waiting for the FIRST result (the engine's drain loop uses it
+    to avoid busy-waiting). Every implementation must accept the kwarg,
+    even ones that never block — the engine can't know which it holds.
+    """
 
     def submit(self, requests: List[Request]) -> int: ...
-    def poll(self) -> List[LargeResult]: ...
+    def poll(self, timeout: Optional[float] = None) -> List[LargeResult]: ...
     def flush(self) -> None: ...
     def drain(self) -> List[LargeResult]: ...
     def close(self) -> None: ...
@@ -267,7 +290,10 @@ class SyncLocalBackend:
                     prompt_len=int(p.prompt.shape[0])))
             self._n_open -= len(group)
 
-    def poll(self) -> List[LargeResult]:
+    def poll(self, timeout: Optional[float] = None) -> List[LargeResult]:
+        # timeout is accepted for protocol conformance but meaningless
+        # here: batches run inline, so results exist before poll is
+        # called — there is never anything to wait for
         self._run_ready()          # max-wait timer also fires on poll
         out, self._results = self._results, []
         return out
@@ -498,14 +524,22 @@ class RemoteStubBackend(_WorkerBackend):
 BACKENDS = ("sync", "thread", "stub")
 
 
-def make_large_backend(kind: str, runner, max_new: int,
+def make_large_backend(kind, runner, max_new: int,
                        large_batch: Optional[int] = None,
                        max_wait: Optional[float] = None,
                        stub_latency: float = 0.0,
                        registry=None) -> LargeBackend:
-    """Factory used by the engine/CLI: `kind` in {sync, thread, stub}.
+    """Factory used by the engine/CLI: `kind` in {sync, thread, stub},
+    or a callable `(runner=, max_new=, large_batch=, max_wait=,
+    stub_latency=, registry=) -> LargeBackend` for backends that need
+    extra construction context (the socket/replica-pool backends close
+    over their server addresses this way — see launch/serve.py).
     `registry` (a `MetricsRegistry`) turns on per-batch metrics and the
     queue-depth gauge."""
+    if callable(kind):
+        return kind(runner=runner, max_new=max_new,
+                    large_batch=large_batch, max_wait=max_wait,
+                    stub_latency=stub_latency, registry=registry)
     if kind == "sync":
         return SyncLocalBackend(runner, max_new, large_batch, max_wait,
                                 registry=registry)

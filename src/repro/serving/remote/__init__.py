@@ -1,0 +1,25 @@
+"""Distributed M_L tier: socket RPC server, client backend, replica pool.
+
+`wire` pins the length-prefixed JSON protocol (schema-versioned);
+`MLServer` is the server process (entrypoint: `repro.launch.ml_server`);
+`SocketBackend` speaks the `LargeBackend` protocol over one connection;
+`ReplicaPool` load-balances N replicas with health checks, ejection and
+in-flight re-dispatch. See docs/serving.md ("Distributed M_L tier").
+"""
+from repro.serving.remote import wire
+from repro.serving.remote.client import (RemoteBackendError, SocketBackend,
+                                         parse_address)
+from repro.serving.remote.pool import ReplicaPool
+from repro.serving.remote.server import MLServer
+
+SCHEMA_VERSION = wire.SCHEMA_VERSION
+
+__all__ = [
+    "MLServer",
+    "ReplicaPool",
+    "RemoteBackendError",
+    "SCHEMA_VERSION",
+    "SocketBackend",
+    "parse_address",
+    "wire",
+]

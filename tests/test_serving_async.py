@@ -4,6 +4,7 @@ batch-shape policy unification, M_L queue-depth telemetry, and the
 acceptance criterion that M_S decode steps interleave with in-flight
 M_L regeneration under the threaded backend."""
 import json
+import time
 
 import jax
 import numpy as np
@@ -19,6 +20,8 @@ from repro.serving.large_backend import (FLUSH_DRAIN, FLUSH_FULL,
                                          FLUSH_MAX_WAIT, BatchPolicy,
                                          _Pending, make_large_backend)
 from repro.serving.request import DONE
+
+from _hypothesis_shim import given, settings, st
 
 
 @pytest.fixture(scope="module")
@@ -99,6 +102,82 @@ def test_batch_policy_none_batches_only_at_drain():
     assert pol.next_deadline() is None
 
 
+# op encoding for the property test: ("add", plen) | ("take",) | ("drain",)
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("add"), st.sampled_from([4, 6, 8])),
+        st.tuples(st.just("take")),
+        st.tuples(st.just("drain"))),
+    min_size=1, max_size=40)
+
+
+@given(ops=_OPS,
+       large_batch=st.one_of(st.none(), st.integers(1, 5)),
+       max_wait=st.one_of(st.none(), st.just(0.5)))
+@settings(max_examples=200, deadline=None)
+def test_batch_policy_interleavings_conserve_requests(ops, large_batch,
+                                                      max_wait):
+    """Property: under ARBITRARY submit/take/drain interleavings, every
+    submitted rid comes back exactly once across all take() calls plus
+    the final drain (no drop, no duplicate), every emitted group is
+    uniform in prompt length, rid-sorted, and padded to >= its size."""
+    pol = BatchPolicy(large_batch, max_wait)
+    submitted, returned = [], []
+    now = 0.0
+    rid = 0
+
+    def absorb(flushes, drain):
+        for group, pad_to, reason in flushes:
+            plens = {int(p.prompt.shape[0]) for p in group}
+            assert len(plens) == 1                  # uniform-length group
+            rids = [p.rid for p in group]
+            assert rids == sorted(rids)             # rid-sorted
+            assert pad_to >= len(group)
+            if large_batch is not None and not drain:
+                assert pad_to == large_batch
+            returned.extend(rids)
+
+    for op in ops:
+        now += 0.3                  # fixed clock steps: max_wait can fire
+        if op[0] == "add":
+            pol.add(_pend(rid, op[1], t=now))
+            submitted.append(rid)
+            rid += 1
+        elif op[0] == "take":
+            absorb(pol.take(now=now), drain=False)
+        else:
+            absorb(pol.take(now=now, drain=True), drain=True)
+    absorb(pol.take(now=now, drain=True), drain=True)
+    assert pol.n_pending == 0
+    assert sorted(returned) == sorted(submitted)    # exactly-once
+    assert len(returned) == len(set(returned))
+
+
+@given(ops=_OPS)
+@settings(max_examples=100, deadline=None)
+def test_batch_policy_cancel_interleaved(ops):
+    """Property: cancelling a random half of the still-pending rids at
+    the end removes exactly those rids — take∪drain returns each
+    surviving rid once, each cancelled rid never."""
+    pol = BatchPolicy(large_batch=3, max_wait=None)
+    submitted, returned = [], []
+    rid = 0
+    for op in ops:
+        if op[0] == "add":
+            pol.add(_pend(rid, op[1]))
+            submitted.append(rid)
+            rid += 1
+        else:
+            for g, _, _ in pol.take(now=0.0, drain=(op[0] == "drain")):
+                returned.extend(p.rid for p in g)
+    pending = [r for r in submitted if r not in returned]
+    victims = pending[::2]
+    assert sorted(pol.cancel(victims)) == sorted(victims)
+    for g, _, _ in pol.take(now=0.0, drain=True):
+        returned.extend(p.rid for p in g)
+    assert sorted(returned) == sorted(set(submitted) - set(victims))
+
+
 # ---------------------------------------------------------------------------
 # Backends standalone: submit / poll / drain contract
 # ---------------------------------------------------------------------------
@@ -125,6 +204,27 @@ def test_backend_drain_completes_all_pending(runners, kind):
     assert reasons.count(FLUSH_FULL) == 6 and reasons.count(FLUSH_DRAIN) == 1
     leftover = next(r for r in results if r.reason == FLUSH_DRAIN)
     assert leftover.n_real == 1 and leftover.pad_to == 3
+
+
+@pytest.mark.parametrize("kind", ["sync", "thread", "stub"])
+def test_poll_accepts_timeout_kwarg(runners, kind):
+    """Protocol conformance: `LargeBackend.poll(timeout=...)` is part of
+    the contract (the engine's drain loop relies on it) — every backend
+    must accept the kwarg, including ones that never block. Regression:
+    the Protocol used to declare bare poll() while implementations took
+    a kwarg the engine couldn't rely on."""
+    small, large, prompts = runners
+    be = make_large_backend(kind, large, max_new=4, large_batch=2)
+    assert be.poll(timeout=0.01) == []          # idle: empty either way
+    assert be.poll() == []
+    be.submit([Request(rid=0, prompt=prompts[0], max_new=4)])
+    be.flush()
+    got = []
+    deadline = time.perf_counter() + 10.0
+    while not got and time.perf_counter() < deadline:
+        got = be.poll(timeout=0.05)
+    be.close()
+    assert [r.rid for r in got] == [0]
 
 
 def test_threaded_max_wait_fires_partial_batch(runners):

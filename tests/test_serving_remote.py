@@ -1,0 +1,547 @@
+"""Distributed M_L tier: wire-format goldens, socket RPC server/client
+contract, and the fault-injection suite — replica death mid-batch
+(re-dispatch), slow replica (timeout + retry), connection refused,
+corrupt payloads (rid echoed), cancellation on engine shutdown, and
+bit-exact greedy parity sync vs socket vs 2-replica pool on a ragged
+Poisson workload."""
+import json
+import socket
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tfm
+from repro.serving import (ContinuousCascadeEngine, ModelRunner, Request,
+                           make_requests, poisson_arrivals)
+from repro.serving.large_backend import BatchPolicy, LargeResult, _Pending
+from repro.serving.remote import (MLServer, ReplicaPool,
+                                  RemoteBackendError, SocketBackend, wire)
+from repro.serving.request import DONE
+
+GOLDEN = Path(__file__).parent / "golden" / "wire_v1.json"
+
+
+class FakeRunner:
+    """Deterministic stand-in for a ModelRunner: token i of row r is
+    prompt[r][0] + i. Lets protocol/fault tests run at socket speed;
+    parity tests use the real models (see `runners`)."""
+
+    def __init__(self, delay: float = 0.0):
+        self.delay = delay
+
+    def generate(self, prompts, plen, max_new):
+        if self.delay:
+            time.sleep(self.delay)
+        out = (prompts[:, :1]
+               + np.arange(max_new, dtype=np.int32)[None, :]).astype(np.int32)
+        return out, None
+
+
+def fake_server(**kw) -> MLServer:
+    kw.setdefault("max_new", 4)
+    kw.setdefault("large_batch", 2)
+    kw.setdefault("max_wait", 0.01)
+    return MLServer(FakeRunner(kw.pop("gen_delay", 0.0)), **kw).start()
+
+
+def reqs_for(prompts, max_new=4):
+    return [Request(rid=i, prompt=np.asarray(p, np.int32), max_new=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def expected_tokens(prompt, max_new=4):
+    return int(prompt[0]) + np.arange(max_new, dtype=np.int32)
+
+
+@pytest.fixture(scope="module")
+def runners():
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 1)))
+    return small, large
+
+
+def ragged_prompts(key, lens, vocab):
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (n,), 0, vocab), np.int32)
+            for i, n in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# Wire format: goldens + framing limits
+# ---------------------------------------------------------------------------
+
+def test_golden_wire_format_pinned():
+    """The serialized request/result payloads (and their exact frame
+    bytes — canonical JSON makes them stable) must match the committed
+    fixture: a change here breaks rolling server/client upgrades, and
+    the escape hatch is bumping SCHEMA_VERSION + adding wire_v2.json."""
+    fix = json.loads(GOLDEN.read_text())
+    assert fix["schema"] == wire.SCHEMA_VERSION, \
+        "schema bumped: pin a new golden fixture for the new version"
+    req = wire.encode_request(fix["request"]["rid"],
+                              np.asarray(fix["request"]["prompt"], np.int32))
+    assert req == fix["request"]
+    assert wire.frame_bytes(req).hex() == fix["request_frame_hex"]
+    res = LargeResult(rid=fix["result"]["rid"],
+                      tokens=np.asarray(fix["result"]["tokens"], np.int32),
+                      batch_id=fix["result"]["batch_id"],
+                      n_real=fix["result"]["n_real"],
+                      pad_to=fix["result"]["pad_to"],
+                      reason=fix["result"]["reason"],
+                      prompt_len=fix["result"]["prompt_len"])
+    assert wire.encode_result(res) == fix["result"]
+    assert wire.frame_bytes(fix["result"]).hex() == fix["result_frame_hex"]
+    assert wire.frame_bytes(
+        wire.envelope("submit", reqs=[req])).hex() \
+        == fix["submit_envelope_frame_hex"]
+    assert wire.frame_bytes(
+        wire.envelope("results", results=[fix["result"]], pending=0)).hex() \
+        == fix["results_envelope_frame_hex"]
+    # and the pinned bytes decode back to the same payloads
+    rid, prompt = wire.decode_request(fix["request"])
+    assert rid == fix["request"]["rid"]
+    np.testing.assert_array_equal(prompt, fix["request"]["prompt"])
+    back = wire.decode_result(fix["result"])
+    np.testing.assert_array_equal(back.tokens, fix["result"]["tokens"])
+
+
+def test_frame_roundtrip_and_limits():
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, wire.envelope("ping", n=1))
+        msg = wire.recv_frame(b)
+        wire.check_schema(msg)
+        assert msg["kind"] == "ping" and msg["n"] == 1
+        # oversize length prefix rejected before allocation
+        a.sendall((wire.MAX_FRAME + 1).to_bytes(4, "big"))
+        with pytest.raises(wire.WireError, match="MAX_FRAME"):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    # truncated frame: peer closes mid-body
+    a, b = socket.socketpair()
+    try:
+        a.sendall((100).to_bytes(4, "big") + b"only-a-few-bytes")
+        a.close()
+        with pytest.raises(wire.WireError, match="truncated"):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+    # schema mismatch rejected loudly
+    with pytest.raises(wire.WireError, match="schema mismatch"):
+        wire.check_schema({"schema": wire.SCHEMA_VERSION + 1, "kind": "x"})
+
+
+def test_decode_request_echoes_rid():
+    with pytest.raises(wire.WireError, match="rid must be"):
+        wire.decode_request({"rid": -1, "prompt": [1]})
+    with pytest.raises(wire.WireError, match="prompt must be") as ei:
+        wire.decode_request({"rid": 42, "prompt": []})
+    assert ei.value.rid == 42
+    with pytest.raises(wire.WireError) as ei:
+        wire.decode_request({"rid": 7, "prompt": [1, "x"]})
+    assert ei.value.rid == 7
+
+
+# ---------------------------------------------------------------------------
+# BatchPolicy: cancellation (server-side shutdown path)
+# ---------------------------------------------------------------------------
+
+def test_batch_policy_cancel():
+    pol = BatchPolicy(large_batch=4, max_wait=None)
+    for i in range(5):
+        pol.add(_Pending(i, np.full(8 if i < 3 else 6, i, np.int32), 0.0))
+    removed = pol.cancel([1, 3, 99])
+    assert sorted(removed) == [1, 3]
+    assert pol.n_pending == 3
+    out = pol.take(now=0.0, drain=True)
+    assert sorted(p.rid for g, _, _ in out for p in g) == [0, 2, 4]
+    # cancelling everything leaves no empty groups behind
+    pol.add(_Pending(9, np.full(8, 9, np.int32), 0.0))
+    assert pol.cancel([9]) == [9]
+    assert pol.n_pending == 0 and pol.next_deadline() is None
+
+
+# ---------------------------------------------------------------------------
+# Server/client contract (fake runner: protocol speed)
+# ---------------------------------------------------------------------------
+
+def test_socket_backend_submit_poll_drain():
+    srv = fake_server()
+    try:
+        be = SocketBackend(srv.address, request_timeout=5.0)
+        reqs = reqs_for([np.full(5, 10 + i, np.int32) for i in range(5)])
+        be.submit(reqs[:3])
+        be.submit(reqs[3:])
+        out = be.drain()
+        assert be.n_pending == 0
+        assert sorted(r.rid for r in out) == [0, 1, 2, 3, 4]
+        for r in out:
+            np.testing.assert_array_equal(
+                r.tokens, expected_tokens(reqs[r.rid].prompt))
+        # batch metadata survives the wire: 2 full batches + 1 drain
+        assert len(be.batch_log) == 3
+        assert sorted(b["reason"] for b in be.batch_log) \
+            == ["drain", "full", "full"]
+        be.close()
+    finally:
+        srv.stop()
+
+
+def test_server_session_reset_between_runs():
+    """Consecutive engine runs reuse rid 0..N; a new client session must
+    reset server state so run 2 isn't served run 1's stale results."""
+    srv = fake_server()
+    try:
+        p1 = [np.full(5, 10 + i, np.int32) for i in range(3)]
+        be1 = SocketBackend(srv.address, request_timeout=5.0)
+        be1.submit(reqs_for(p1))
+        out1 = be1.drain()
+        be1.close()
+        # same rids, DIFFERENT prompts: stale delivery would be wrong
+        p2 = [np.full(5, 50 + i, np.int32) for i in range(3)]
+        be2 = SocketBackend(srv.address, request_timeout=5.0)
+        be2.submit(reqs_for(p2))
+        out2 = be2.drain()
+        be2.close()
+        assert sorted(r.rid for r in out1) == [0, 1, 2]
+        assert sorted(r.rid for r in out2) == [0, 1, 2]
+        for r in out2:
+            np.testing.assert_array_equal(r.tokens,
+                                          expected_tokens(p2[r.rid]))
+    finally:
+        srv.stop()
+
+
+def test_connection_refused_is_loud_and_fast():
+    """No server listening: the backend must raise a clear ConnectionError
+    (naming the address and the server entrypoint) quickly, not hang."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()                      # port now refuses connections
+    t0 = time.perf_counter()
+    with pytest.raises(ConnectionError, match="ml_server"):
+        SocketBackend(("127.0.0.1", port), connect_timeout=0.2,
+                      retries=1, backoff=0.01)
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_corrupt_payload_rejected_with_rid_echoed():
+    """A well-framed but invalid request must be rejected with the
+    offending rid echoed — and the server must keep serving."""
+    srv = fake_server()
+    try:
+        s = socket.create_connection(srv.address, timeout=2.0)
+        s.settimeout(2.0)
+        wire.send_frame(s, wire.envelope("hello", session="bad-client"))
+        assert wire.recv_frame(s)["kind"] == "ok"
+        wire.send_frame(s, wire.envelope(
+            "submit", reqs=[{"rid": 42, "prompt": "not-a-token-list"}]))
+        reply = wire.recv_frame(s)
+        assert reply["kind"] == "error" and reply["rid"] == 42
+        assert "42" in reply["error"]
+        # connection survives a payload error: the next RPC still works
+        wire.send_frame(s, wire.envelope("health"))
+        assert wire.recv_frame(s)["kind"] == "ok"
+        s.close()
+
+        # undecodable frame (truncated mid-body): connection dropped,
+        # server survives, a fresh client is served normally
+        s2 = socket.create_connection(srv.address, timeout=2.0)
+        s2.sendall((1000).to_bytes(4, "big") + b"garbage")
+        s2.close()
+        be = SocketBackend(srv.address, request_timeout=5.0)
+        be.submit(reqs_for([np.full(5, 10, np.int32)]))
+        assert [r.rid for r in be.drain()] == [0]
+        be.close()
+    finally:
+        srv.stop()
+
+
+def test_slow_replica_timeout_then_retry_succeeds():
+    """Fault injection: the server delays its next responses past the
+    client's request timeout; the RPC retries (counter increments), the
+    retried submit dedupes server-side, and every result arrives exactly
+    once."""
+    from repro.serving.obs import MetricsRegistry
+    srv = fake_server()
+    try:
+        reg = MetricsRegistry()
+        be = SocketBackend(srv.address, request_timeout=0.15,
+                           retries=4, backoff=0.01, registry=reg)
+        srv.fault_delay_next = 1
+        srv.fault_delay_s = 0.5       # > request_timeout: forces a retry
+        be.submit(reqs_for([np.full(5, 10 + i, np.int32)
+                            for i in range(3)]))
+        out = be.drain()
+        assert sorted(r.rid for r in out) == [0, 1, 2]   # exactly once
+        assert be.n_pending == 0
+        scrape = reg.render()
+        assert "serving_ml_rpc_retries_total" in scrape
+        retries = [ln for ln in scrape.splitlines()
+                   if ln.startswith("serving_ml_rpc_retries_total")]
+        assert retries and float(retries[0].split()[-1]) >= 1
+        be.close()
+    finally:
+        srv.stop()
+
+
+def test_cancel_on_close_withdraws_inflight():
+    """Engine shutdown mid-run: close() cancels the backend's in-flight
+    rids server-side (pending drops to zero) and the server goes on to
+    serve the next client."""
+    srv = fake_server(large_batch=64, max_wait=None)   # nothing flushes
+    try:
+        be = SocketBackend(srv.address, request_timeout=5.0)
+        be.submit(reqs_for([np.full(5, 10 + i, np.int32)
+                            for i in range(4)]))
+        deadline = time.perf_counter() + 2.0
+        while srv.n_pending < 4 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert srv.n_pending == 4
+        be.close()                    # cancels rids 0..3
+        deadline = time.perf_counter() + 2.0
+        while srv.n_pending and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert srv.n_pending == 0
+        be2 = SocketBackend(srv.address, request_timeout=5.0)
+        be2.submit(reqs_for([np.full(5, 30, np.int32)]))
+        assert [r.rid for r in be2.drain()] == [0]
+        be2.close()
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Replica pool: ejection + re-dispatch (fault injection)
+# ---------------------------------------------------------------------------
+
+def test_pool_kill_replica_mid_batch_redispatches():
+    """Kill the replica holding in-flight work mid-batch: the pool must
+    eject it, re-dispatch the orphans to the survivor, and complete the
+    drain with every rid exactly once — zero dropped deferrals."""
+    from repro.serving.obs import MetricsRegistry
+    slow = fake_server(large_batch=8, max_wait=None, gen_delay=30.0)
+    healthy = fake_server()
+    reg = MetricsRegistry()
+    pool = ReplicaPool([slow.address, healthy.address],
+                       request_timeout=1.0, retries=1, backoff=0.01,
+                       health_interval=0.05, max_new=4, registry=reg)
+    try:
+        prompts = [np.full(5, 10 + i, np.int32) for i in range(5)]
+        pool.submit(reqs_for(prompts))    # least-loaded tie -> slow (idx 0)
+        deadline = time.perf_counter() + 2.0
+        while slow.n_pending < 5 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert slow.n_pending == 5
+        slow.kill()                       # abrupt: connections reset
+        out = pool.drain()
+        assert sorted(r.rid for r in out) == [0, 1, 2, 3, 4]
+        assert len(out) == len({r.rid for r in out})     # no duplicates
+        for r in out:
+            np.testing.assert_array_equal(r.tokens,
+                                          expected_tokens(prompts[r.rid]))
+        assert pool.n_alive == 1 and pool.n_pending == 0
+        scrape = reg.render()
+        eject = [ln for ln in scrape.splitlines()
+                 if ln.startswith("serving_ml_replica_ejections_total")]
+        assert eject and float(eject[0].split()[-1]) == 1
+        redis = [ln for ln in scrape.splitlines()
+                 if ln.startswith("serving_ml_redispatched_requests_total")]
+        assert redis and float(redis[0].split()[-1]) == 5
+    finally:
+        pool.close()
+        healthy.stop()
+        slow.stop()
+
+
+def test_pool_batch_aware_routing_fills_batches():
+    """With `large_batch` known, streamed single-request submits stick
+    to one replica until its group fills, then move on: every server
+    batch flushes `reason="full"` (never waits out max_wait) and both
+    replicas get work. Least-loaded spreading would leave every group
+    partial — the 2-replica deferral-wait tail would be WORSE than 1."""
+    a = fake_server(large_batch=2, max_wait=None, gen_delay=0.25)
+    b = fake_server(large_batch=2, max_wait=None, gen_delay=0.25)
+    pool = ReplicaPool([a.address, b.address], request_timeout=5.0,
+                       health_interval=10.0, max_new=4, large_batch=2)
+    try:
+        prompts = [np.full(5, 10 + i, np.int32) for i in range(4)]
+        for r in reqs_for(prompts):       # streamed, like the engine
+            pool.submit([r])
+        got = pool.drain()
+        assert sorted(r.rid for r in got) == [0, 1, 2, 3]
+        for srv in (a, b):                # work landed on BOTH replicas
+            batches = srv.batch_log
+            assert len(batches) == 1
+            assert batches[0]["n_real"] == 2
+            assert batches[0]["reason"] == "full"
+    finally:
+        pool.close()
+        a.stop()
+        b.stop()
+
+
+def test_pool_all_replicas_dead_raises():
+    srv = fake_server(large_batch=8, max_wait=None, gen_delay=30.0)
+    pool = ReplicaPool([srv.address], request_timeout=0.5, retries=0,
+                       backoff=0.01, health_interval=0.02, max_new=4)
+    try:
+        pool.submit(reqs_for([np.full(5, 10, np.int32)]))
+        srv.kill()
+        with pytest.raises(RemoteBackendError, match="dead"):
+            for _ in range(200):          # bounded, must raise not hang
+                pool.poll(timeout=0.05)
+                time.sleep(0.01)
+    finally:
+        pool.close()
+        srv.stop()
+
+
+def test_pool_health_check_ejects_silently_dead_replica():
+    """A replica that dies while holding NO work is ejected by the
+    periodic health probe; the pool keeps serving on the survivor."""
+    a = fake_server()
+    b = fake_server()
+    pool = ReplicaPool([a.address, b.address], request_timeout=1.0,
+                       retries=1, backoff=0.01, health_interval=0.05,
+                       max_new=4)
+    try:
+        a.kill()
+        time.sleep(0.1)                   # > health_interval
+        # an idle poll runs the periodic probe: the dead replica is
+        # ejected BEFORE any submit could trip over it
+        pool.poll()
+        assert pool.n_alive == 1
+        prompts = [np.full(5, 10 + i, np.int32) for i in range(4)]
+        pool.submit(reqs_for(prompts))
+        out = pool.drain()
+        assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+        assert pool.n_alive == 1
+    finally:
+        pool.close()
+        b.stop()
+        a.stop()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: parity + drain-through-death (real models)
+# ---------------------------------------------------------------------------
+
+def _remote_factory(kind, addresses):
+    def factory(runner=None, max_new=0, large_batch=None, max_wait=None,
+                stub_latency=0.0, registry=None):
+        if kind == "socket":
+            return SocketBackend(addresses[0], request_timeout=30.0,
+                                 registry=registry)
+        return ReplicaPool(addresses, request_timeout=30.0,
+                           health_interval=0.1, max_new=max_new,
+                           large_batch=large_batch, registry=registry)
+    return factory
+
+
+def test_engine_parity_sync_socket_pool(runners):
+    """Acceptance: bit-exact greedy outputs across sync (in-process
+    reference), socket (one remote replica), and a 2-replica pool, on a
+    ragged Poisson workload."""
+    small, large = runners
+    key = jax.random.PRNGKey(5)
+    lens = [6, 10] * 6
+    prompts = ragged_prompts(key, lens, small.cfg.vocab_size)
+    arrivals = poisson_arrivals(len(prompts), rate=400.0, seed=1)
+    for plen in (6, 10):              # pre-warm every M_L jit shape
+        large.generate(np.zeros((4, plen), np.int32), plen, 4)
+        large.generate(np.zeros((1, plen), np.int32), plen, 4)
+        large.generate(np.zeros((2, plen), np.int32), plen, 4)
+        large.generate(np.zeros((3, plen), np.int32), plen, 4)
+
+    servers = [MLServer(large, max_new=4, large_batch=4,
+                        max_wait=0.02).start() for _ in range(2)]
+    try:
+        backends = {
+            "sync": "sync",
+            "socket": _remote_factory("socket", [servers[0].address]),
+            "pool": _remote_factory("pool",
+                                    [s.address for s in servers]),
+        }
+        outs = {}
+        for name, backend in backends.items():
+            eng = ContinuousCascadeEngine(
+                small, large, n_slots=4, tau=1e9, min_tokens=2,
+                early_exit=True, large_batch=4, large_backend=backend,
+                large_max_wait=0.02)
+            res = eng.run(make_requests(prompts, 4, arrivals), 4)
+            assert all(r.state == DONE for r in res.requests)
+            assert res.deferred.all()
+            assert res.stats["ml_backend"] == name
+            outs[name] = res
+        np.testing.assert_array_equal(outs["sync"].tokens,
+                                      outs["socket"].tokens)
+        np.testing.assert_array_equal(outs["sync"].tokens,
+                                      outs["pool"].tokens)
+        np.testing.assert_array_equal(outs["sync"].deferred,
+                                      outs["pool"].deferred)
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_engine_drain_survives_replica_death(runners):
+    """A replica dies while the engine drains: the pool re-dispatches
+    its in-flight deferrals and the run completes with every request
+    DONE and tokens matching the single-replica reference."""
+    small, large = runners
+    key = jax.random.PRNGKey(7)
+    prompts = ragged_prompts(key, [6] * 8, small.cfg.vocab_size)
+    large.generate(np.zeros((4, 6), np.int32), 6, 4)   # pre-warm
+    for b in (1, 2, 3):
+        large.generate(np.zeros((b, 6), np.int32), 6, 4)
+
+    # doomed hoards work (big batch, huge injected latency per batch);
+    # survivor is responsive
+    doomed = MLServer(FakeRunner(delay=30.0), max_new=4, large_batch=8,
+                      max_wait=None).start()
+    survivor = MLServer(large, max_new=4, large_batch=4,
+                        max_wait=0.02).start()
+
+    killer_done = threading.Event()
+
+    def kill_when_loaded():
+        deadline = time.perf_counter() + 30.0
+        while time.perf_counter() < deadline:
+            if doomed.n_pending > 0:
+                doomed.kill()
+                break
+            time.sleep(0.005)
+        killer_done.set()
+
+    killer = threading.Thread(target=kill_when_loaded, daemon=True)
+    killer.start()
+    try:
+        eng = ContinuousCascadeEngine(
+            small, large, n_slots=4, tau=1e9, min_tokens=2,
+            early_exit=True, large_batch=8,
+            large_backend=_remote_factory(
+                "pool", [doomed.address, survivor.address]),
+            large_max_wait=None)
+        res = eng.run(make_requests(prompts, 4), 4)
+        killer_done.wait(timeout=30.0)
+        assert all(r.state == DONE for r in res.requests)
+        assert res.deferred.all()
+        # parity with a direct M_L regeneration of the same prompts
+        want, _ = large.generate(np.stack(prompts), 6, 4)
+        np.testing.assert_array_equal(res.tokens, want)
+    finally:
+        survivor.stop()
+        doomed.stop()
