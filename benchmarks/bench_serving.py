@@ -24,6 +24,14 @@ Scenarios (same models, same calibrated tau, same prompts):
                         and regenerates them while M_S keeps decoding;
                         compare its tokens/s, p95 latency, and deferral
                         wait against continuous+exit (sync M_L inline)
+  * continuous+3tier — 3-tier cascade ladder (small -> mid -> large,
+                        `CascadeSpec`): per-edge calibrated taus, edge-0
+                        deferrals become edge-1 arrival traffic; the row
+                        carries tier_served / per-edge deferrals / taus
+  * continuous+recal — online tau recalibration: the edge boots with a
+                        deliberately stale (0.8-quantile) tau and the
+                        EWMA quantile controller walks it toward the
+                        target ratio; the tau trace lands in --bench-out
   * continuous+socket — the distributed M_L tier (serving.remote): the
                         same engine config as continuous+thread but
                         deferrals cross a real localhost socket to one
@@ -92,9 +100,12 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.calibration import calibrate_edges
 from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
-from repro.launch.serve import build_runners
-from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
+from repro.launch.serve import build_ladder, build_runners
+from repro.serving import (CascadeEngine, CascadeSpec, CascadeTier,
+                           ContinuousCascadeEngine, DeferralEdge,
+                           EngineConfig, MLBackendConfig, RecalibConfig,
                            make_requests, poisson_arrivals)
 from repro.serving.obs import (ObsConfig, add_obs_args,
                                obs_config_from_args)
@@ -166,6 +177,12 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
     for k, v in s.items():
         if k.startswith("phase_"):
             row[k] = v
+    if s.get("n_tiers", 2) > 2:
+        row["tier_served"] = s["tier_served"]
+        row["edge_deferrals"] = s["edge_deferrals"]
+        row["edge_tau"] = s["edge_tau"]
+    if "recalibration" in s:
+        row["recalibration"] = s["recalibration"]
     if "peak_blocks" in s:
         row["peak_blocks"] = s["peak_blocks"]
         row["n_blocks"] = s["n_blocks"]
@@ -293,6 +310,41 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
     rows.append(best_of(lambda: run_continuous(cont_t, fresh(), max_new,
                                                "continuous+thread")))
 
+    # -- 3-tier ladder: small -> mid -> large, per-edge calibrated taus ----
+    # deferred traffic from edge 0 becomes arrival traffic for edge 1;
+    # compute cost uses the per-tier reach fractions
+    ladder = build_ladder("internlm2-1.8b", seed, 3)
+    spec3 = CascadeSpec(
+        tiers=[CascadeTier(r.cfg.name, runner=r, cost=c)
+               for r, c in zip(ladder, (0.2, 0.45, 1.0))],
+        edges=[DeferralEdge(margin=margin, min_tokens=min_tokens),
+               DeferralEdge()])
+    calibrate_edges(spec3, cal, max_new=max_new, prompt_len=cal_len,
+                    deferral_ratio=target_deferral)
+    eng3 = ContinuousCascadeEngine(spec3, EngineConfig(
+        n_slots=slots, early_exit=True, steps_per_sync=4,
+        ml=MLBackendConfig(large_batch=slots)))
+    rows.append(best_of(lambda: run_continuous(eng3, fresh(), max_new,
+                                               "continuous+3tier")))
+
+    # -- online tau recalibration correcting a stale threshold -------------
+    # the edge starts at the 0.8-quantile tau (deliberately
+    # mis-calibrated: the drifted-traffic stand-in) while the controller
+    # targets `target_deferral` — the recorded tau trace is the drift
+    # artifact the bench record carries
+    spec_r = CascadeSpec.two_tier(small, large, margin=margin,
+                                  min_tokens=min_tokens)
+    calibrate_edges(spec_r, cal, max_new=max_new, prompt_len=cal_len,
+                    deferral_ratio=0.8)
+    eng_r = ContinuousCascadeEngine(spec_r, EngineConfig(
+        n_slots=slots, early_exit=True, steps_per_sync=4,
+        ml=MLBackendConfig(large_batch=slots),
+        recalibration=RecalibConfig(warmup=8, ewma_alpha=0.05,
+                                    deadband=0.05, rearm=0.01),
+        recalib_target=target_deferral))
+    rows.append(best_of(lambda: run_continuous(eng_r, fresh(), max_new,
+                                               "continuous+recal")))
+
     # -- distributed M_L tier: socket RPC, 1 replica vs 2-replica pool -----
     # deferrals cross a real localhost socket under Poisson arrivals
     # (socket_rate req/s — the SAME arrival trace for both rows, so the
@@ -412,6 +464,16 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
           f"2-replica pool "
           f"({sock_row['throughput_tok_s']:.1f} vs "
           f"{pool_row['throughput_tok_s']:.1f} tok/s)")
+    t3 = next(r for r in rows if r["engine"] == "continuous+3tier")
+    print(f"# 3-tier ladder: tier_served={t3['tier_served']}, per-edge "
+          f"deferrals {t3['edge_deferrals']}, taus "
+          f"{[round(t, 3) for t in t3['edge_tau']]}")
+    rc = next(r for r in rows
+              if r["engine"] == "continuous+recal")["recalibration"]
+    print(f"# recalibration: tau {rc['tau_trace'][0][0][1]:.3f} -> "
+          f"{rc['tau_final'][0]:.3f} in {rc['tau_updates'][0]} updates "
+          f"(ewma deferral {rc['ewma_ratio'][0]:.3f}, target "
+          f"{target_deferral})")
     obs_overhead = None
     if obs_cfg is not None:
         plain = next(r for r in rows if r["engine"] == "continuous")
@@ -495,6 +557,19 @@ def bench_record(payload: Dict) -> Dict:
                 k[len("phase_"):-len("_s")]: round(v, 4)
                 for k, v in r.items()
                 if k.startswith("phase_") and k.endswith("_s")},
+            **({"tier_served": r["tier_served"],
+                "edge_deferrals": r["edge_deferrals"],
+                "edge_tau": [round(t, 4) for t in r["edge_tau"]]}
+               if "tier_served" in r else {}),
+            # tau drift is a first-class bench artifact: initial tau,
+            # where the online controller left it, and the trace
+            **({"tau_drift": {
+                "tau0": r["recalibration"]["tau_trace"][0][0][1],
+                "tau_final": [round(t, 4)
+                              for t in r["recalibration"]["tau_final"]],
+                "updates": r["recalibration"]["tau_updates"],
+                "trace": r["recalibration"]["tau_trace"]}}
+               if "recalibration" in r else {}),
         } for r in payload["rows"]],
     }
 

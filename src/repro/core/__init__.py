@@ -14,12 +14,18 @@ from repro.core.gatekeeper import (            # noqa: F401
     soft_cross_entropy)
 from repro.core.deferral import (              # noqa: F401
     max_softmax, negative_entropy, sequence_negative_entropy,
-    margin_confidence, defer_mask, selective_predict, SIGNALS)
+    margin_confidence, defer_mask, selective_predict, SIGNALS,
+    SERVING_SIGNALS, SignalObservation, MeanConfidenceSignal,
+    SemanticAgreementSignal, pairwise_agreement, resolve_signal)
 from repro.core.cascade import Cascade, CascadeResult  # noqa: F401
+from repro.core.cascade_spec import (          # noqa: F401
+    CascadeSpec, CascadeTier, DeferralEdge)
+from repro.core.recalibration import (         # noqa: F401
+    EdgeRecalibrator, RecalibConfig, TauController)
 from repro.core.metrics import (               # noqa: F401
     distributional_overlap, deferral_performance, ideal_deferral_curve,
     random_deferral_curve, realized_deferral_curve, auroc,
     pearson_correlation, expected_calibration_error, summarize_deferral)
 from repro.core.calibration import (           # noqa: F401
     threshold_for_deferral_ratio, threshold_for_accuracy,
-    expected_compute_cost)
+    expected_compute_cost, ladder_compute_cost, calibrate_edges)

@@ -2,10 +2,22 @@
 
 Given validation-set confidences, pick tau to hit a target deferral ratio or
 a target joint accuracy (the two practical deployment knobs).
+
+`calibrate_edges` is the ONE calibration surface for every cascade shape
+in the repo — the classifier `Cascade`, the static two-model
+`CascadeEngine`, the continuous serving engine, and N-tier
+`CascadeSpec` ladders all route through it (their own `calibrate`
+methods are thin wrappers). Per-edge semantics: edge 0 calibrates on the
+full validation set; edge i calibrates only on the prompts the
+already-calibrated edges 0..i-1 would defer that far — the traffic that
+actually reaches it. Every edge keeps the repo-wide sentinel semantics
+of `threshold_for_deferral_ratio` (``deferred = conf < tau``; ratio<=0
+-> below-min tau, never defer; ratio>=1 -> above-max tau, always
+defer).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -59,3 +71,91 @@ def expected_compute_cost(deferral_ratio: float,
     """Compute budget of the cascade (paper Fig. 1): every request pays
     cost_small; deferred requests additionally pay cost_large."""
     return cost_small + deferral_ratio * cost_large
+
+
+def ladder_compute_cost(reach_fractions: Sequence[float],
+                        costs: Sequence[float]) -> float:
+    """N-tier generalization of `expected_compute_cost`: tier i costs
+    `costs[i]` and is paid by the `reach_fractions[i]` fraction of
+    traffic that reaches it (tier 0 always has reach 1.0). The two-tier
+    case reduces to cost_small + r * cost_large exactly."""
+    if len(reach_fractions) != len(costs):
+        raise ValueError(f"{len(reach_fractions)} reach fractions but "
+                         f"{len(costs)} tier costs")
+    return float(sum(r * c for r, c in zip(reach_fractions, costs)))
+
+
+def _per_edge_ratios(n_edges: int,
+                     deferral_ratio: Union[float, Sequence[float]]
+                     ) -> List[float]:
+    if hasattr(deferral_ratio, "__len__"):
+        ratios = [float(r) for r in deferral_ratio]
+        if len(ratios) != n_edges:
+            raise ValueError(f"{n_edges} edges but {len(ratios)} "
+                             f"deferral ratios")
+        return ratios
+    return [float(deferral_ratio)] * n_edges
+
+
+def calibrate_edges(spec, val_prompts, *,
+                    max_new: Optional[int] = None,
+                    deferral_ratio: Union[float, Sequence[float]] = 0.2,
+                    prompt_len: Optional[int] = None,
+                    valid_mask=None) -> List[float]:
+    """Calibrate every edge threshold of a cascade from one validation
+    batch; sets the taus in place and returns them (edge order).
+
+    `spec` is either a `core.cascade_spec.CascadeSpec` (token-model
+    ladder: tier i's runner generates on the traffic reaching it, the
+    edge's signal scores it, tau_i is the target quantile) or a
+    `core.cascade.Cascade` (classifier: the configured logit signal on
+    the small model, single edge). `deferral_ratio` is one target for
+    every edge or a per-edge sequence. Tiers gated by an edge must carry
+    a local runner — a remote-only tier cannot be calibrated offline
+    (calibrate against its local twin, or rely on online
+    recalibration)."""
+    # classifier cascade: one edge, confidence from the logit signal
+    if hasattr(spec, "small_apply"):
+        ratios = _per_edge_ratios(1, deferral_ratio)
+        logits = spec.small_apply(spec.small_params, val_prompts)
+        conf = np.asarray(spec.confidence(logits, valid_mask))
+        spec.tau = threshold_for_deferral_ratio(conf, ratios[0])
+        return [spec.tau]
+
+    from repro.core.deferral import SignalObservation
+
+    ratios = _per_edge_ratios(len(spec.edges), deferral_ratio)
+    if max_new is None:
+        raise ValueError("calibrate_edges needs max_new for a "
+                         "generation ladder")
+    prompts = np.asarray(val_prompts, np.int32)
+    if prompt_len is None:
+        prompt_len = int(prompts.shape[1])
+    reach = np.arange(prompts.shape[0])          # rows reaching edge i
+    taus: List[float] = []
+    for i, (edge, ratio) in enumerate(zip(spec.edges, ratios)):
+        if reach.size == 0:
+            # nothing reaches this edge under the upstream taus; keep
+            # its configured tau — no data to re-derive one from
+            taus.append(edge.tau)
+            continue
+        runner = spec.tiers[i].runner
+        if runner is None:
+            raise ValueError(
+                f"cannot calibrate edge {i}: tier {i} "
+                f"({spec.tiers[i].name!r}) has no local runner")
+        sub = prompts[reach]
+        tokens, mean_conf = runner.generate(sub, prompt_len, max_new)
+        sig = edge.signal
+        if sig.supports_running:
+            conf = np.asarray(mean_conf, np.float64)
+        else:
+            conf = np.array([
+                sig.finalize(SignalObservation(
+                    prompt=sub[j], mean_confidence=float(mean_conf[j]),
+                    tokens=tokens[j], runner=runner, max_new=max_new))
+                for j in range(sub.shape[0])], np.float64)
+        edge.tau = threshold_for_deferral_ratio(conf, ratio)
+        taus.append(edge.tau)
+        reach = reach[conf < edge.tau]
+    return taus

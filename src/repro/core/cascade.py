@@ -123,12 +123,18 @@ class Cascade:
                       target_accuracy: Optional[float] = None,
                       val_labels: Optional[np.ndarray] = None,
                       valid_mask: Optional[jnp.ndarray] = None) -> float:
-        """Set tau from a validation batch for a target ratio or accuracy."""
+        """Set tau from a validation batch for a target ratio or accuracy.
+
+        The ratio path routes through the repo-wide calibration surface
+        (`calibration.calibrate_edges`) — one quantile rule, one
+        ``deferred = conf < tau`` sentinel convention, shared with the
+        serving engines and N-tier ladders."""
+        if deferral_ratio is not None:
+            return calibration.calibrate_edges(
+                self, val_inputs, deferral_ratio=deferral_ratio,
+                valid_mask=valid_mask)[0]
         s_logits = self.small_apply(self.small_params, val_inputs)
         conf = np.asarray(self.confidence(s_logits, valid_mask))
-        if deferral_ratio is not None:
-            self.tau = calibration.threshold_for_deferral_ratio(conf, deferral_ratio)
-            return self.tau
         if target_accuracy is not None:
             assert val_labels is not None, "target_accuracy needs val_labels"
             s_pred = np.asarray(jnp.argmax(s_logits, axis=-1))

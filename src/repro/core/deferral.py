@@ -2,13 +2,41 @@
 
 The deferral function g maps an input to a scalar confidence; the cascade
 accepts M_S's answer when g(x) >= tau and defers to M_L otherwise (eq. 6).
+
+Two layers live here:
+
+* **Array-level signals** (`SIGNALS`): pure functions logits -> confidence
+  used by the classifier `Cascade` and evaluation sweeps.
+* **Serving-level signals** (`DeferralSignal` / `SERVING_SIGNALS`): objects
+  the cascade *ladder* consults at its per-edge deferral decision points
+  (`core.cascade_spec.DeferralEdge`). A serving signal sees a
+  `SignalObservation` — the request's prompt, the tier's generated tokens,
+  the device-accumulated eq.-8 mean confidence, and (for tiers running
+  locally) the tier's `ModelRunner` — and returns one scalar compared
+  against the edge's tau with the repo-wide ``deferred = conf < tau``
+  convention. The built-ins:
+
+  ``mean_confidence``
+      The paper's eq.-8 path: mean negative predictive entropy of the
+      tier's own decode, already accumulated on device. Supports running
+      (in-flight) evaluation, so early exit works under it.
+  ``semantic_agreement``
+      k-sample semantic-agreement voting for open-ended generation
+      (arXiv 2509.21837): draw k cheap stochastic samples from the tier's
+      model and score the mean pairwise token-agreement in [0, 1] — high
+      agreement means the model keeps telling the same story, low
+      agreement means it is guessing. Needs the tier's runner locally and
+      has no in-flight form (evaluated once, at the decision point).
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+import zlib
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def max_softmax(logits: jnp.ndarray) -> jnp.ndarray:
@@ -70,3 +98,122 @@ def selective_predict(small_preds: jnp.ndarray,
     while mask.ndim < small_preds.ndim:
         mask = mask[..., None]
     return jnp.where(mask, large_preds, small_preds)
+
+
+# ---------------------------------------------------------------------------
+# Serving-level deferral signals (cascade-ladder per-edge decisions)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SignalObservation:
+    """Everything a serving edge knows about one request at its deferral
+    decision point. `mean_confidence` is the tier's device-accumulated
+    eq.-8 mean negative entropy; `runner` is the tier's local
+    `ModelRunner` (None when the tier executes behind a remote backend);
+    `tokens` are the tokens the tier actually generated (may be a
+    truncated record for in-flight evictions)."""
+    prompt: np.ndarray
+    mean_confidence: float
+    tokens: Optional[np.ndarray] = None
+    runner: Any = None
+    max_new: int = 0
+    rid: int = 0
+
+
+class MeanConfidenceSignal:
+    """Eq.-8 mean negative predictive entropy — the paper's signal and
+    the ladder default. Zero extra compute: the confidence is already
+    accumulated on device by the tier's decode loop, and a running mean
+    exists every step, so in-flight early exit works under it."""
+
+    name = "mean_confidence"
+    supports_running = True
+
+    def running(self, mean_confidence: float, n_gen: int) -> float:
+        return mean_confidence
+
+    def finalize(self, obs: SignalObservation) -> float:
+        return float(obs.mean_confidence)
+
+
+class SemanticAgreementSignal:
+    """k-sample semantic-agreement voting (arXiv 2509.21837): sample k
+    stochastic continuations of the prompt from the tier's own model and
+    return the mean pairwise per-token agreement in [0, 1]. An
+    open-ended generator that keeps producing the same continuation is
+    confident even when its per-token entropy says otherwise (many valid
+    surface forms); one that disagrees with itself is guessing.
+
+    Costs k extra sampled generations per gated request, paid once at
+    the decision point — there is no running form, so edges using this
+    signal never early-exit. Sampling keys derive from the prompt bytes
+    (crc32), so the score is deterministic per request and independent
+    of batch composition or decision order."""
+
+    name = "semantic_agreement"
+    supports_running = False
+
+    def __init__(self, k: int = 4, temperature: float = 0.8,
+                 seed: int = 0):
+        if k < 2:
+            raise ValueError(f"semantic agreement needs k >= 2 samples, "
+                             f"got {k}")
+        self.k = k
+        self.temperature = temperature
+        self.seed = seed
+
+    def running(self, mean_confidence: float, n_gen: int) -> None:
+        return None
+
+    def finalize(self, obs: SignalObservation) -> float:
+        if obs.runner is None:
+            raise ValueError(
+                "semantic_agreement needs the tier's local ModelRunner "
+                "to draw samples; this tier only has a remote backend")
+        prompt = np.asarray(obs.prompt, np.int32)
+        # deterministic per-request key: prompt-content hash, not rid,
+        # so identical prompts score identically across runs
+        seed = zlib.crc32(prompt.tobytes()) ^ self.seed
+        max_new = obs.max_new or (len(obs.tokens)
+                                  if obs.tokens is not None else 1)
+        samples = obs.runner.sample(
+            np.tile(prompt, (self.k, 1)), int(prompt.shape[0]),
+            int(max_new), seed=seed, temperature=self.temperature)
+        return float(pairwise_agreement(samples))
+
+
+def pairwise_agreement(samples: np.ndarray) -> float:
+    """Mean pairwise per-token agreement of a [k, T] sample matrix, in
+    [0, 1]: 1.0 when all k samples are identical token-for-token."""
+    s = np.asarray(samples)
+    k = s.shape[0]
+    if k < 2:
+        return 1.0
+    total, pairs = 0.0, 0
+    for i in range(k):
+        for j in range(i + 1, k):
+            total += float((s[i] == s[j]).mean())
+            pairs += 1
+    return total / pairs
+
+
+SERVING_SIGNALS = {
+    "mean_confidence": MeanConfidenceSignal,
+    "semantic_agreement": SemanticAgreementSignal,
+}
+
+
+def resolve_signal(signal: Any) -> Any:
+    """Accept a serving-signal name or an instance; return the instance.
+    Names construct with defaults — pass an instance for custom knobs."""
+    if isinstance(signal, str):
+        try:
+            return SERVING_SIGNALS[signal]()
+        except KeyError:
+            raise ValueError(
+                f"unknown deferral signal {signal!r}; known: "
+                f"{sorted(SERVING_SIGNALS)}") from None
+    if not hasattr(signal, "finalize") or not hasattr(signal, "running"):
+        raise TypeError(f"deferral signal must implement "
+                        f"running()/finalize(), got {type(signal).__name__}")
+    return signal

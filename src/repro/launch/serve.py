@@ -42,6 +42,18 @@ external servers use their own.
         --backend paged --ragged-min 8 --ragged-max 32 --block-size 8 \
         --prefill-chunk 8
 
+The cascade ladder (docs/serving.md): --tiers N serves an N-tier
+cascade (intermediate demo models interpolated between M_S and M_L),
+each adjacent pair gated by its own calibrated deferral edge; --signal
+picks the per-edge deferral signal (eq.-8 mean confidence, or k-sample
+semantic-agreement voting with --signal-k/--signal-temperature);
+--recalibrate turns on the online tau controller (EWMA deferral-ratio
+tracker with hysteresis) that nudges every edge's tau toward
+--recalib-target under arrival drift. Contradictory flag combinations
+(e.g. --ml-address with --large-backend sync, paged knobs with
+--backend slot) are rejected at argparse time instead of silently
+ignored.
+
 Observability (continuous engine; see docs/observability.md):
 --trace-out dumps a Perfetto-loadable Chrome trace of the run,
 --metrics-out / --metrics-port export the Prometheus metrics registry
@@ -57,24 +69,47 @@ import json
 import jax
 
 from repro.configs import get_config, reduced
+from repro.core.deferral import SemanticAgreementSignal
 from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.models import transformer as tfm
-from repro.serving import (CascadeEngine, ContinuousCascadeEngine,
-                           ModelRunner, make_requests, poisson_arrivals)
+from repro.serving import (CascadeEngine, CascadeSpec, CascadeTier,
+                           ContinuousCascadeEngine, DeferralEdge,
+                           EngineConfig, MLBackendConfig, ModelRunner,
+                           PagedConfig, RecalibConfig, make_requests,
+                           poisson_arrivals)
 from repro.serving.obs import (Observability, add_obs_args,
                                obs_config_from_args)
 
 
 def build_runners(arch: str, seed: int):
+    small, large = build_ladder(arch, seed, 2)
+    return small, large, small.cfg
+
+
+def build_ladder(arch: str, seed: int, n_tiers: int):
+    """One ModelRunner per tier, capacity interpolated from the reduced
+    `arch` (tier 0) up to the demo "large" config (last tier):
+    intermediate tiers grow depth/FFN only, keeping d_model/head count —
+    cheap enough that a CPU demo of a 3- or 4-tier ladder stays fast."""
     key = jax.random.PRNGKey(seed)
     small_cfg = reduced(get_config(arch))
     large_cfg = small_cfg.replace(name=small_cfg.name + "-large",
                                   n_layers=4, d_model=small_cfg.d_model * 2,
                                   n_heads=8, d_ff=small_cfg.d_ff * 2)
-    small = ModelRunner(small_cfg, tfm.init_params(small_cfg, key))
-    large = ModelRunner(large_cfg,
-                        tfm.init_params(large_cfg, jax.random.fold_in(key, 1)))
-    return small, large, small_cfg
+    cfgs = [small_cfg]
+    for i in range(1, n_tiers - 1):
+        f = i / (n_tiers - 1)
+        cfgs.append(small_cfg.replace(
+            name=f"{small_cfg.name}-mid{i}",
+            n_layers=round(small_cfg.n_layers
+                           + f * (large_cfg.n_layers - small_cfg.n_layers)),
+            d_ff=round(small_cfg.d_ff * (1 + f))))
+    cfgs.append(large_cfg)
+    # tier 0 keeps the base key (the historical two-runner init), so a
+    # 2-tier ladder is weight-identical to every earlier bench run
+    return [ModelRunner(c, tfm.init_params(
+                c, key if i == 0 else jax.random.fold_in(key, i)))
+            for i, c in enumerate(cfgs)]
 
 
 def make_remote_factory(kind: str, addresses, *, connect_timeout: float,
@@ -104,7 +139,7 @@ def make_remote_factory(kind: str, addresses, *, connect_timeout: float,
     return factory
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--engine", choices=("static", "continuous"),
@@ -117,6 +152,38 @@ def main():
     ap.add_argument("--min-tokens", type=int, default=2)
     ap.add_argument("--margin", type=float, default=0.0)
     ap.add_argument("--no-early-exit", action="store_true")
+    ap.add_argument("--tiers", type=int, default=2,
+                    help="cascade ladder depth (continuous engine): 2 = "
+                         "the paper's M_S/M_L pair; >2 inserts "
+                         "intermediate tiers, each with its own "
+                         "calibrated deferral edge")
+    ap.add_argument("--signal",
+                    choices=("mean_confidence", "semantic_agreement"),
+                    default="mean_confidence",
+                    help="per-edge deferral signal: eq.-8 mean negative "
+                         "entropy (running form, supports in-flight "
+                         "early exit) or k-sample semantic-agreement "
+                         "voting (finalize-only)")
+    ap.add_argument("--signal-k", type=int, default=4,
+                    help="semantic_agreement: samples per vote")
+    ap.add_argument("--signal-temperature", type=float, default=0.8,
+                    help="semantic_agreement: sampling temperature")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="continuous engine: recalibrate each edge's tau "
+                         "online (EWMA quantile tracker with hysteresis) "
+                         "toward --recalib-target under arrival drift")
+    ap.add_argument("--recalib-target", type=float, default=-1.0,
+                    help="target deferral ratio the online controller "
+                         "holds per edge (default: --deferral-ratio)")
+    ap.add_argument("--recalib-step", type=float, default=0.08,
+                    help="recalibration: Robbins-Monro step scale")
+    ap.add_argument("--recalib-deadband", type=float, default=0.1,
+                    help="recalibration: hysteresis deadband — the "
+                         "controller stays idle until |ewma - target| "
+                         "exceeds this")
+    ap.add_argument("--recalib-warmup", type=int, default=32,
+                    help="recalibration: observations before the "
+                         "controller may move tau")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals/s; 0 = all at t=0")
     ap.add_argument("--large-backend",
@@ -184,7 +251,10 @@ def main():
     ap.add_argument("--ragged-max", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     add_obs_args(ap)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    def given(dest: str) -> bool:
+        return getattr(args, dest) != ap.get_default(dest)
 
     if args.ragged_min > 0 and args.engine == "static":
         ap.error("--ragged-min/--ragged-max need --engine continuous "
@@ -194,8 +264,66 @@ def main():
         ap.error("observability flags (--trace-out/--metrics-*/"
                  "--device-timing/--profile-dir) need --engine continuous")
 
+    # reject contradictory flag combinations up front: a tuning flag that
+    # the selected backend/engine would silently ignore is a user error,
+    # not a no-op
+    remote = args.large_backend in ("socket", "pool")
+    if not remote:
+        for dest in ("ml_address", "ml_spawn", "ml_connect_timeout",
+                     "ml_request_timeout", "ml_retries",
+                     "ml_health_interval"):
+            if given(dest):
+                ap.error(f"--{dest.replace('_', '-')} needs "
+                         f"--large-backend socket|pool (got "
+                         f"--large-backend {args.large_backend}, which "
+                         f"would silently ignore it)")
+    if args.large_backend != "stub" and given("stub_latency"):
+        ap.error(f"--stub-latency needs --large-backend stub (got "
+                 f"--large-backend {args.large_backend}, which would "
+                 f"silently ignore it)")
+    if args.backend != "paged":
+        for dest in ("block_size", "blocks", "prefill_chunk",
+                     "paged_kernel", "serial_prefill",
+                     "no_prefix_sharing"):
+            if given(dest):
+                ap.error(f"--{dest.replace('_', '-')} needs --backend "
+                         f"paged (got --backend {args.backend}, which "
+                         f"would silently ignore it)")
+    if not args.recalibrate:
+        for dest in ("recalib_target", "recalib_step",
+                     "recalib_deadband", "recalib_warmup"):
+            if given(dest):
+                ap.error(f"--{dest.replace('_', '-')} needs "
+                         f"--recalibrate")
+    if args.tiers < 2:
+        ap.error(f"--tiers must be >= 2, got {args.tiers}")
+    if args.engine == "static":
+        for dest, flag in (("tiers", "--tiers"), ("signal", "--signal"),
+                           ("recalibrate", "--recalibrate")):
+            if given(dest):
+                ap.error(f"{flag} needs --engine continuous")
+    if args.signal != "semantic_agreement":
+        for dest in ("signal_k", "signal_temperature"):
+            if given(dest):
+                ap.error(f"--{dest.replace('_', '-')} needs "
+                         f"--signal semantic_agreement")
+    if remote:
+        if args.tiers != 2:
+            ap.error("--large-backend socket|pool drives the final "
+                     "(remote) tier of a 2-tier cascade; --tiers > 2 "
+                     "needs a local backend per intermediate tier")
+        if args.ml_spawn <= 0 and not args.ml_address:
+            ap.error("--large-backend socket/pool needs --ml-address "
+                     "host:port[,host:port...] or --ml-spawn N")
+        if (args.large_backend == "socket" and args.ml_address
+                and len(args.ml_address.split(",")) != 1):
+            ap.error("--large-backend socket takes exactly one "
+                     "--ml-address; use --large-backend pool for several")
+
     key = jax.random.PRNGKey(args.seed)
-    small, large, small_cfg = build_runners(args.arch, args.seed)
+    runners = build_ladder(args.arch, args.seed, args.tiers)
+    small, large = runners[0], runners[-1]
+    small_cfg = small.cfg
 
     ragged = args.ragged_min > 0
     cal_len = ((args.ragged_min + max(args.ragged_max, args.ragged_min))
@@ -253,24 +381,61 @@ def main():
             retries=args.ml_retries,
             health_interval=args.ml_health_interval)
 
-    engine = ContinuousCascadeEngine(
-        small, large, n_slots=args.slots, min_tokens=args.min_tokens,
-        margin=args.margin, early_exit=not args.no_early_exit,
-        large_batch=args.large_batch or None,
-        large_backend=large_backend,
-        large_max_wait=args.large_max_wait or None,
-        stub_latency=args.stub_latency,
-        backend=args.backend, block_size=args.block_size,
-        n_blocks=args.blocks or None,
-        prefill_chunk=args.prefill_chunk or None,
-        paged_kernel={"auto": None, "on": True,
-                      "off": False}[args.paged_kernel],
-        batch_prefill=not args.serial_prefill,
-        prefix_sharing=not args.no_prefix_sharing)
-    tau = engine.calibrate(cal, cal_len, args.max_new,
-                           args.deferral_ratio)
-    print(f"calibrated tau={tau:.4f} for target deferral "
-          f"{args.deferral_ratio}")
+    # declarative ladder: one tier per runner, cost interpolated
+    # geometrically from the paper's M_S (0.2) to M_L (1.0) units; one
+    # deferral edge per adjacent pair, all carrying the same signal
+    n = len(runners)
+    costs = [0.2 * (1.0 / 0.2) ** (i / (n - 1)) for i in range(n)]
+    tiers = [CascadeTier(r.cfg.name, runner=r, cost=costs[i])
+             for i, r in enumerate(runners)]
+    if callable(large_backend):          # socket/pool factory (2-tier)
+        tiers[-1] = CascadeTier(tiers[-1].name, runner=large,
+                                cost=costs[-1], backend=large_backend)
+
+    def make_signal():
+        if args.signal == "semantic_agreement":
+            return SemanticAgreementSignal(k=args.signal_k,
+                                           temperature=args.signal_temperature,
+                                           seed=args.seed)
+        return "mean_confidence"
+
+    spec = CascadeSpec(
+        tiers=tiers,
+        edges=[DeferralEdge(signal=make_signal(), margin=args.margin,
+                            min_tokens=args.min_tokens)
+               for _ in range(n - 1)])
+    recalib_target = (args.recalib_target if args.recalib_target >= 0
+                      else args.deferral_ratio)
+    config = EngineConfig(
+        n_slots=args.slots, early_exit=not args.no_early_exit,
+        backend=args.backend,
+        paged=PagedConfig(
+            block_size=args.block_size,
+            n_blocks=args.blocks or None,
+            prefill_chunk=args.prefill_chunk or None,
+            paged_kernel={"auto": None, "on": True,
+                          "off": False}[args.paged_kernel],
+            batch_prefill=not args.serial_prefill,
+            prefix_sharing=not args.no_prefix_sharing),
+        ml=MLBackendConfig(
+            kind=args.large_backend if not callable(large_backend)
+            else "sync",
+            large_batch=args.large_batch or None,
+            max_wait=args.large_max_wait or None,
+            stub_latency=args.stub_latency),
+        recalibration=(RecalibConfig(step=args.recalib_step,
+                                     deadband=args.recalib_deadband,
+                                     warmup=args.recalib_warmup)
+                       if args.recalibrate else None),
+        recalib_target=recalib_target)
+    engine = ContinuousCascadeEngine(spec, config)
+    taus = engine.calibrate(cal, cal_len, args.max_new,
+                            args.deferral_ratio)
+    taus = taus if isinstance(taus, list) else [taus]
+    print(f"calibrated tau(s) "
+          f"{', '.join(f'{t:.4f}' for t in taus)} for target deferral "
+          f"{args.deferral_ratio} per edge"
+          + (" (online recalibration on)" if args.recalibrate else ""))
     arrivals = (poisson_arrivals(len(live), args.arrival_rate, args.seed)
                 if args.arrival_rate > 0 else None)
     reqs = make_requests(live, args.max_new, arrivals)
@@ -289,10 +454,22 @@ def main():
         for srv in ml_servers:
             srv.stop()
     print(f"served {len(live)} requests on {args.slots} slots "
-          f"({args.backend} backend, M_L via {args.large_backend}) in "
+          f"({args.backend} backend, {args.tiers}-tier ladder, upper "
+          f"tiers via {args.large_backend}) in "
           f"{res.steps} M_S steps: deferral_ratio={res.deferral_ratio:.3f}, "
           f"early_exits={int(res.early_exited.sum())}, "
           f"saved_M_S_steps={res.saved_steps}")
+    if args.tiers > 2:
+        print(f"tier_served={res.stats['tier_served']} over tiers "
+              f"{res.stats['tier_names']}, per-edge deferrals "
+              f"{res.stats['edge_deferrals']}")
+    if args.recalibrate:
+        rc = res.stats["recalibration"]
+        drift = [f"{a:.4f}->{b:.4f}"
+                 for a, b in zip(taus, rc["tau_final"])]
+        print(f"online recalibration: tau drift {', '.join(drift)} "
+              f"({rc['tau_updates']} updates, ewma deferral "
+              f"{rc['ewma_ratio']})")
     print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                       for k, v in res.stats.items()}, indent=1))
     if args.audit_log:

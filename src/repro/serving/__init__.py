@@ -74,7 +74,12 @@ obs         Observability layer: span tracing with Chrome-trace export
             (Perfetto), bounded Prometheus metrics registry + /metrics
             endpoint, host/device time attribution, jax.profiler window.
 """
+from repro.core.cascade_spec import (CascadeSpec, CascadeTier,
+                                     DeferralEdge)
+from repro.core.recalibration import RecalibConfig
 from repro.serving.cache_pool import SlotCachePool
+from repro.serving.config import (EngineConfig, MLBackendConfig,
+                                  PagedConfig)
 from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
                                   ContinuousServeResult, ModelRunner,
                                   ServeResult)
@@ -92,10 +97,12 @@ from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
 
 __all__ = [
-    "ArrivalQueue", "BatchPolicy", "CascadeEngine",
-    "ContinuousCascadeEngine", "ContinuousServeResult", "LargeBackend",
-    "LargeResult", "MLServer", "MetricsRegistry", "ModelRunner",
-    "ObsConfig", "Observability", "PagedCachePool", "RemoteStubBackend",
+    "ArrivalQueue", "BatchPolicy", "CascadeEngine", "CascadeSpec",
+    "CascadeTier", "ContinuousCascadeEngine", "ContinuousServeResult",
+    "DeferralEdge", "EngineConfig", "LargeBackend",
+    "LargeResult", "MLBackendConfig", "MLServer", "MetricsRegistry",
+    "ModelRunner", "ObsConfig", "Observability", "PagedCachePool",
+    "PagedConfig", "RecalibConfig", "RemoteStubBackend",
     "ReplicaPool", "Request", "ServeResult", "ServingTelemetry",
     "SlotCachePool", "SlotScheduler", "SocketBackend", "SyncLocalBackend",
     "ThreadedBackend", "Tracer", "make_large_backend", "make_requests",

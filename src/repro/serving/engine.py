@@ -50,6 +50,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -57,12 +58,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
-from repro.core.calibration import (expected_compute_cost,
-                                    threshold_for_deferral_ratio)
+from repro.core.calibration import (calibrate_edges, expected_compute_cost,
+                                    ladder_compute_cost)
+from repro.core.cascade_spec import CascadeSpec
+from repro.core.deferral import SignalObservation
+from repro.core.recalibration import EdgeRecalibrator
 from repro.kernels import ops as kernel_ops
 from repro.models import transformer as tfm
 from repro.serving.cache_pool import (SlotCachePool, cache_batch_axes,
                                       scatter_rows)
+from repro.serving.config import (LEGACY_KWARG_MAP, MIGRATION_HINT,
+                                  EngineConfig, MLBackendConfig, PagedConfig)
 from repro.serving.large_backend import make_large_backend
 from repro.serving.obs import Observability
 from repro.serving.obs.trace import emit_request_spans
@@ -150,6 +156,58 @@ class ModelRunner:
         tokens, conf = fn(self.params, jnp.asarray(prompts))
         return np.asarray(tokens), np.asarray(conf)
 
+    def _sample_impl(self, params, prompts, seed, *, prompt_len: int,
+                     max_new: int, temperature: float):
+        cfg, ctx = self.cfg, self.ctx
+        B = prompts.shape[0]
+        key = jax.random.PRNGKey(seed)
+        cache = tfm.init_cache(cfg, B, prompt_len + max_new,
+                               dtype=cfg.cdtype())
+        logits, cache = tfm.prefill(params, cfg, prompts, cache, ctx,
+                                    last_only=True)
+        inv_t = 1.0 / temperature
+        tok = jax.random.categorical(
+            jax.random.fold_in(key, 0),
+            logits[:, -1, :].astype(jnp.float32) * inv_t,
+            axis=-1).astype(jnp.int32)
+        buf = jnp.zeros((B, max_new), jnp.int32).at[:, 0].set(tok)
+
+        def body(i, carry):
+            tok, cache, buf = carry
+            step_logits, cache = tfm.decode_step(params, cfg, tok,
+                                                 prompt_len + i, cache, ctx)
+            tok = jax.random.categorical(
+                jax.random.fold_in(key, i + 1),
+                step_logits.astype(jnp.float32) * inv_t,
+                axis=-1).astype(jnp.int32)
+            buf = buf.at[:, i + 1].set(tok)
+            return tok, cache, buf
+
+        _, _, buf = jax.lax.fori_loop(0, max_new - 1, body,
+                                      (tok, cache, buf))
+        return buf
+
+    def sample(self, prompts: np.ndarray, prompt_len: int, max_new: int,
+               seed: int = 0, temperature: float = 1.0) -> np.ndarray:
+        """Stochastic generation (temperature sampling) for agreement-
+        style deferral signals: rows draw independent per-step gumbel
+        noise from one run-deterministic PRNG key, so the same
+        (prompts, seed) always yields the same samples. Returns
+        [B, max_new] int32 tokens."""
+        if temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {temperature}")
+        key = (prompt_len, max_new, float(temperature), "sample")
+        fn = self._gen_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._sample_impl,
+                                           prompt_len=prompt_len,
+                                           max_new=max_new,
+                                           temperature=float(temperature)))
+            self._gen_fns[key] = fn
+        tokens = fn(self.params, jnp.asarray(prompts),
+                    jnp.uint32(seed & 0xFFFFFFFF))
+        return np.asarray(tokens)
+
 
 class CascadeEngine:
     """Two-ModelRunner cascade with a calibrated threshold (static,
@@ -167,11 +225,16 @@ class CascadeEngine:
     def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
                   max_new: int, deferral_ratio: float) -> float:
         """Pick tau so `deferral_ratio` of the validation prompts fall
-        below it (shared Stage-3 helper: consistent `deferred = conf <
-        tau` semantics, incl. the ratio<=0 / ratio>=1 sentinels, with
-        core.calibration users)."""
-        _, conf = self.small.generate(val_prompts, prompt_len, max_new)
-        self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
+        below it, through the repo-wide calibration surface
+        (`core.calibration.calibrate_edges`: one quantile rule, one
+        ``deferred = conf < tau`` sentinel convention shared with the
+        classifier cascade and the N-tier serving ladders)."""
+        spec = CascadeSpec.two_tier(self.small, self.large, tau=self.tau,
+                                    cost_small=self.cost_small,
+                                    cost_large=self.cost_large)
+        self.tau = calibrate_edges(spec, val_prompts, max_new=max_new,
+                                   deferral_ratio=deferral_ratio,
+                                   prompt_len=prompt_len)[0]
         return self.tau
 
     def serve(self, prompts: np.ndarray, prompt_len: int,
@@ -217,7 +280,26 @@ class ContinuousServeResult:
 
 
 class ContinuousCascadeEngine:
-    """Continuous-batching cascade over a slot or block-paged KV pool.
+    """Continuous-batching N-tier cascade over a slot or block-paged KV
+    pool.
+
+    Constructed from a `core.cascade_spec.CascadeSpec` (the model
+    ladder: ordered tiers, per-edge `DeferralEdge(signal, tau, margin,
+    min_tokens)` gates) and a `serving.config.EngineConfig` (how to
+    execute it: slots, KV backend, M_L batching, optional online tau
+    recalibration). Tier 0 runs in the continuous-batching decode loop;
+    each edge e hands its deferrals to an execution backend running tier
+    e+1, and an intermediate tier's results are gated by the NEXT edge —
+    deferred traffic from edge e is arrival traffic for edge e+1,
+    through the same submit/poll/flush/drain machinery. A 2-tier spec
+    reproduces the original two-model engine bit-exactly; the legacy
+    flat-kwargs constructor still works via a deprecation shim
+    (`config.LEGACY_KWARG_MAP`).
+
+    With `EngineConfig.recalibration` set, a `core.recalibration
+    .EdgeRecalibrator` nudges each edge's tau toward
+    `recalib_target` deferral online (EWMA-gated stochastic quantile
+    tracking with hysteresis); taus are fixed otherwise.
 
     Per-slot device state (all [n_slots] unless noted):
       last_tok  — input token for the next decode step
@@ -291,57 +373,176 @@ class ContinuousCascadeEngine:
     unchanged — finished slots self-deactivate on device).
     """
 
-    def __init__(self, small: ModelRunner, large: ModelRunner,
-                 n_slots: int = 8, tau: float = -1.0,
-                 margin: float = 0.0, min_tokens: int = 2,
-                 early_exit: bool = True,
-                 large_batch: Optional[int] = None,
-                 large_backend="sync",      # name or callable factory
-                 large_max_wait: Optional[float] = None,
-                 stub_latency: float = 0.0,
-                 steps_per_sync: int = 1,
-                 backend: str = "slot",
-                 block_size: int = 16,
-                 n_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
-                 paged_kernel: Optional[bool] = None,
-                 batch_prefill: bool = True,
-                 prefix_sharing: bool = True,
-                 cost_small: float = 0.2, cost_large: float = 1.0):
-        if backend not in ("slot", "paged"):
-            raise ValueError(f"backend must be 'slot' or 'paged', "
-                             f"got {backend!r}")
-        self.small = small
-        self.large = large
-        self.n_slots = n_slots
-        self.tau = tau
-        self.margin = margin
-        self.min_tokens = max(1, min_tokens)
-        self.early_exit = early_exit
-        self.large_batch = large_batch
-        self.large_backend = large_backend
-        self.large_max_wait = large_max_wait
-        self.stub_latency = stub_latency
-        self.steps_per_sync = max(1, steps_per_sync)
-        self.backend = backend
-        self.block_size = block_size
-        self.n_blocks = n_blocks
-        self.prefill_chunk = prefill_chunk
-        self.paged_kernel = paged_kernel
-        self.batch_prefill = batch_prefill
-        self.prefix_sharing = prefix_sharing
-        self.cost_small = cost_small
-        self.cost_large = cost_large
+    def __init__(self, spec, config: Optional[EngineConfig] = None,
+                 **legacy):
+        if isinstance(spec, CascadeSpec):
+            if legacy:
+                raise TypeError(
+                    f"ContinuousCascadeEngine(spec, config) takes no extra "
+                    f"kwargs, got {sorted(legacy)} — per-edge knobs live on "
+                    f"the spec's DeferralEdges, execution knobs on "
+                    f"EngineConfig")
+            if config is not None and not isinstance(config, EngineConfig):
+                raise TypeError(f"config must be an EngineConfig, got "
+                                f"{type(config).__name__}")
+            self.spec = spec
+            self.config = config if config is not None else EngineConfig()
+        else:
+            # legacy flat-kwargs shim: (small, large, n_slots=..., tau=...,
+            # ...) — every old name maps onto a spec/config field
+            # (config.LEGACY_KWARG_MAP is the table) so old call sites run
+            # through the exact same code path as a hand-built 2-tier spec
+            small, large = spec, legacy.pop("large", config)
+            if not (hasattr(small, "generate") and hasattr(large, "generate")):
+                raise TypeError(
+                    "ContinuousCascadeEngine needs a CascadeSpec (plus an "
+                    "optional EngineConfig) or the legacy "
+                    "(small, large) ModelRunner pair")
+            unknown = set(legacy) - set(LEGACY_KWARG_MAP)
+            if unknown:
+                raise TypeError(f"unknown ContinuousCascadeEngine kwargs "
+                                f"{sorted(unknown)}")
+            warnings.warn(MIGRATION_HINT, DeprecationWarning, stacklevel=2)
+            self.spec = CascadeSpec.two_tier(
+                small, large,
+                tau=legacy.get("tau", -1.0),
+                margin=legacy.get("margin", 0.0),
+                min_tokens=legacy.get("min_tokens", 2),
+                cost_small=legacy.get("cost_small", 0.2),
+                cost_large=legacy.get("cost_large", 1.0))
+            self.config = EngineConfig(
+                n_slots=legacy.get("n_slots", 8),
+                early_exit=legacy.get("early_exit", True),
+                steps_per_sync=legacy.get("steps_per_sync", 1),
+                backend=legacy.get("backend", "slot"),
+                paged=PagedConfig(
+                    block_size=legacy.get("block_size", 16),
+                    n_blocks=legacy.get("n_blocks"),
+                    prefill_chunk=legacy.get("prefill_chunk"),
+                    paged_kernel=legacy.get("paged_kernel"),
+                    batch_prefill=legacy.get("batch_prefill", True),
+                    prefix_sharing=legacy.get("prefix_sharing", True)),
+                ml=MLBackendConfig(
+                    kind=legacy.get("large_backend", "sync"),
+                    large_batch=legacy.get("large_batch"),
+                    max_wait=legacy.get("large_max_wait"),
+                    stub_latency=legacy.get("stub_latency", 0.0)))
         self._fns: Dict[Tuple, Tuple] = {}
 
-    # -- calibration (same Stage-3 helper as the static engine) -----------
+    # -- back-compat attribute surface (the legacy flat-kwarg names read —
+    # and where old code mutated them, write — through to spec/config) ----
+    @property
+    def small(self) -> ModelRunner:
+        return self.spec.tiers[0].runner
+
+    @property
+    def large(self):
+        return self.spec.tiers[1].runner
+
+    @property
+    def tau(self) -> float:
+        return self.spec.edges[0].tau
+
+    @tau.setter
+    def tau(self, v: float) -> None:
+        self.spec.edges[0].tau = float(v)
+
+    @property
+    def margin(self) -> float:
+        return self.spec.edges[0].margin
+
+    @margin.setter
+    def margin(self, v: float) -> None:
+        self.spec.edges[0].margin = float(v)
+
+    @property
+    def min_tokens(self) -> int:
+        return self.spec.edges[0].min_tokens
+
+    @min_tokens.setter
+    def min_tokens(self, v: int) -> None:
+        self.spec.edges[0].min_tokens = max(1, int(v))
+
+    @property
+    def early_exit(self) -> bool:
+        return self.config.early_exit
+
+    @early_exit.setter
+    def early_exit(self, v: bool) -> None:
+        self.config.early_exit = bool(v)
+
+    @property
+    def n_slots(self) -> int:
+        return self.config.n_slots
+
+    @property
+    def steps_per_sync(self) -> int:
+        return self.config.steps_per_sync
+
+    @property
+    def backend(self) -> str:
+        return self.config.backend
+
+    @property
+    def large_batch(self) -> Optional[int]:
+        return self.config.ml.large_batch
+
+    @property
+    def large_backend(self):
+        return self.config.ml.kind
+
+    @property
+    def large_max_wait(self) -> Optional[float]:
+        return self.config.ml.max_wait
+
+    @property
+    def stub_latency(self) -> float:
+        return self.config.ml.stub_latency
+
+    @property
+    def block_size(self) -> int:
+        return self.config.paged.block_size
+
+    @property
+    def n_blocks(self) -> Optional[int]:
+        return self.config.paged.n_blocks
+
+    @property
+    def prefill_chunk(self) -> Optional[int]:
+        return self.config.paged.prefill_chunk
+
+    @property
+    def paged_kernel(self) -> Optional[bool]:
+        return self.config.paged.paged_kernel
+
+    @property
+    def batch_prefill(self) -> bool:
+        return self.config.paged.batch_prefill
+
+    @property
+    def prefix_sharing(self) -> bool:
+        return self.config.paged.prefix_sharing
+
+    @property
+    def cost_small(self) -> float:
+        return self.spec.tiers[0].cost
+
+    @property
+    def cost_large(self) -> float:
+        return self.spec.tiers[1].cost
+
+    # -- calibration (the repo-wide Stage-3 surface) -----------------------
     def calibrate(self, val_prompts: np.ndarray, prompt_len: int,
-                  max_new: int, deferral_ratio: float) -> float:
-        """Calibrate tau on a uniform validation batch (the deployment
-        path calibrates offline, so a fixed-shape batch is fine)."""
-        _, conf = self.small.generate(val_prompts, prompt_len, max_new)
-        self.tau = threshold_for_deferral_ratio(conf, deferral_ratio)
-        return self.tau
+                  max_new: int, deferral_ratio=0.2):
+        """Calibrate every edge tau on a uniform validation batch via
+        `core.calibration.calibrate_edges` (edge i calibrates on the
+        traffic upstream edges would defer that far). Returns the single
+        tau for a 2-tier spec (legacy contract) or the per-edge list for
+        deeper ladders; `deferral_ratio` may be per-edge."""
+        taus = calibrate_edges(self.spec, val_prompts, max_new=max_new,
+                               deferral_ratio=deferral_ratio,
+                               prompt_len=prompt_len)
+        return taus[0] if len(taus) == 1 else taus
 
     # -- jitted device programs -------------------------------------------
     def _decode_body(self, params, cache, state, pages, max_new,
@@ -568,7 +769,23 @@ class ContinuousCascadeEngine:
         # the worker backend gets its own try/finally inside (a leaked
         # worker thread spins its poll loop for the life of the process)
         tel = ServingTelemetry(audit_path, obs=obs_rt)
-        ml = None
+        spec = self.spec
+        n_edges = len(spec.edges)
+        last_tier = spec.n_tiers - 1
+        edge0 = spec.edges[0]
+        # online tau recalibration: one controller per edge, seeded from
+        # the configured (offline) taus; None = fixed taus, the
+        # parity-pinned default
+        recal = None
+        if self.config.recalibration is not None:
+            recal = EdgeRecalibrator(list(spec.taus),
+                                     self.config.recalib_target,
+                                     self.config.recalibration)
+
+        def edge_tau(e: int) -> float:
+            return recal.tau(e) if recal is not None else spec.edges[e].tau
+
+        backends: List[Any] = []
         try:
             S = self.n_slots
             state = {
@@ -589,10 +806,22 @@ class ContinuousCascadeEngine:
             n_prefill_tokens = 0
             n_shared_tokens = 0
             peak_active = 0
-            ml = make_large_backend(self.large_backend, self.large, max_new,
-                                    self.large_batch, self.large_max_wait,
-                                    self.stub_latency,
-                                    registry=tel.registry)
+            # one execution backend per edge: backends[e] runs tier e+1.
+            # A tier's own `backend` wins; otherwise config.ml.kind.
+            # Only edge 0's backend registers metrics (the registry's
+            # metric names are unique per run; edge 0 is the legacy
+            # surface the dashboards already chart).
+            cfg_ml = self.config.ml
+            for e in range(n_edges):
+                tier = spec.tiers[e + 1]
+                kind = tier.backend if tier.backend is not None \
+                    else cfg_ml.kind
+                backends.append(make_large_backend(
+                    kind, tier.runner, max_new,
+                    cfg_ml.large_batch, cfg_ml.max_wait,
+                    cfg_ml.stub_latency,
+                    registry=tel.registry if e == 0 else None))
+            ml = backends[0]
             by_rid = {r.rid: r for r in requests}
             ml_depths: List[int] = []
             # pull-mode gauges: evaluated only when someone scrapes
@@ -619,31 +848,72 @@ class ContinuousCascadeEngine:
             ngen_prev = np.zeros(S, np.int64)
             tel.reset_clock()
 
-            def submit_large(req: Request):
-                """Stream one deferral into the M_L backend the moment its
-                slot retires — M_S decode proceeds while M_L works."""
+            edge_deferrals = [0] * n_edges
+
+            def submit_large(req: Request, edge: int):
+                """Stream one deferral across `edge` into tier edge+1's
+                backend the moment the upstream tier lets go of it — the
+                rest of the ladder keeps working while that tier
+                regenerates."""
+                edge_deferrals[edge] += 1
+                req.tier = edge + 1
                 req.state = DEFERRED_PENDING
                 req.t_submit_large = tel.now
-                ml.submit([req])
-                tel.event("large_submit", rid=req.rid, depth=ml.n_pending)
+                backends[edge].submit([req])
+                tel.event("large_submit", rid=req.rid, edge=edge,
+                          depth=backends[edge].n_pending)
+
+            def total_pending() -> int:
+                return sum(b.n_pending for b in backends)
 
             def poll_large():
-                """Fold completed M_L regenerations back into the run."""
-                for res in ml.poll():
-                    req = by_rid[res.rid]
-                    # trim to the request's own budget: the backend pads
-                    # generation width to the run-wide max_new
-                    req.tokens = np.asarray(res.tokens,
-                                            np.int32)[:req.max_new].copy()
-                    req.state = DONE
-                    now = tel.now
-                    req.t_done = now
-                    tel.m_tokens.labels(model="large").inc(len(req.tokens))
-                    tel.event("large_complete", rid=req.rid,
-                              batch_id=res.batch_id, n_real=res.n_real,
-                              pad_to=res.pad_to, reason=res.reason,
-                              wait_ms=round((now - req.t_submit_large) * 1e3,
-                                            3))
+                """Fold completed regenerations back into the run. A
+                result from backends[e] is tier e+1's output: at the last
+                tier it is final; at an intermediate tier it is gated by
+                edge e+1 — below tau it becomes arrival traffic for the
+                next backend, above it the request retires here."""
+                for e, be in enumerate(backends):
+                    for res in be.poll():
+                        req = by_rid[res.rid]
+                        tier = e + 1
+                        now = tel.now
+                        if tier < last_tier:
+                            edge = spec.edges[tier]
+                            sig = edge.signal
+                            if sig.supports_running:
+                                conf = float(res.confidence)
+                            else:
+                                conf = float(sig.finalize(SignalObservation(
+                                    prompt=req.prompt,
+                                    mean_confidence=float(res.confidence),
+                                    tokens=np.asarray(res.tokens, np.int32),
+                                    runner=spec.tiers[tier].runner,
+                                    max_new=max_new, rid=req.rid)))
+                            tau_e = edge_tau(tier)
+                            defer = conf < tau_e
+                            if recal is not None:
+                                recal.observe(tier, conf)
+                            tel.event("tier_gate", rid=req.rid, tier=tier,
+                                      edge=tier, confidence=round(conf, 6),
+                                      tau=round(tau_e, 6), deferred=defer)
+                            if defer:
+                                submit_large(req, tier)
+                                continue
+                        # accepted at this tier: final tokens, trimmed to
+                        # the request's own budget (backends pad
+                        # generation width to the run-wide max_new)
+                        req.tier = tier
+                        req.tokens = np.asarray(
+                            res.tokens, np.int32)[:req.max_new].copy()
+                        req.state = DONE
+                        req.t_done = now
+                        tel.m_tokens.labels(model="large").inc(
+                            len(req.tokens))
+                        tel.event("large_complete", rid=req.rid, tier=tier,
+                                  batch_id=res.batch_id, n_real=res.n_real,
+                                  pad_to=res.pad_to, reason=res.reason,
+                                  wait_ms=round(
+                                      (now - req.t_submit_large) * 1e3, 3))
 
             def sync_retire():
                 """Pull the tiny control vectors, retire finished /
@@ -657,6 +927,7 @@ class ContinuousCascadeEngine:
                 toks = None
                 retired: List[int] = []
                 now = tel.now
+                sig0 = edge0.signal
                 for slot in sched.active_slots:
                     if slot in mid_prefill:
                         continue
@@ -664,20 +935,36 @@ class ContinuousCascadeEngine:
                     n = int(n_gen[slot])
                     mean = float(conf_sum[slot]) / max(n, 1)
                     finished = n >= req.max_new
+                    tau0 = edge_tau(0)
+                    # in-flight deferral needs a running form of the
+                    # signal; signals without one (k-sample agreement)
+                    # can only gate at full retirement
                     evict = (not finished and self.early_exit
-                             and n >= self.min_tokens
-                             and mean < self.tau - self.margin)
+                             and sig0.supports_running
+                             and n >= edge0.min_tokens
+                             and sig0.running(mean, n) < tau0 - edge0.margin)
                     if not (finished or evict):
                         continue
                     if toks is None:
                         toks = np.asarray(state["tokens"])
                     req.n_small_steps = n
-                    req.confidence = mean
                     req.small_tokens = toks[slot, :n].copy()
-                    defer = mean < self.tau if finished else True
+                    if evict:
+                        conf, defer = mean, True
+                    else:
+                        conf = (mean if sig0.supports_running
+                                else float(sig0.finalize(SignalObservation(
+                                    prompt=req.prompt, mean_confidence=mean,
+                                    tokens=req.small_tokens,
+                                    runner=self.small, max_new=req.max_new,
+                                    rid=req.rid))))
+                        defer = conf < tau0
+                    req.confidence = conf
+                    if recal is not None:
+                        recal.observe(0, conf)
                     sched.retire(slot, now, deferred=defer, early=evict)
                     if defer:
-                        submit_large(req)
+                        submit_large(req, 0)
                     else:
                         req.tokens = toks[slot, :req.max_new].copy()
                     reason = ("defer_early" if evict else
@@ -973,19 +1260,29 @@ class ContinuousCascadeEngine:
                                     args={"n_active": sched.n_active,
                                           "ml_pending": ml.n_pending})
 
-                # all M_S work is done: release partial M_L groups and fold
-                # in completions as they land (t_done stays accurate).
-                # Remote backends advertise drain_stall_timeout: when a
-                # replica dies mid-drain and nothing can make progress,
-                # abort with the pending count instead of spinning forever
+                # all M_S work is done: drain the ladder edge by edge.
+                # Backend e is flushed only once every backend upstream of
+                # it is empty — deferred traffic from edge e-1 is edge e's
+                # arrival traffic, so flushing earlier would cut partial
+                # batches that a sequential reference run would have
+                # batched together. Remote backends advertise
+                # drain_stall_timeout: when a replica dies mid-drain and
+                # nothing can make progress, abort with the pending count
+                # instead of spinning forever
                 t_drain = tel.now
-                stall_s = getattr(ml, "drain_stall_timeout", None)
-                last_pending = ml.n_pending
+                stalls = [getattr(b, "drain_stall_timeout", None)
+                          for b in backends]
+                stall_s = min((s for s in stalls if s is not None),
+                              default=None)
+                last_pending = total_pending()
                 t_progress = time.perf_counter()
-                ml.flush()
                 while True:
+                    for e, be in enumerate(backends):
+                        if all(backends[u].n_pending == 0
+                               for u in range(e)):
+                            be.flush()
                     poll_large()
-                    pending = ml.n_pending
+                    pending = total_pending()
                     if not pending:
                         break
                     if pending != last_pending:
@@ -993,10 +1290,11 @@ class ContinuousCascadeEngine:
                         t_progress = time.perf_counter()
                     elif (stall_s is not None
                           and time.perf_counter() - t_progress > stall_s):
+                        names = [f"{getattr(b, 'name', '?')}:"
+                                 f"{b.n_pending}" for b in backends]
                         raise RuntimeError(
                             f"M_L drain stalled: {pending} deferral(s) "
-                            f"still pending on the "
-                            f"{getattr(ml, 'name', '?')} backend with no "
+                            f"still pending ({', '.join(names)}) with no "
                             f"progress for {stall_s}s")
                     time.sleep(2e-3)
                 makespan = tel.now
@@ -1005,7 +1303,8 @@ class ContinuousCascadeEngine:
                     tr.complete("drain", "engine", t_drain,
                                 makespan - t_drain, 0)
             finally:
-                ml.close()
+                for be in backends:
+                    be.close()
         finally:
             # a still-open jax.profiler window must be stopped even when
             # the run raises (leaking one poisons later profiled runs)
@@ -1032,6 +1331,27 @@ class ContinuousCascadeEngine:
         stats["ml_queue_depth_peak"] = int(max(ml_depths, default=0))
         stats["ml_queue_depth_mean"] = (float(np.mean(ml_depths))
                                         if ml_depths else 0.0)
+        # ladder accounting: reach[i] = fraction of traffic that paid
+        # tier i (tier 0 always 1.0); compute_cost generalizes
+        # cost_small + r * cost_large — bitwise identical for 2 tiers
+        n_req = len(reqs)
+        reach = [1.0] + [edge_deferrals[e] / n_req for e in range(n_edges)]
+        stats["n_tiers"] = spec.n_tiers
+        stats["tier_names"] = [t.name for t in spec.tiers]
+        stats["tier_served"] = [sum(1 for r in reqs if r.tier == i)
+                                for i in range(spec.n_tiers)]
+        stats["edge_deferrals"] = list(edge_deferrals)
+        stats["edge_tau"] = [edge_tau(e) for e in range(n_edges)]
+        stats["edge_signal"] = [ed.signal.name for ed in spec.edges]
+        stats["tier_reach"] = reach
+        stats["compute_cost"] = ladder_compute_cost(reach, spec.costs)
+        if n_edges > 1:
+            stats["ml_backends"] = [getattr(b, "name", "?")
+                                    for b in backends]
+            stats["ml_batches_per_edge"] = [len(b.batch_log)
+                                            for b in backends]
+        if recal is not None:
+            stats["recalibration"] = recal.summary()
         if paged:
             stats.update(block_size=self.block_size,
                          n_blocks=pool.n_blocks,

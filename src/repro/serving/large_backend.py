@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import queue
 import threading
 import time
@@ -103,6 +104,9 @@ class LargeResult:
     pad_to: int                  # rows actually dispatched (>= n_real)
     reason: str                  # FLUSH_FULL | FLUSH_MAX_WAIT | FLUSH_DRAIN
     prompt_len: int
+    confidence: float = math.nan  # eq.-8 mean confidence of this row
+    # (nan when the backend predates the field — cascade ladders gate
+    # intermediate tiers on it, the last tier ignores it)
 
 
 @dataclasses.dataclass
@@ -208,17 +212,22 @@ class BatchPolicy:
 
 
 def _generate_batch(generate: Callable, group: List[_Pending], pad_to: int,
-                    max_new: int) -> np.ndarray:
+                    max_new: int) -> Tuple[np.ndarray, np.ndarray]:
     """Run one rid-sorted, uniform-length group through M_L, padded to
     `pad_to` rows by duplicating the first row (the compiled shape is
-    then reused across partial flushes). Returns [len(group), max_new]."""
+    then reused across partial flushes). Returns
+    ([len(group), max_new] tokens, [len(group)] mean confidences)."""
     prompts = np.stack([p.prompt for p in group])
     b = len(group)
     if pad_to > b:
         prompts = np.concatenate(
             [prompts, np.repeat(prompts[:1], pad_to - b, axis=0)])
-    tokens, _ = generate(prompts, int(prompts.shape[1]), max_new)
-    return tokens[:b]
+    tokens, conf = generate(prompts, int(prompts.shape[1]), max_new)
+    # runners may report no confidence (conf=None) — nan rows then, the
+    # LargeResult default, so only ladder-gated tiers require the signal
+    conf = (np.full(b, math.nan) if conf is None
+            else np.asarray(conf, np.float64))
+    return tokens[:b], conf[:b]
 
 
 class LargeBackend(Protocol):
@@ -274,8 +283,8 @@ class SyncLocalBackend:
     def _run_ready(self, drain: bool = False) -> None:
         for group, pad_to, reason in self._policy.take(
                 time.perf_counter(), drain=drain):
-            tokens = _generate_batch(self._generate, group, pad_to,
-                                     self.max_new)
+            tokens, conf = _generate_batch(self._generate, group, pad_to,
+                                           self.max_new)
             bid = self._n_batches
             self._n_batches += 1
             self.batch_log.append({
@@ -287,7 +296,8 @@ class SyncLocalBackend:
                 self._results.append(LargeResult(
                     rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
                     n_real=len(group), pad_to=pad_to, reason=reason,
-                    prompt_len=int(p.prompt.shape[0])))
+                    prompt_len=int(p.prompt.shape[0]),
+                    confidence=float(conf[i])))
             self._n_open -= len(group)
 
     def poll(self, timeout: Optional[float] = None) -> List[LargeResult]:
@@ -397,8 +407,8 @@ class _WorkerBackend:
             drain = self._drain_flag.is_set() and self._inq.empty()
             for group, pad_to, reason in self._policy.take(
                     time.perf_counter(), drain=drain):
-                tokens = _generate_batch(self._generate, group, pad_to,
-                                         self.max_new)
+                tokens, conf = _generate_batch(self._generate, group, pad_to,
+                                               self.max_new)
                 self._sleep_latency()
                 bid = self._n_batches
                 self._n_batches += 1
@@ -411,7 +421,8 @@ class _WorkerBackend:
                     self._outq.put(self._encode_result(LargeResult(
                         rid=p.rid, tokens=tokens[i].copy(), batch_id=bid,
                         n_real=len(group), pad_to=pad_to, reason=reason,
-                        prompt_len=int(p.prompt.shape[0]))))
+                        prompt_len=int(p.prompt.shape[0]),
+                        confidence=float(conf[i]))))
 
     # -- main-thread API ----------------------------------------------------
     def submit(self, requests: List[Request]) -> int:
@@ -501,11 +512,16 @@ class RemoteStubBackend(_WorkerBackend):
                         time.perf_counter())
 
     def _encode_result(self, res: LargeResult) -> bytes:
-        return json.dumps({
+        msg = {
             "rid": res.rid, "tokens": res.tokens.tolist(),
             "batch_id": res.batch_id, "n_real": res.n_real,
             "pad_to": res.pad_to, "reason": res.reason,
-            "prompt_len": res.prompt_len}).encode()
+            "prompt_len": res.prompt_len}
+        # optional field, present only when finite: JSON has no nan, and
+        # pre-ladder payloads stay byte-identical
+        if math.isfinite(res.confidence):
+            msg["confidence"] = res.confidence
+        return json.dumps(msg).encode()
 
     def _decode_result(self, payload: bytes) -> LargeResult:
         msg = json.loads(payload.decode())
@@ -514,7 +530,8 @@ class RemoteStubBackend(_WorkerBackend):
             tokens=np.asarray(msg["tokens"], np.int32),
             batch_id=int(msg["batch_id"]), n_real=int(msg["n_real"]),
             pad_to=int(msg["pad_to"]), reason=msg["reason"],
-            prompt_len=int(msg["prompt_len"]))
+            prompt_len=int(msg["prompt_len"]),
+            confidence=float(msg.get("confidence", math.nan)))
 
     def _sleep_latency(self) -> None:
         if self.latency > 0:

@@ -38,6 +38,7 @@ replica-death paths deterministically.
 """
 from __future__ import annotations
 
+import math
 import queue
 import socket
 import threading
@@ -202,8 +203,8 @@ class MLServer:
             drain = self._drain_flag.is_set() and self._inq.empty()
             for group, pad_to, reason in self._policy.take(
                     time.perf_counter(), drain=drain):
-                tokens = _generate_batch(self._generate, group, pad_to,
-                                         self.max_new)
+                tokens, conf = _generate_batch(self._generate, group, pad_to,
+                                               self.max_new)
                 if self.latency > 0:
                     time.sleep(self.latency)
                 bid = self._n_batches
@@ -215,11 +216,16 @@ class MLServer:
                 self._metrics.record_batch(len(group), pad_to, reason)
                 for i, p in enumerate(group):
                     epoch, rid = divmod(p.rid, _RID_SPAN)
-                    self._outq.put(("result", (epoch, {
+                    res = {
                         "rid": rid, "tokens": tokens[i].tolist(),
                         "batch_id": bid, "n_real": len(group),
                         "pad_to": pad_to, "reason": reason,
-                        "prompt_len": int(p.prompt.shape[0])})))
+                        "prompt_len": int(p.prompt.shape[0])}
+                    # optional field: present only when finite (same
+                    # rule as wire.encode_result — JSON has no nan)
+                    if math.isfinite(float(conf[i])):
+                        res["confidence"] = float(conf[i])
+                    self._outq.put(("result", (epoch, res)))
                 self._results_ready.set()
 
     # -- session / delivery bookkeeping (handler side, under _lock) ---------

@@ -27,6 +27,7 @@ wire-format test can pin exact frame bytes, not just parsed content.
 from __future__ import annotations
 
 import json
+import math
 import socket
 import struct
 from typing import Any, Dict, List, Optional, Tuple
@@ -163,10 +164,17 @@ def decode_request(d: Any) -> Tuple[int, np.ndarray]:
 
 
 def encode_result(res: LargeResult) -> Dict[str, Any]:
-    return {"rid": int(res.rid), "tokens": np.asarray(res.tokens).tolist(),
-            "batch_id": int(res.batch_id), "n_real": int(res.n_real),
-            "pad_to": int(res.pad_to), "reason": str(res.reason),
-            "prompt_len": int(res.prompt_len)}
+    out = {"rid": int(res.rid), "tokens": np.asarray(res.tokens).tolist(),
+           "batch_id": int(res.batch_id), "n_real": int(res.n_real),
+           "pad_to": int(res.pad_to), "reason": str(res.reason),
+           "prompt_len": int(res.prompt_len)}
+    # optional: only present when finite (JSON has no nan; omitting it
+    # keeps pre-ladder frames byte-identical under SCHEMA_VERSION 1 —
+    # the golden fixture pins that)
+    conf = getattr(res, "confidence", math.nan)
+    if isinstance(conf, float) and math.isfinite(conf):
+        out["confidence"] = conf
+    return out
 
 
 def decode_result(d: Any) -> LargeResult:
@@ -178,7 +186,8 @@ def decode_result(d: Any) -> LargeResult:
             tokens=np.asarray(d["tokens"], np.int32),
             batch_id=int(d["batch_id"]), n_real=int(d["n_real"]),
             pad_to=int(d["pad_to"]), reason=str(d["reason"]),
-            prompt_len=int(d["prompt_len"]))
+            prompt_len=int(d["prompt_len"]),
+            confidence=float(d.get("confidence", math.nan)))
     except (KeyError, TypeError, ValueError) as e:
         raise WireError(f"malformed result payload "
                         f"(rid={d.get('rid')!r}): {e}",

@@ -49,6 +49,9 @@ class Request:
     arrival_time: float = 0.0          # seconds from run start
     state: str = PENDING
     slot: Optional[int] = None
+    tier: int = 0                      # cascade tier that owns (and, at
+                                       # DONE, served) this request
+
     # outputs
     tokens: Optional[np.ndarray] = None        # final (post-cascade) tokens
     small_tokens: Optional[np.ndarray] = None  # M_S tokens actually decoded

@@ -1,0 +1,351 @@
+"""N-tier cascade ladder tests: 2-tier spec-vs-legacy bit-exact parity
+(slot and paged backends), 3-tier greedy parity against a sequential
+reference, per-edge calibration through the unified surface, online tau
+recalibration (drift convergence + stationary hysteresis), deferral
+signals, and serve.py contradictory-flag rejection."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.calibration import (calibrate_edges, expected_compute_cost,
+                                    ladder_compute_cost)
+from repro.core.deferral import (SemanticAgreementSignal, SignalObservation,
+                                 pairwise_agreement)
+from repro.core.recalibration import (EdgeRecalibrator, RecalibConfig,
+                                      TauController)
+from repro.data.synthetic import make_lm_stream
+from repro.models import transformer as tfm
+from repro.serving import (CascadeSpec, CascadeTier, ContinuousCascadeEngine,
+                           DeferralEdge, EngineConfig, ModelRunner,
+                           PagedConfig, make_requests)
+
+PROMPT_LEN, MAX_NEW, N_REQ = 8, 4, 12
+
+
+@pytest.fixture(scope="module")
+def ladder():
+    """Three tiny runners (small < mid < large) + calibration and live
+    prompt batches."""
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    m_cfg = s_cfg.replace(name="mid", n_layers=3)
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    mid = ModelRunner(m_cfg, tfm.init_params(m_cfg,
+                                             jax.random.fold_in(key, 1)))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 2)))
+    cal = make_lm_stream(jax.random.fold_in(key, 3), N_REQ, PROMPT_LEN,
+                         s_cfg.vocab_size)
+    live = make_lm_stream(jax.random.fold_in(key, 4), N_REQ, PROMPT_LEN,
+                          s_cfg.vocab_size)
+    return small, mid, large, cal, live
+
+
+def _legacy_engine(small, large, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return ContinuousCascadeEngine(small, large, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole invariant: a 2-tier CascadeSpec reproduces the legacy engine
+# bit-exactly, on both KV backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["slot", "paged"])
+def test_two_tier_spec_matches_legacy(ladder, backend):
+    small, _, large, cal, live = ladder
+    paged_kw = dict(block_size=4, prefill_chunk=4) if backend == "paged" \
+        else {}
+    legacy = _legacy_engine(small, large, n_slots=4, backend=backend,
+                            **paged_kw)
+    tau = legacy.calibrate(cal, PROMPT_LEN, MAX_NEW, deferral_ratio=0.4)
+    ref = legacy.run(make_requests(live, MAX_NEW), MAX_NEW)
+
+    spec = CascadeSpec.two_tier(small, large, tau=tau)
+    cfg = EngineConfig(n_slots=4, backend=backend,
+                       paged=PagedConfig(**paged_kw))
+    new = ContinuousCascadeEngine(spec, cfg).run(
+        make_requests(live, MAX_NEW), MAX_NEW)
+
+    assert np.array_equal(ref.tokens, new.tokens)
+    assert np.array_equal(ref.confidence, new.confidence)
+    assert np.array_equal(ref.deferred, new.deferred)
+    assert np.array_equal(ref.early_exited, new.early_exited)
+    assert ref.stats["compute_cost"] == new.stats["compute_cost"]
+    # 2-tier ladder cost is bitwise the legacy scalar formula
+    assert new.stats["compute_cost"] == expected_compute_cost(
+        new.deferral_ratio, 0.2, 1.0)
+
+
+def test_deprecation_shim_equivalence(ladder):
+    small, _, large, _, _ = ladder
+    with pytest.warns(DeprecationWarning, match="CascadeSpec"):
+        eng = ContinuousCascadeEngine(small, large, n_slots=3, tau=-1.5,
+                                      margin=0.1, min_tokens=3,
+                                      backend="paged", block_size=4,
+                                      large_backend="thread", large_batch=2,
+                                      cost_small=0.3)
+    assert eng.spec.n_tiers == 2
+    assert eng.tau == -1.5 and eng.margin == 0.1 and eng.min_tokens == 3
+    assert eng.config.backend == "paged"
+    assert eng.config.paged.block_size == 4
+    assert eng.config.ml.kind == "thread" and eng.config.ml.large_batch == 2
+    assert eng.spec.tiers[0].cost == 0.3
+    with pytest.raises(TypeError, match="unknown"):
+        _legacy_engine(small, large, not_a_kwarg=1)
+    # spec-first construction must stay warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ContinuousCascadeEngine(CascadeSpec.two_tier(small, large),
+                                EngineConfig(n_slots=2))
+
+
+# ---------------------------------------------------------------------------
+# 3-tier ladder vs sequential reference
+# ---------------------------------------------------------------------------
+
+def _sequential_reference(runners, taus, prompts, max_new):
+    """Greedy N-tier cascade, one tier at a time over the whole batch:
+    tier i generates for everything that reached it; rows with
+    conf < taus[i] move on."""
+    n = prompts.shape[0]
+    final = np.zeros((n, max_new), np.int64)
+    served = np.zeros(n, np.int64)
+    reach = np.arange(n)
+    for i, r in enumerate(runners):
+        tokens, conf = r.generate(prompts[reach], PROMPT_LEN, max_new)
+        tokens, conf = np.asarray(tokens), np.asarray(conf)
+        final[reach] = tokens
+        served[reach] = i
+        if i == len(runners) - 1:
+            break
+        reach = reach[conf < taus[i]]
+        if reach.size == 0:
+            break
+    return final, served
+
+
+def test_three_tier_matches_sequential_reference(ladder):
+    small, mid, large, cal, live = ladder
+    spec = CascadeSpec(
+        tiers=[CascadeTier("small", runner=small, cost=0.2),
+               CascadeTier("mid", runner=mid, cost=0.5),
+               CascadeTier("large", runner=large, cost=1.0)],
+        edges=[DeferralEdge(), DeferralEdge()])
+    taus = calibrate_edges(spec, cal, max_new=MAX_NEW,
+                           deferral_ratio=[0.5, 0.5])
+    assert taus == spec.taus and len(taus) == 2
+
+    eng = ContinuousCascadeEngine(spec, EngineConfig(n_slots=4,
+                                                     early_exit=False))
+    res = eng.run(make_requests(live, MAX_NEW), MAX_NEW)
+    ref_tokens, ref_served = _sequential_reference(
+        [small, mid, large], taus, live, MAX_NEW)
+
+    assert np.array_equal(res.tokens, ref_tokens)
+    assert [r.tier for r in res.requests] == ref_served.tolist()
+    assert res.stats["n_tiers"] == 3
+    assert res.stats["tier_served"] == np.bincount(
+        ref_served, minlength=3).tolist()
+    # reach fractions: tier 0 sees everything, deeper tiers the deferrals
+    reach = res.stats["tier_reach"]
+    assert reach[0] == 1.0 and reach[1] >= reach[2]
+    assert res.stats["compute_cost"] == pytest.approx(
+        ladder_compute_cost(reach, [0.2, 0.5, 1.0]))
+
+
+def test_calibrate_edges_sentinels_and_unification(ladder):
+    small, _, large, cal, _ = ladder
+    spec = CascadeSpec.two_tier(small, large)
+    # unified surface: engine.calibrate is a thin wrapper over
+    # calibrate_edges — same validation batch, same tau
+    tau = calibrate_edges(spec, cal, max_new=MAX_NEW,
+                          deferral_ratio=0.4)[0]
+    eng = ContinuousCascadeEngine(CascadeSpec.two_tier(small, large),
+                                  EngineConfig(n_slots=4))
+    assert eng.calibrate(cal, PROMPT_LEN, MAX_NEW,
+                         deferral_ratio=0.4) == tau
+    # ratio sentinels survive the ladder path
+    lo = calibrate_edges(CascadeSpec.two_tier(small, large), cal,
+                         max_new=MAX_NEW, deferral_ratio=0.0)[0]
+    hi = calibrate_edges(CascadeSpec.two_tier(small, large), cal,
+                         max_new=MAX_NEW, deferral_ratio=1.0)[0]
+    assert lo < tau < hi
+    with pytest.raises(ValueError, match="deferral ratios"):
+        calibrate_edges(CascadeSpec.two_tier(small, large), cal,
+                        max_new=MAX_NEW, deferral_ratio=[0.2, 0.3])
+
+
+# ---------------------------------------------------------------------------
+# Online tau recalibration
+# ---------------------------------------------------------------------------
+
+def _poisson_conf_stream(rng, n, mean, spread=1.0):
+    """Confidence stream with Poisson-thinned burstiness: inter-arrival
+    gaps don't matter to the controller, only the conf marginal, but
+    drawing per-arrival keeps the test honest about streaming order."""
+    return rng.normal(mean, spread, size=n)
+
+
+def test_recalibration_converges_under_drift():
+    rng = np.random.default_rng(0)
+    base = _poisson_conf_stream(rng, 4000, mean=-2.0)
+    tau0 = float(np.quantile(base, 0.2))          # offline calibration
+    # the gate guarantees convergence only to within its deadband, so a
+    # +-0.05 acceptance needs deadband < 0.05
+    ctl = TauController(tau0, 0.2, RecalibConfig(ewma_alpha=0.02,
+                                                 deadband=0.04,
+                                                 rearm=0.01))
+    drifted_mean = -3.5                           # traffic got harder
+    stream = _poisson_conf_stream(rng, 8000, mean=drifted_mean)
+    for c in stream:
+        ctl.observe(float(c))
+    # realized deferral ratio of the final tau on fresh drifted traffic
+    fresh = _poisson_conf_stream(rng, 4000, mean=drifted_mean)
+    realized = float((fresh < ctl.tau).mean())
+    assert ctl.n_updates > 0
+    assert abs(realized - 0.2) < 0.05
+    # trace records movement for the bench artifact
+    assert ctl.trace[0] == (0, tau0) and len(ctl.trace) > 1
+
+
+def test_recalibration_stationary_hysteresis():
+    rng = np.random.default_rng(1)
+    # tau0 at the exact 0.2 quantile of the (stationary) N(-2, 1)
+    # stream: the EWMA drift detector sees only sampling noise, which
+    # the deadband must absorb — tau genuinely stays put
+    tau0 = -2.0 + 1.0 * -0.8416212335729143
+    ctl = TauController(tau0, 0.2)
+    for c in _poisson_conf_stream(rng, 6000, mean=-2.0):
+        ctl.observe(float(c))
+    assert ctl.n_updates == 0 and ctl.tau == tau0
+
+
+def test_recalibrator_validation():
+    with pytest.raises(ValueError, match="rearm"):
+        RecalibConfig(deadband=0.05, rearm=0.1)
+    with pytest.raises(ValueError, match="target_ratio"):
+        TauController(0.0, 1.5)
+    with pytest.raises(ValueError, match="target ratios"):
+        EdgeRecalibrator([0.0, 0.0], [0.2])
+    rec = EdgeRecalibrator([-1.0, -2.0], 0.2)
+    assert rec.tau(0) == -1.0 and rec.tau(1) == -2.0
+    s = rec.summary()
+    assert s["tau_final"] == [-1.0, -2.0] and s["tau_updates"] == [0, 0]
+
+
+def test_engine_recalibration_stats(ladder):
+    small, _, large, cal, live = ladder
+    spec = CascadeSpec.two_tier(small, large)
+    calibrate_edges(spec, cal, max_new=MAX_NEW, deferral_ratio=0.4)
+    cfg = EngineConfig(n_slots=4,
+                       recalibration=RecalibConfig(warmup=4,
+                                                   deadband=0.1),
+                       recalib_target=0.4)
+    res = ContinuousCascadeEngine(spec, cfg).run(
+        make_requests(live, MAX_NEW), MAX_NEW)
+    rc = res.stats["recalibration"]
+    assert set(rc) == {"tau_final", "tau_updates", "ewma_ratio",
+                       "tau_trace"}
+    assert len(rc["tau_final"]) == 1
+    # the stats' live tau is the controller's, not the spec's frozen one
+    assert res.stats["edge_tau"] == rc["tau_final"]
+
+
+# ---------------------------------------------------------------------------
+# Deferral signals
+# ---------------------------------------------------------------------------
+
+def test_pairwise_agreement_values():
+    same = np.tile(np.arange(5), (3, 1))
+    assert pairwise_agreement(same) == 1.0
+    disjoint = np.stack([np.zeros(4), np.ones(4)])
+    assert pairwise_agreement(disjoint) == 0.0
+    # [3, 2] matrix with one disagreeing row: pairs (0,1)=1.0,
+    # (0,2)=(1,2)=0.5 -> mean 2/3
+    m = np.array([[1, 2], [1, 2], [1, 9]])
+    assert pairwise_agreement(m) == pytest.approx(2.0 / 3.0)
+
+
+def test_runner_sample_deterministic(ladder):
+    small, _, _, cal, _ = ladder
+    prompts = cal[:3]
+    a = small.sample(prompts, PROMPT_LEN, MAX_NEW, seed=7, temperature=0.8)
+    b = small.sample(prompts, PROMPT_LEN, MAX_NEW, seed=7, temperature=0.8)
+    c = small.sample(prompts, PROMPT_LEN, MAX_NEW, seed=8, temperature=0.8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    with pytest.raises(ValueError, match="temperature"):
+        small.sample(prompts, PROMPT_LEN, MAX_NEW, temperature=0.0)
+
+
+def test_semantic_agreement_signal(ladder):
+    small, _, _, cal, _ = ladder
+    sig = SemanticAgreementSignal(k=3, temperature=0.8)
+    assert not sig.supports_running
+    obs = SignalObservation(prompt=np.asarray(cal[0]), mean_confidence=-1.0,
+                            runner=small, max_new=MAX_NEW)
+    score = sig.finalize(obs)
+    assert 0.0 <= score <= 1.0
+    assert sig.finalize(obs) == score      # deterministic per prompt
+    with pytest.raises(ValueError, match="remote"):
+        sig.finalize(SignalObservation(prompt=np.asarray(cal[0]),
+                                       mean_confidence=-1.0, runner=None))
+    with pytest.raises(ValueError, match="k >= 2"):
+        SemanticAgreementSignal(k=1)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least 2 tiers"):
+        CascadeSpec(tiers=[CascadeTier("only", runner=object())], edges=[])
+    with pytest.raises(ValueError, match="deferral edges"):
+        CascadeSpec(tiers=[CascadeTier("a", runner=object()),
+                           CascadeTier("b", runner=object())], edges=[])
+    with pytest.raises(ValueError, match="tier 0"):
+        CascadeSpec(tiers=[CascadeTier("a"),
+                           CascadeTier("b", runner=object())],
+                    edges=[DeferralEdge()])
+    with pytest.raises(ValueError, match="runner or a backend"):
+        CascadeSpec(tiers=[CascadeTier("a", runner=object()),
+                           CascadeTier("b")],
+                    edges=[DeferralEdge()])
+    # sampling signal on an edge whose gating tier is remote-only
+    with pytest.raises(ValueError, match="samples"):
+        CascadeSpec(
+            tiers=[CascadeTier("a", runner=object()),
+                   CascadeTier("b", backend="sync"),
+                   CascadeTier("c", runner=object())],
+            edges=[DeferralEdge(),
+                   DeferralEdge(signal="semantic_agreement")])
+
+
+# ---------------------------------------------------------------------------
+# serve.py rejects contradictory flag combinations at argparse time
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("argv", [
+    ["--large-backend", "sync", "--ml-address", "h:1"],
+    ["--large-backend", "thread", "--ml-spawn", "2"],
+    ["--large-backend", "stub", "--ml-retries", "5"],
+    ["--large-backend", "sync", "--stub-latency", "0.1"],
+    ["--backend", "slot", "--block-size", "4"],
+    ["--backend", "slot", "--paged-kernel", "on"],
+    ["--backend", "slot", "--no-prefix-sharing"],
+    ["--recalib-step", "0.2"],
+    ["--signal-k", "8"],
+    ["--engine", "static", "--tiers", "3"],
+    ["--engine", "static", "--recalibrate"],
+    ["--tiers", "1"],
+    ["--tiers", "3", "--large-backend", "socket", "--ml-address", "h:1"],
+    ["--large-backend", "socket"],
+])
+def test_serve_rejects_contradictory_flags(argv):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as exc:
+        serve.main(argv)
+    assert exc.value.code == 2                  # argparse error exit
