@@ -49,6 +49,21 @@ Scenarios (same models, same calibrated tau, same prompts):
                         the headline 1-vs-N-replica number: one replica
                         serializes batches through the service latency,
                         two overlap it
+  * paged+oversub     — (--backend paged) block pressure handling on a
+                        shared-prefix workload where reservation
+                        admission is pessimistic (every request reserves
+                        its full footprint; physically most of it is
+                        shared): a TIGHT budget (worst-case concurrent
+                        reservation demand >= 1.5x the blocks, sized one
+                        block short of the true peak), oversubscribed
+                        with the preempt policy + host swap tier;
+                        reports the max sustained arrival rate
+                        (completion rate at saturation) against a
+                        same-budget reservation-only reference run —
+                        which serializes admission — plus preemption /
+                        OOM-deferral / swap counts
+  * paged+shed        — same tight budget with the shed policy: fast
+                        failure instead of preemption (rejected count)
 
 Ragged mode (--ragged-min/--ragged-max) draws mixed prompt lengths from
 a uniform distribution and sizes the paged budget for the MEAN request,
@@ -105,8 +120,9 @@ from repro.data.synthetic import make_lm_stream, make_ragged_lm_stream
 from repro.launch.serve import build_ladder, build_runners
 from repro.serving import (CascadeEngine, CascadeSpec, CascadeTier,
                            ContinuousCascadeEngine, DeferralEdge,
-                           EngineConfig, MLBackendConfig, RecalibConfig,
-                           make_requests, poisson_arrivals)
+                           EngineConfig, MLBackendConfig, PagedConfig,
+                           PressureConfig, RecalibConfig, make_requests,
+                           poisson_arrivals)
 from repro.serving.obs import (ObsConfig, add_obs_args,
                                obs_config_from_args)
 
@@ -192,6 +208,21 @@ def run_continuous(engine: ContinuousCascadeEngine, requests: List,
         row["shared_tokens"] = s["shared_tokens"]
         row["cow_clones"] = s["cow_clones"]
         row["paged_kernel"] = s["paged_kernel"]
+    if "oversubscribe" in s:
+        # pressure rows: completion rate at saturation (all arrivals at
+        # t=0) IS the max sustained arrival rate — offered load beyond
+        # it only grows the queue
+        row["max_sustained_rate_req_s"] = (s["n_requests"]
+                                           / s["makespan_s"])
+        row["oversubscribe"] = s["oversubscribe"]
+        row["pressure_policy"] = s["pressure_policy"]
+        row["n_preemptions"] = s["n_preemptions"]
+        row["oom_deferrals"] = s["oom_deferrals"]
+        row["n_completed"] = s["n_completed"]
+        row["n_rejected"] = s["n_rejected"]
+        row["n_expired"] = s["n_expired"]
+        row["swap_outs"] = s["swap_outs"]
+        row["swap_ins"] = s["swap_ins"]
     return row
 
 
@@ -437,6 +468,65 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
                 e, make_requests(sp_prompts, max_new, sp_arrivals),
                 max_new, l)))
 
+    # -- pressure rows: oversubscription vs reservation-only ----------------
+    # The workload where reservation admission is genuinely pessimistic:
+    # prompts sharing a long system prefix. reserve() charges every
+    # request its full worst-case footprint, but once the first request
+    # registers the prefix the physical cost of each later request is
+    # only its private suffix + generation tail — so a budget sized
+    # near the ACTUAL peak (shared + slots x private, one block short)
+    # leaves reservation-only admission serialized at ~1 slot while the
+    # oversubscribed runs fill all slots and absorb the occasional
+    # tail-block collision by policy. Worst-case reservation demand of a
+    # full slot set is >= 1.5x the budget (the regression gate checks
+    # this). All three runs share the same tight budget and the same
+    # head-start arrival trace. tau = -inf: these rows measure memory
+    # pressure handling, not the cascade.
+    resv_rate = None
+    if backend == "paged":
+        pr_prefix, pr_suffix = 12 * block_size, 2 * block_size
+        pr_prompts = make_shared_prefix_stream(
+            jax.random.fold_in(key, 5), n_requests, pr_prefix, pr_suffix,
+            s_cfg.vocab_size)
+        pr_arrivals = np.concatenate([[0.0], np.full(n_requests - 1, 0.3)])
+        per_req = math.ceil((pr_prefix + pr_suffix + max_new - 1)
+                            / block_size)
+        shared_blocks = pr_prefix // block_size
+        tight = shared_blocks + slots * (per_req - shared_blocks) - 1
+        demand = slots * per_req
+        # smallest virtual budget (1 decimal) that admits a full slot set
+        over = math.ceil(10 * demand / tight) / 10
+
+        def pressured(pressure_cfg, label):
+            eng = ContinuousCascadeEngine(
+                CascadeSpec.two_tier(small, large, tau=-1e9),
+                EngineConfig(
+                    n_slots=slots, early_exit=False, steps_per_sync=4,
+                    backend="paged",
+                    ml=MLBackendConfig(large_batch=slots),
+                    paged=PagedConfig(
+                        block_size=block_size, n_blocks=tight,
+                        prefill_chunk=prefill_chunk or None,
+                        paged_kernel=paged_kernel,
+                        batch_prefill=batch_prefill,
+                        pressure=pressure_cfg)))
+            return best_of(lambda: run_continuous(
+                eng, make_requests(pr_prompts, max_new, pr_arrivals),
+                max_new, label))
+
+        assert demand >= 1.5 * tight, (demand, tight)
+        resv_row = pressured(None, "paged+resv")   # reference, not a row
+        resv_rate = n_requests / resv_row["makespan_s"]
+        for cfg, label in (
+                (PressureConfig(oversubscribe=over, policy="preempt",
+                                max_preemptions=4, swap_blocks=tight),
+                 "paged+oversub"),
+                (PressureConfig(oversubscribe=over, policy="shed"),
+                 "paged+shed")):
+            row = pressured(cfg, label)
+            row["resv_rate_req_s"] = resv_rate
+            rows.append(row)
+
     print("engine,tok_s,p50_ms,p95_ms,p99_ms,deferral,wait_ms,"
           "wait_p95_ms,ms_steps,saved_steps,cache_mb")
     for r in rows:
@@ -498,6 +588,21 @@ def run(n_requests: int = 32, prompt_len: int = 16, max_new: int = 24,
               f"{paged_row['prefill_dispatches']} dispatches "
               f"({'batched' if batch_prefill else 'serial'}; "
               f"kernel={'pallas' if paged_row.get('paged_kernel') else 'xla'})")
+    if resv_rate is not None:
+        ov = next(r for r in rows if r["engine"] == "paged+oversub")
+        sd = next(r for r in rows if r["engine"] == "paged+shed")
+        print(f"# pressure ({ov['n_blocks']}-block tight budget, "
+              f"reservation demand {demand} blocks = "
+              f"{demand / ov['n_blocks']:.1f}x, "
+              f"{ov['oversubscribe']:g}x oversubscribed): max sustained "
+              f"rate {resv_rate:.2f} req/s reservation-only -> "
+              f"{ov['max_sustained_rate_req_s']:.2f} req/s preempt "
+              f"({ov['n_preemptions']} preemptions, "
+              f"{ov['oom_deferrals']} OOM deferrals, "
+              f"{ov['n_completed']}/{n_requests} completed, "
+              f"{ov['swap_outs']}/{ov['swap_ins']} swap out/in) vs "
+              f"{sd['max_sustained_rate_req_s']:.2f} req/s shed "
+              f"({sd['n_rejected']} rejected)")
     if backend == "paged" and shared_prefix_len > 0:
         sh = next(r for r in rows if r["engine"] == "paged+share")
         ns = next(r for r in rows if r["engine"] == "paged+noshare")
@@ -561,6 +666,17 @@ def bench_record(payload: Dict) -> Dict:
                 "edge_deferrals": r["edge_deferrals"],
                 "edge_tau": [round(t, 4) for t in r["edge_tau"]]}
                if "tier_served" in r else {}),
+            # pressure rows: capacity + eviction accounting the gate
+            # watches alongside tokens/s
+            **({"max_sustained_rate_req_s":
+                    round(r["max_sustained_rate_req_s"], 3),
+                "resv_rate_req_s": round(r["resv_rate_req_s"], 3),
+                "pressure_policy": r["pressure_policy"],
+                "n_preemptions": r["n_preemptions"],
+                "oom_deferrals": r["oom_deferrals"],
+                "n_completed": r["n_completed"],
+                "n_rejected": r["n_rejected"]}
+               if "max_sustained_rate_req_s" in r else {}),
             # tau drift is a first-class bench artifact: initial tau,
             # where the online controller left it, and the trace
             **({"tau_drift": {

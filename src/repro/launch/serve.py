@@ -54,6 +54,18 @@ tracker with hysteresis) that nudges every edge's tau toward
 --backend slot) are rejected at argparse time instead of silently
 ignored.
 
+Pressure & overload (docs/serving.md): --oversubscribe F admits paged
+requests against a virtual budget of round(blocks * F); when the
+physical pool runs dry mid-flight, --pressure-policy picks the victim
+handling — preempt (save state, requeue age-first, bit-exact resume;
+bounded by --max-preemptions before escalating to defer), defer
+(straight up the cascade ladder, deferred_reason="oom"), or shed
+(REJECTED). --swap-blocks N spills cold registered prefix blocks to a
+host-RAM LRU tier instead of dropping them. Admission overload control:
+--max-queue bounds the ready queue (overflow shed newest-first as
+REJECTED) and --deadline-ms sheds requests still queued past their
+deadline as EXPIRED.
+
 Observability (continuous engine; see docs/observability.md):
 --trace-out dumps a Perfetto-loadable Chrome trace of the run,
 --metrics-out / --metrics-port export the Prometheus metrics registry
@@ -75,8 +87,8 @@ from repro.models import transformer as tfm
 from repro.serving import (CascadeEngine, CascadeSpec, CascadeTier,
                            ContinuousCascadeEngine, DeferralEdge,
                            EngineConfig, MLBackendConfig, ModelRunner,
-                           PagedConfig, RecalibConfig, make_requests,
-                           poisson_arrivals)
+                           PagedConfig, PressureConfig, RecalibConfig,
+                           make_requests, poisson_arrivals)
 from repro.serving.obs import (Observability, add_obs_args,
                                obs_config_from_args)
 
@@ -245,6 +257,33 @@ def main(argv=None):
                          "sharing (every request prefills and maps its "
                          "whole prompt even when the blocks are already "
                          "resident)")
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="paged backend: admit against a virtual budget "
+                         "of round(blocks * factor); > 1.0 allows block "
+                         "pressure, handled by --pressure-policy "
+                         "(1.0 = classic reservation invariant)")
+    ap.add_argument("--pressure-policy",
+                    choices=("preempt", "defer", "shed"),
+                    default="preempt",
+                    help="paged backend under --oversubscribe > 1: evict "
+                         "the youngest running request by preempt-and-"
+                         "requeue (bit-exact resume), defer-on-OOM up "
+                         "the cascade ladder, or shed (REJECTED)")
+    ap.add_argument("--max-preemptions", type=int, default=2,
+                    help="preempt policy: preemption bound per request "
+                         "before escalating to defer-on-OOM")
+    ap.add_argument("--swap-blocks", type=int, default=0,
+                    help="paged backend: host-RAM swap-tier capacity in "
+                         "blocks for cold registered prefix blocks "
+                         "(0 = evicted cold blocks are dropped)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission overload control: bound on the ready "
+                         "arrival queue; overflow is shed newest-first "
+                         "as REJECTED (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request queueing deadline in ms from "
+                         "arrival; requests still queued past it are "
+                         "shed as EXPIRED (0 = no deadlines)")
     ap.add_argument("--ragged-min", type=int, default=0,
                     help=">0: ragged prompt lengths uniform in "
                          "[ragged-min, ragged-max] (continuous engine)")
@@ -284,11 +323,34 @@ def main(argv=None):
     if args.backend != "paged":
         for dest in ("block_size", "blocks", "prefill_chunk",
                      "paged_kernel", "serial_prefill",
-                     "no_prefix_sharing"):
+                     "no_prefix_sharing", "oversubscribe",
+                     "pressure_policy", "max_preemptions", "swap_blocks"):
             if given(dest):
                 ap.error(f"--{dest.replace('_', '-')} needs --backend "
                          f"paged (got --backend {args.backend}, which "
                          f"would silently ignore it)")
+    if args.oversubscribe < 1.0:
+        ap.error(f"--oversubscribe must be >= 1.0 (1.0 = reservation-"
+                 f"only), got {args.oversubscribe}")
+    if args.oversubscribe == 1.0:
+        # pressure can only fire past the reservation invariant: tuning
+        # its handling without enabling it is a silent no-op
+        for dest in ("pressure_policy", "max_preemptions"):
+            if given(dest):
+                ap.error(f"--{dest.replace('_', '-')} needs "
+                         f"--oversubscribe > 1.0 (reservation-only "
+                         f"admission never hits block pressure)")
+    if args.pressure_policy != "preempt" and given("max_preemptions"):
+        ap.error(f"--max-preemptions needs --pressure-policy preempt "
+                 f"(got --pressure-policy {args.pressure_policy}, which "
+                 f"never preempts)")
+    if args.oversubscribe > 1.0 and not given("blocks"):
+        ap.error("--oversubscribe > 1.0 needs an explicit --blocks "
+                 "budget (the worst-case default never runs out)")
+    if args.max_queue < 0:
+        ap.error(f"--max-queue must be >= 0, got {args.max_queue}")
+    if args.deadline_ms < 0:
+        ap.error(f"--deadline-ms must be >= 0, got {args.deadline_ms}")
     if not args.recalibrate:
         for dest in ("recalib_target", "recalib_step",
                      "recalib_deadband", "recalib_warmup"):
@@ -299,7 +361,9 @@ def main(argv=None):
         ap.error(f"--tiers must be >= 2, got {args.tiers}")
     if args.engine == "static":
         for dest, flag in (("tiers", "--tiers"), ("signal", "--signal"),
-                           ("recalibrate", "--recalibrate")):
+                           ("recalibrate", "--recalibrate"),
+                           ("max_queue", "--max-queue"),
+                           ("deadline_ms", "--deadline-ms")):
             if given(dest):
                 ap.error(f"{flag} needs --engine continuous")
     if args.signal != "semantic_agreement":
@@ -406,9 +470,17 @@ def main(argv=None):
                for _ in range(n - 1)])
     recalib_target = (args.recalib_target if args.recalib_target >= 0
                       else args.deferral_ratio)
+    pressure = (PressureConfig(oversubscribe=args.oversubscribe,
+                               policy=args.pressure_policy,
+                               max_preemptions=args.max_preemptions,
+                               swap_blocks=args.swap_blocks)
+                if args.oversubscribe > 1.0 or args.swap_blocks > 0
+                else None)
     config = EngineConfig(
         n_slots=args.slots, early_exit=not args.no_early_exit,
         backend=args.backend,
+        max_queue=args.max_queue or None,
+        deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
         paged=PagedConfig(
             block_size=args.block_size,
             n_blocks=args.blocks or None,
@@ -416,7 +488,8 @@ def main(argv=None):
             paged_kernel={"auto": None, "on": True,
                           "off": False}[args.paged_kernel],
             batch_prefill=not args.serial_prefill,
-            prefix_sharing=not args.no_prefix_sharing),
+            prefix_sharing=not args.no_prefix_sharing,
+            pressure=pressure),
         ml=MLBackendConfig(
             kind=args.large_backend if not callable(large_backend)
             else "sync",
@@ -463,6 +536,13 @@ def main(argv=None):
         print(f"tier_served={res.stats['tier_served']} over tiers "
               f"{res.stats['tier_names']}, per-edge deferrals "
               f"{res.stats['edge_deferrals']}")
+    if pressure is not None or args.max_queue or args.deadline_ms:
+        st = res.stats
+        print(f"pressure/overload: preemptions={st['n_preemptions']}, "
+              f"oom_deferrals={st['oom_deferrals']}, "
+              f"rejected={st['n_rejected']}, expired={st['n_expired']}, "
+              f"swap_outs={st.get('swap_outs', 0)}, "
+              f"swap_ins={st.get('swap_ins', 0)}")
     if args.recalibrate:
         rc = res.stats["recalibration"]
         drift = [f"{a:.4f}->{b:.4f}"

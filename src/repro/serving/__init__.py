@@ -44,14 +44,24 @@ under greedy decoding (both backends).
 
 Modules
 -------
-request     Request lifecycle (PENDING/RUNNING/DEFERRED/DONE) + arrival
-            queue with delayed visibility + Poisson arrival helper.
-            Requests carry their own prompt lengths (ragged admission).
+request     Request lifecycle (PENDING/RUNNING/DEFERRED/DONE, plus
+            PREEMPTED and the REJECTED/EXPIRED overload terminals) +
+            arrival queue with delayed visibility, optional bound
+            (`max_queue`), deadlines, and age-priority requeue +
+            Poisson arrival helper. Requests carry their own prompt
+            lengths (ragged admission).
 cache_pool  Dense slot-based KV/state cache pool, preallocated once and
             reused across request generations; batch axes discovered
             from the abstract cache.
 paged_pool  Block-paged KV cache: fixed-size blocks + per-slot page
-            tables, on-demand mapping, reservation-based admission.
+            tables, on-demand mapping, reservation-based admission;
+            optional oversubscription (virtual admission budget,
+            `BlockPressure` on physical exhaustion) and a host-RAM swap
+            tier for cold registered prefix blocks.
+pressure    Memory-pressure policies for oversubscribed paged runs:
+            preempt-and-requeue (bit-exact resume), defer-on-OOM up the
+            cascade ladder, shed; deterministic youngest-victim
+            selection.
 scheduler   FIFO admission into free slots (optionally capacity-gated),
             retirement, invariants.
 large_backend  Pluggable M_L regeneration backends (submit/poll/drain):
@@ -79,7 +89,7 @@ from repro.core.cascade_spec import (CascadeSpec, CascadeTier,
 from repro.core.recalibration import RecalibConfig
 from repro.serving.cache_pool import SlotCachePool
 from repro.serving.config import (EngineConfig, MLBackendConfig,
-                                  PagedConfig)
+                                  PagedConfig, PressureConfig)
 from repro.serving.engine import (CascadeEngine, ContinuousCascadeEngine,
                                   ContinuousServeResult, ModelRunner,
                                   ServeResult)
@@ -89,7 +99,10 @@ from repro.serving.large_backend import (BatchPolicy, LargeBackend,
                                          make_large_backend)
 from repro.serving.obs import (MetricsRegistry, Observability, ObsConfig,
                                Tracer, validate_chrome_trace)
-from repro.serving.paged_pool import PagedCachePool
+from repro.serving.paged_pool import BlockPressure, PagedCachePool
+from repro.serving.pressure import (DeferOnOomPolicy, PreemptPolicy,
+                                    PressurePolicy, ShedPolicy,
+                                    make_pressure_policy)
 from repro.serving.remote import (MLServer, ReplicaPool, SocketBackend)
 from repro.serving.request import (ArrivalQueue, Request, make_requests,
                                    poisson_arrivals)
@@ -97,14 +110,16 @@ from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
 
 __all__ = [
-    "ArrivalQueue", "BatchPolicy", "CascadeEngine", "CascadeSpec",
-    "CascadeTier", "ContinuousCascadeEngine", "ContinuousServeResult",
-    "DeferralEdge", "EngineConfig", "LargeBackend",
-    "LargeResult", "MLBackendConfig", "MLServer", "MetricsRegistry",
-    "ModelRunner", "ObsConfig", "Observability", "PagedCachePool",
-    "PagedConfig", "RecalibConfig", "RemoteStubBackend",
-    "ReplicaPool", "Request", "ServeResult", "ServingTelemetry",
-    "SlotCachePool", "SlotScheduler", "SocketBackend", "SyncLocalBackend",
-    "ThreadedBackend", "Tracer", "make_large_backend", "make_requests",
+    "ArrivalQueue", "BatchPolicy", "BlockPressure", "CascadeEngine",
+    "CascadeSpec", "CascadeTier", "ContinuousCascadeEngine",
+    "ContinuousServeResult", "DeferOnOomPolicy", "DeferralEdge",
+    "EngineConfig", "LargeBackend", "LargeResult", "MLBackendConfig",
+    "MLServer", "MetricsRegistry", "ModelRunner", "ObsConfig",
+    "Observability", "PagedCachePool", "PagedConfig", "PreemptPolicy",
+    "PressureConfig", "PressurePolicy", "RecalibConfig",
+    "RemoteStubBackend", "ReplicaPool", "Request", "ServeResult",
+    "ServingTelemetry", "ShedPolicy", "SlotCachePool", "SlotScheduler",
+    "SocketBackend", "SyncLocalBackend", "ThreadedBackend", "Tracer",
+    "make_large_backend", "make_pressure_policy", "make_requests",
     "poisson_arrivals", "validate_chrome_trace",
 ]

@@ -14,7 +14,7 @@ than hard-coded per family.
 """
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -96,9 +96,23 @@ class SlotCachePool:
         self.generations[slot] += 1
         return slot
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int,
+                expected_generation: Optional[int] = None) -> None:
+        """Return `slot` to the free list. A double release (slot already
+        free) raises with the slot id; passing the generation captured at
+        `alloc` additionally catches a STALE release — the slot was
+        re-allocated to a new tenant in between — before it can corrupt
+        the free list."""
         if slot not in self._in_use:
-            raise RuntimeError(f"releasing slot {slot} that is not in use")
+            raise RuntimeError(
+                f"double release of slot {slot}: slot is not in use "
+                "(already released or never allocated)")
+        if (expected_generation is not None
+                and expected_generation != self.generations[slot]):
+            raise RuntimeError(
+                f"stale release of slot {slot}: caller holds generation "
+                f"{expected_generation} but the slot was re-allocated "
+                f"(now generation {self.generations[slot]})")
         self._in_use.remove(slot)
         self._free.append(slot)
         self._free.sort(reverse=True)

@@ -26,6 +26,48 @@ from repro.core.recalibration import RecalibConfig
 
 
 @dataclasses.dataclass
+class PressureConfig:
+    """Memory-oversubscription policy for the paged backend.
+
+    oversubscribe   — admit up to `round(n_blocks * oversubscribe)`
+                      virtual blocks of reservations (1.0: classic
+                      reservation invariant, physical exhaustion is
+                      impossible).
+    policy          — what to do when a mapped block is needed but the
+                      physical pool is empty:
+                      "preempt" — evict the youngest running slot, save
+                        its decode state, requeue it age-first (bit-exact
+                        resume via the prefix registry);
+                      "defer"   — defer the youngest victim up the
+                        cascade ladder (`deferred_reason="oom"`);
+                      "shed"    — drop the youngest victim (REJECTED).
+    max_preemptions — preemption bound per request; a victim past the
+                      bound escalates to defer-on-OOM so it cannot
+                      thrash forever ("preempt" policy only).
+    swap_blocks     — host-RAM swap-tier capacity in blocks: cold cached
+                      prefix blocks spill here on eviction instead of
+                      being dropped, and swap back in on a registry hit
+                      (0: no swap tier).
+    """
+    oversubscribe: float = 1.0
+    policy: str = "preempt"
+    max_preemptions: int = 2
+    swap_blocks: int = 0
+
+    def __post_init__(self):
+        if self.oversubscribe < 1.0:
+            raise ValueError(f"oversubscribe must be >= 1.0, "
+                             f"got {self.oversubscribe}")
+        if self.policy not in ("preempt", "defer", "shed"):
+            raise ValueError(f"policy must be 'preempt', 'defer' or "
+                             f"'shed', got {self.policy!r}")
+        if self.max_preemptions < 0:
+            raise ValueError("max_preemptions must be >= 0")
+        if self.swap_blocks < 0:
+            raise ValueError("swap_blocks must be >= 0")
+
+
+@dataclasses.dataclass
 class PagedConfig:
     """Block-paged KV-cache backend knobs (`backend="paged"`).
 
@@ -41,6 +83,9 @@ class PagedConfig:
                      requests into one dispatch.
     prefix_sharing — copy-on-write prompt-prefix sharing through the
                      pool's prefix registry.
+    pressure       — `PressureConfig` enabling oversubscription /
+                     swap-tier behavior (None: reservation-only, the
+                     parity-pinned default).
     """
     block_size: int = 16
     n_blocks: Optional[int] = None
@@ -48,6 +93,7 @@ class PagedConfig:
     paged_kernel: Optional[bool] = None
     batch_prefill: bool = True
     prefix_sharing: bool = True
+    pressure: Optional[PressureConfig] = None
 
 
 @dataclasses.dataclass
@@ -85,6 +131,13 @@ class EngineConfig:
                      fixed — the parity-pinned default).
     recalib_target — target deferral ratio(s) the online controller
                      holds; a float for every edge or a per-edge list.
+    max_queue      — admission overload control: bound on the READY
+                     arrival queue; overflow is shed newest-first as
+                     REJECTED (None: unbounded, the default).
+    deadline_s     — per-request queueing deadline in seconds from
+                     arrival; requests still queued past it are shed as
+                     EXPIRED (None: no deadlines). Per-request deadlines
+                     set on the `Request` itself take precedence.
     """
     n_slots: int = 8
     early_exit: bool = True
@@ -94,11 +147,19 @@ class EngineConfig:
     ml: MLBackendConfig = dataclasses.field(default_factory=MLBackendConfig)
     recalibration: Optional[RecalibConfig] = None
     recalib_target: Any = 0.2
+    max_queue: Optional[int] = None
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if self.backend not in ("slot", "paged"):
             raise ValueError(f"backend must be 'slot' or 'paged', "
                              f"got {self.backend!r}")
+        if self.paged.pressure is not None and self.backend != "paged":
+            raise ValueError("paged.pressure requires backend='paged'")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
         self.steps_per_sync = max(1, self.steps_per_sync)
 
 

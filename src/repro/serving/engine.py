@@ -72,9 +72,13 @@ from repro.serving.config import (LEGACY_KWARG_MAP, MIGRATION_HINT,
 from repro.serving.large_backend import make_large_backend
 from repro.serving.obs import Observability
 from repro.serving.obs.trace import emit_request_spans
-from repro.serving.paged_pool import PagedCachePool, next_pow2
-from repro.serving.request import (DEFERRED_PENDING, DONE, ArrivalQueue,
-                                   Request, make_requests)
+from repro.serving.paged_pool import (BlockPressure, PagedCachePool,
+                                      next_pow2)
+from repro.serving.pressure import (DEFER, PREEMPT, SHED,
+                                    make_pressure_policy)
+from repro.serving.request import (DEFERRED_PENDING, DONE, EXPIRED,
+                                   REJECTED, ArrivalQueue, Request,
+                                   make_requests)
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import ServingTelemetry
 from repro.sharding import ParallelContext
@@ -669,8 +673,25 @@ class ContinuousCascadeEngine:
                 length=self.steps_per_sync)
             return cache, state
 
+        def resume_fn(state, slot, last_tok, pos, n_gen, conf_sum, budget,
+                      row):
+            """Restore a preempted request's decode state verbatim (the
+            snapshot taken at preemption) — the counterpart of
+            `finish_fn` for re-admission. Continuing from restored state
+            over restored/recomputed KV is bit-exact with never having
+            been preempted."""
+            return {
+                "last_tok": state["last_tok"].at[slot].set(last_tok),
+                "pos": state["pos"].at[slot].set(pos),
+                "n_gen": state["n_gen"].at[slot].set(n_gen),
+                "budget": state["budget"].at[slot].set(budget),
+                "conf_sum": state["conf_sum"].at[slot].set(conf_sum),
+                "active": state["active"].at[slot].set(n_gen < budget),
+                "tokens": state["tokens"].at[slot].set(row),
+            }
+
         return (jax.jit(prefill_chunk_fn), jax.jit(finish_fn),
-                jax.jit(step_fn))
+                jax.jit(step_fn), jax.jit(resume_fn))
 
     # -- host-side control loop -------------------------------------------
     def run(self, requests: List[Request], max_new: Optional[int] = None,
@@ -725,6 +746,10 @@ class ContinuousCascadeEngine:
         max_len = max(r.prompt_len + r.max_new for r in requests)
         paged = self.backend == "paged"
 
+        pressure = self.config.paged.pressure if paged else None
+        policy = (make_pressure_policy(pressure.policy,
+                                       pressure.max_preemptions)
+                  if pressure is not None else None)
         if paged:
             bs = self.block_size
             n_blocks = (self.n_blocks if self.n_blocks is not None
@@ -732,10 +757,18 @@ class ContinuousCascadeEngine:
             biggest = max(math.ceil((r.prompt_len + r.max_new - 1) / bs)
                           for r in requests)
             if n_blocks < biggest:
+                # each request must fit the PHYSICAL budget on its own:
+                # oversubscription stretches the admission (virtual)
+                # budget, never physical capacity
                 raise ValueError(
                     f"n_blocks={n_blocks} cannot hold the largest request "
                     f"({biggest} blocks of {bs}); raise n_blocks")
-            pool = PagedCachePool(cfg, self.n_slots, n_blocks, bs, max_len)
+            pool = PagedCachePool(
+                cfg, self.n_slots, n_blocks, bs, max_len,
+                oversubscribe=(pressure.oversubscribe
+                               if pressure is not None else 1.0),
+                swap_blocks=(pressure.swap_blocks
+                             if pressure is not None else 0))
             use_kernel = kernel_ops.paged_kernel_enabled(self.paged_kernel)
             fkey = ("paged", max_new, n_blocks, bs, pool.max_blocks,
                     use_kernel)
@@ -743,7 +776,7 @@ class ContinuousCascadeEngine:
             if fns is None:
                 fns = self._build_paged_fns(max_new, use_kernel)
                 self._fns[fkey] = fns
-            prefill_fn, finish_fn, step_fn = fns
+            prefill_fn, finish_fn, step_fn, resume_fn = fns
         else:
             pool = SlotCachePool(cfg, self.n_slots, max_len)
             fkey = ("slot", max_new, max_len)
@@ -754,7 +787,15 @@ class ContinuousCascadeEngine:
             admit_fn, step_fn = fns
 
         sched = SlotScheduler(pool)
-        queue = ArrivalQueue(requests)
+        queue = ArrivalQueue(requests, max_queue=self.config.max_queue)
+        # engine-level deadline default; an explicit per-request deadline
+        # (e.g. from make_requests(deadline_s=...)) wins
+        if self.config.deadline_s is not None:
+            for r in requests:
+                if r.deadline is None:
+                    r.deadline = r.arrival_time + self.config.deadline_s
+        overload_on = (queue.max_queue is not None
+                       or any(r.deadline is not None for r in requests))
         # a passed-in Observability is caller-owned; anything else
         # (None or an ObsConfig) the engine builds and finishes itself
         own_obs = not isinstance(obs, Observability)
@@ -806,6 +847,9 @@ class ContinuousCascadeEngine:
             n_prefill_tokens = 0
             n_shared_tokens = 0
             peak_active = 0
+            # memory-pressure accounting (oversubscribed paged runs)
+            n_oom_defers = 0
+            n_relief = 0
             # one execution backend per edge: backends[e] runs tier e+1.
             # A tier's own `backend` wins; otherwise config.ml.kind.
             # Only edge 0's backend registers metrics (the registry's
@@ -839,6 +883,9 @@ class ContinuousCascadeEngine:
             reg.gauge("serving_requests_retired",
                       "requests retired from slots (lifetime)",
                       fn=lambda: sched.n_retired)
+            reg.gauge("serving_preemptions",
+                      "requests preempted under block pressure (lifetime)",
+                      fn=lambda: sched.n_preempted)
             if paged:
                 pool.register_metrics(reg)
             # host mirrors of the device confidence accumulators, used
@@ -1040,15 +1087,30 @@ class ContinuousCascadeEngine:
                 chunks of every other mid-prefill request — in a single
                 dispatch, so long prompts interleave with resident decode
                 steps and simultaneous arrivals don't serialize on host
-                overhead. Before the dispatch, every row's chunk span is
-                made write-private (`ensure_writable` CoW-clones a shared
-                tail block) and the rows' writable blocks are asserted
-                pairwise disjoint — the paged write paths' contract."""
+                overhead. Under oversubscription the chunk's CoW clones
+                can hit BlockPressure; pressure strikes before the
+                dispatch mutates anything, so after a policy eviction
+                (which may remove mid-prefill entries) the whole chunk
+                simply restarts against the survivors."""
+                while prefilling:
+                    try:
+                        return _prefill_chunk_once()
+                    except BlockPressure:
+                        if policy is None or not relieve_pressure():
+                            raise
+
+            def _prefill_chunk_once():
+                """One prefill dispatch. Before it, every row's chunk
+                span is made write-private (`ensure_writable` CoW-clones
+                a shared tail block) and the rows' writable blocks are
+                asserted pairwise disjoint — the paged write paths'
+                contract. A resumed request's chunks stop at
+                `prefill_end` (its decode-written tail is restored from
+                the preemption snapshot instead of recomputed)."""
                 nonlocal state, n_prefill_chunks, n_prefill_dispatches, \
                     n_prefill_tokens
                 head_req, _, off0 = prefilling[0]
-                C = self.prefill_chunk or (head_req.prompt_len
-                                           - head_req.shared_prefix_tokens)
+                C = self.prefill_chunk or (prefill_end(head_req) - off0)
                 if self.batch_prefill:
                     # pack every request at the head's offset whose chunk
                     # width matches (differing widths only arise with
@@ -1056,8 +1118,7 @@ class ContinuousCascadeEngine:
                     # unshared prompt tail)
                     group = [e for e in prefilling if e[2] == off0
                              and (self.prefill_chunk
-                                  or e[0].prompt_len
-                                  - e[0].shared_prefix_tokens) == C]
+                                  or prefill_end(e[0]) - e[2]) == C]
                 else:
                     group = [prefilling[0]]
                 k = len(group)
@@ -1075,7 +1136,7 @@ class ContinuousCascadeEngine:
                     piece = req.prompt[off:off + C]
                     chunks[i, :piece.shape[0]] = piece  # right-pad final
                     tbl[i] = pool.tables[slot]          # chunk; padded
-                    last_idx[i] = min(req.prompt_len - 1 - off, C - 1)
+                    last_idx[i] = min(prefill_end(req) - 1 - off, C - 1)
                     n_prefill_tokens += int(piece.shape[0])  # K/V -> trash
                 logits, pool.cache = prefill_fn(
                     self.small.params, jnp.asarray(chunks), jnp.asarray(tbl),
@@ -1089,10 +1150,19 @@ class ContinuousCascadeEngine:
                 seeded: List[Tuple[int, Request]] = []
                 for i, entry in enumerate(group):
                     req, slot, off = entry
-                    if off + C >= req.prompt_len:  # final chunk: seed decode
+                    if off + C >= prefill_end(req):   # final chunk
+                        prefilling.remove(entry)
+                        if req.resume is not None:
+                            # prompt blocks re-established: restore the
+                            # decode tail + device rows; the row's seed
+                            # logits are ignored (the snapshot carries
+                            # the in-flight token instead)
+                            apply_resume(slot, req)
+                            if self.prefix_sharing:
+                                pool.register_prefix(slot, req.prompt)
+                            continue
                         state = finish_fn(state, slot, logits[i:i + 1],
                                           req.max_new, req.prompt_len)
-                        prefilling.remove(entry)
                         if self.prefix_sharing:
                             # publish the fully-written prompt blocks so
                             # later same-prefix arrivals can map them
@@ -1117,16 +1187,192 @@ class ContinuousCascadeEngine:
                 return [s for s in sched.active_slots
                         if s not in mid_prefill]
 
+            # -- pressure machinery (oversubscribed paged pool only) ----
+            def prefill_end(req: Request) -> int:
+                """Last token (exclusive) the engine must PREFILL for this
+                admission: the full prompt for a fresh request; for a
+                resumed one only up to the first decode-written block —
+                everything past that boundary is restored verbatim from
+                the preemption snapshot, never recomputed (decode-written
+                K/V is not bit-identical under a prefill recompute)."""
+                return (req.prompt_len if req.resume is None
+                        else req.resume["mb0"] * bs)
+
+            def apply_resume(slot: int, req: Request) -> None:
+                """Re-establish a preempted request in its new slot:
+                restore the decode-written blocks from the host snapshot
+                over the freshly mapped tail, then restore the device
+                decode state verbatim. From here the request decodes as
+                if it had never been evicted."""
+                nonlocal state
+                rs = req.resume
+                pool.restore_block_span(slot, rs["mb0"] * bs,
+                                        rs["ctx_len"], rs["blocks"])
+                state = resume_fn(state, slot, rs["last_tok"], rs["pos"],
+                                  rs["n_gen"], rs["conf_sum"],
+                                  req.max_new, rs["tokens"])
+                conf_prev[slot] = rs["conf_sum"]
+                ngen_prev[slot] = rs["n_gen"]
+                req.resume = None
+                tel.event("resume", rid=req.rid, slot=slot,
+                          n_gen=rs["n_gen"],
+                          restored_blocks=len(rs["blocks"]))
+
+            def preempt_slot(slot: int) -> None:
+                """Evict the request in `slot` under block pressure with
+                bit-exact resume state: snapshot its device rows and the
+                blocks holding decode-written K/V, publish its prompt
+                blocks in the prefix registry (resurrection makes the
+                prompt recompute mostly a registry walk), release the
+                slot, and requeue the request at its ORIGINAL arrival
+                position (age-priority — repeated preemption cannot
+                starve it behind fresh traffic)."""
+                nonlocal state
+                req = sched.running[slot]
+                entry = next((e for e in prefilling if e[1] == slot), None)
+                if entry is not None:
+                    # mid-prefill victim: no decode state exists yet —
+                    # keep the chunks already written via the registry
+                    # and requeue as a plain re-admission
+                    prefilling.remove(entry)
+                    pool.register_prefix(slot, req.prompt[:entry[2]])
+                    req.resume = None
+                else:
+                    lt, ps, ng, cs, toks = jax.device_get(
+                        (state["last_tok"], state["pos"], state["n_gen"],
+                         state["conf_sum"], state["tokens"]))
+                    g = int(ng[slot])
+                    ctx_len = req.prompt_len + g - 1
+                    assert int(ps[slot]) == ctx_len, (slot, ps[slot],
+                                                      ctx_len)
+                    mb0 = req.prompt_len // bs
+                    req.resume = {
+                        "last_tok": int(lt[slot]), "pos": int(ps[slot]),
+                        "n_gen": g, "conf_sum": float(cs[slot]),
+                        "tokens": np.asarray(toks[slot]).copy(),
+                        "ctx_len": ctx_len, "mb0": mb0,
+                        "blocks": pool.save_block_span(slot, mb0 * bs,
+                                                       ctx_len),
+                    }
+                    pool.register_prefix(slot, req.prompt)
+                    state = dict(state)
+                    state["active"] = state["active"].at[slot].set(False)
+                sched.preempt(slot, tel.now)
+                queue.requeue(req)
+                tel.event("preempt", rid=req.rid, slot=slot,
+                          n_preempted=req.n_preempted,
+                          mid_prefill=entry is not None)
+
+            def defer_oom(slot: int) -> None:
+                """Defer the victim straight up the cascade ladder — the
+                cascade's escape hatch under memory pressure: its blocks
+                free immediately and the request still completes, on the
+                next tier (`deferred_reason="oom"`)."""
+                nonlocal state, n_oom_defers
+                req = sched.running[slot]
+                entry = next((e for e in prefilling if e[1] == slot), None)
+                if entry is not None:
+                    prefilling.remove(entry)
+                    req.n_small_steps = 0
+                    req.small_tokens = np.zeros(0, np.int32)
+                else:
+                    ng, cs, toks = jax.device_get(
+                        (state["n_gen"], state["conf_sum"],
+                         state["tokens"]))
+                    n = int(ng[slot])
+                    req.n_small_steps = n
+                    req.small_tokens = np.asarray(toks[slot, :n]).copy()
+                    req.confidence = float(cs[slot]) / max(n, 1)
+                    state = dict(state)
+                    state["active"] = state["active"].at[slot].set(False)
+                req.deferred_reason = "oom"
+                n_oom_defers += 1
+                sched.retire(slot, tel.now, deferred=True, early=True)
+                tel.event("defer_oom", rid=req.rid, slot=slot,
+                          n_gen=req.n_small_steps)
+                tel.m_requests.labels(outcome="defer_oom").inc()
+                submit_large(req, 0)
+
+            def finalize_shed(req: Request, terminal: str,
+                              reason: str) -> None:
+                """Terminal bookkeeping for a shed request: empty token
+                vector, REJECTED/EXPIRED state, audit-log event, and the
+                outcome counter — exactly once per request."""
+                req.state = terminal
+                req.tokens = np.zeros(0, np.int32)
+                req.t_done = tel.now
+                tel.event("shed", rid=req.rid, reason=reason,
+                          outcome=terminal)
+                tel.m_requests.labels(outcome=terminal).inc()
+
+            def shed_slot(slot: int) -> None:
+                """Drop an in-flight victim (shed pressure policy)."""
+                nonlocal state
+                req = sched.running[slot]
+                entry = next((e for e in prefilling if e[1] == slot), None)
+                if entry is not None:
+                    prefilling.remove(entry)
+                else:
+                    state = dict(state)
+                    state["active"] = state["active"].at[slot].set(False)
+                sched.drop(slot, tel.now)
+                finalize_shed(req, REJECTED, "shed_pressure")
+
+            def relieve_pressure(exclude=()) -> bool:
+                """Free physical blocks by evicting one deterministic
+                victim (youngest admission) per the pressure policy.
+                False when no victim exists — the caller must surface
+                the pressure as a hard error."""
+                nonlocal n_relief
+                sel = policy.select(sched.running, exclude)
+                if sel is None:
+                    return False
+                slot, action = sel
+                if action == PREEMPT:
+                    preempt_slot(slot)
+                elif action == DEFER:
+                    defer_oom(slot)
+                else:
+                    assert action == SHED, action
+                    shed_slot(slot)
+                n_relief += 1
+                return True
+
+            def with_relief(fn, needy=()):
+                """Run `fn`, relieving `BlockPressure` by policy eviction
+                and retrying (the pool's mapping calls are idempotent,
+                so a retry resumes exactly where pressure struck).
+                `needy` slots are exempt from victim selection — evicting
+                the slot being mapped would livelock its own retry."""
+                while True:
+                    try:
+                        return fn()
+                    except BlockPressure:
+                        if policy is None or not relieve_pressure(needy):
+                            raise
+
             try:
                 while len(queue) or sched.n_active:
                     t_it = tel.now
                     if profiler.enabled:
                         profiler.tick()
+                    if overload_on:
+                        # admission overload control BEFORE admitting:
+                        # release arrivals into the ready queue, shed
+                        # deadline-expired entries, then bound the queue
+                        # (newest-first overflow). Admitted requests are
+                        # never expired — deadlines gate queueing only.
+                        queue.release(t_it)
+                        for r in queue.expire(t_it):
+                            finalize_shed(r, EXPIRED, "deadline")
+                        for r in queue.shed_overflow():
+                            finalize_shed(r, REJECTED, "queue_full")
                     if paged:
                         # admit one at a time: each admission reserves its
                         # blocks immediately, so the capacity check for the
                         # next FIFO head sees the updated reservation
                         admitted = []
+                        relief0 = n_relief
                         while True:
                             got = sched.admit_ready(
                                 queue, tel.now, limit=1,
@@ -1137,21 +1383,45 @@ class ContinuousCascadeEngine:
                             slot, req = got[0]
                             pool.reserve(slot,
                                          req.prompt_len + req.max_new - 1)
+                            rs = req.resume
+                            end = prefill_end(req)
                             start = 0
-                            if self.prefix_sharing:
+                            if self.prefix_sharing or rs is not None:
                                 # map already-resident (or cached) prefix
                                 # blocks by refcount; prefill resumes at
                                 # the first unshared token. A fully-shared
                                 # prompt still recomputes its final token
                                 # for the seed logits — run_prefill_chunk
                                 # CoW-clones that block before the write.
+                                # Preempted requests walk the same chain:
+                                # their prompt blocks were registered at
+                                # eviction, so the resume recompute is
+                                # mostly (often entirely) a registry walk.
                                 shared = pool.share_prefix(slot, req.prompt)
-                                start = min(shared, req.prompt_len - 1)
-                                req.shared_prefix_tokens = start
-                                n_shared_tokens += start
-                            pool.ensure_mapped(slot, req.prompt_len)
-                            prefilling.append([req, slot, start])
+                                if rs is None:
+                                    start = min(shared, req.prompt_len - 1)
+                                    req.shared_prefix_tokens = start
+                                    n_shared_tokens += start
+                                else:
+                                    start = min(shared, end)
+                            L = req.prompt_len if rs is None \
+                                else rs["ctx_len"]
+                            with_relief(lambda s=slot, n=L:
+                                        pool.ensure_mapped(s, n),
+                                        needy=(slot,))
+                            if rs is not None and start >= end:
+                                # every surviving prompt block came
+                                # straight from the registry: restore the
+                                # decode-written tail and resume now
+                                apply_resume(slot, req)
+                            else:
+                                prefilling.append([req, slot, start])
                             admitted.append((slot, req))
+                            if n_relief != relief0:
+                                # pressure fired while admitting: stop —
+                                # admitting more this iteration would
+                                # thrash straight back into it
+                                break
                         if admitted:
                             tel.event("admit",
                                       rids=[r.rid for _, r in admitted],
@@ -1178,28 +1448,48 @@ class ContinuousCascadeEngine:
                         tel.phase_add("prefill", t_prefill - t_sched)
                     peak_active = max(peak_active, sched.n_active)
                     decoding = decoding_slots()
+                    if paged and decoding:
+                        # mapping the decode cover can hit BlockPressure
+                        # under oversubscription: relieve (the victim may
+                        # itself be a decoding slot) and redo the prep
+                        # against the survivors — ensure_mapped /
+                        # ensure_writable are idempotent, so the retry
+                        # resumes exactly where pressure struck
+                        while True:
+                            decoding = decoding_slots()
+                            if not decoding:
+                                break
+                            try:
+                                pos_host = np.asarray(state["pos"])
+                                need = 1
+                                covers = {}
+                                for slot in decoding:
+                                    req = sched.running[slot]
+                                    total = (req.prompt_len
+                                             + req.max_new - 1)
+                                    cover = min(int(pos_host[slot])
+                                                + self.steps_per_sync,
+                                                total)
+                                    pool.ensure_mapped(slot, cover)
+                                    # decode writes [pos, cover):
+                                    # CoW-clone any still-shared block in
+                                    # that span so the in-flight write
+                                    # scatter stays row-disjoint
+                                    pool.ensure_writable(
+                                        slot, int(pos_host[slot]), cover)
+                                    covers[slot] = cover
+                                    need = max(need, cover)
+                                pool.check_write_disjoint(
+                                    (s, int(pos_host[s]), c)
+                                    for s, c in covers.items())
+                                break
+                            except BlockPressure:
+                                if (policy is None
+                                        or not relieve_pressure()):
+                                    raise
                     t_dec = tel.now
                     if decoding:
                         if paged:
-                            pos_host = np.asarray(state["pos"])
-                            need = 1
-                            covers = {}
-                            for slot in decoding:
-                                req = sched.running[slot]
-                                total = req.prompt_len + req.max_new - 1
-                                cover = min(int(pos_host[slot])
-                                            + self.steps_per_sync, total)
-                                pool.ensure_mapped(slot, cover)
-                                # decode writes [pos, cover): CoW-clone any
-                                # still-shared block in that span so the
-                                # in-flight write scatter stays row-disjoint
-                                pool.ensure_writable(
-                                    slot, int(pos_host[slot]), cover)
-                                covers[slot] = cover
-                                need = max(need, cover)
-                            pool.check_write_disjoint(
-                                (s, int(pos_host[s]), c)
-                                for s, c in covers.items())
                             # active-prefix tightening: hand the jitted step
                             # only the bucketed block prefix the masks can
                             # reach — the gather/kernel walk shrinks with it
@@ -1364,6 +1654,15 @@ class ContinuousCascadeEngine:
                          shared_blocks=pool.shared_blocks_total,
                          cow_clones=pool.cow_clones,
                          paged_kernel=use_kernel)
+            if pressure is not None:
+                stats.update(oversubscribe=pressure.oversubscribe,
+                             virtual_blocks=pool.virtual_blocks,
+                             pressure_policy=pressure.policy,
+                             pressure_reliefs=n_relief,
+                             swap_blocks=pressure.swap_blocks,
+                             swap_outs=pool.swap_outs,
+                             swap_ins=pool.swap_ins,
+                             swapped_blocks=pool.n_swapped_blocks)
         if own_obs:
             # engine-owned runtime: export the trace / metrics dump and
             # stop the endpoint now that the stats are final

@@ -253,6 +253,19 @@ class MetricsRegistry:
     def get(self, name: str) -> Optional[MetricFamily]:
         return self._families.get(name)
 
+    def snapshot(self) -> Dict[str, Dict[Tuple[str, ...], float]]:
+        """Point-in-time ``{family: {label-values: value}}`` view of
+        every counter and gauge (histograms are excluded — ``render()``
+        reports their buckets). The no-parse alternative to scraping
+        the text exposition: tests and overload-control assertions read
+        e.g. ``snapshot()["serving_requests_total"][("rejected",)]``
+        instead of regexing the Prometheus dump."""
+        with self._lock:
+            fams = list(self._families.values())
+        return {fam.name: {key: fam._children[key].value
+                           for key in sorted(fam._children)}
+                for fam in fams if fam.type != "histogram"}
+
     def render(self) -> str:
         """Prometheus text exposition format (v0.0.4), families sorted by
         name, trailing newline included (scrapers require it)."""

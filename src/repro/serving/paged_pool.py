@@ -18,11 +18,33 @@ caps batch size. `PagedCachePool` instead stores the cache in fixed-size
 Admission control is **reservation-based**: admitting a request reserves
 its worst-case block count ``ceil((prompt_len + max_new - 1)/block_size)``
 (its prompt plus every decode token it may produce), but blocks are only
-*mapped* lazily. The invariant ``free >= reserved`` guarantees that
-`ensure_mapped` never fails mid-flight, so no preemption path is needed;
-the per-request worst case is still far below the slot pool's global
-worst case on ragged traffic, which is the memory win this pool exists
-for.
+*mapped* lazily. With ``oversubscribe == 1`` (the default) the invariant
+``free >= reserved`` guarantees that `ensure_mapped` never fails
+mid-flight, so no preemption path is needed; the per-request worst case
+is still far below the slot pool's global worst case on ragged traffic,
+which is the memory win this pool exists for.
+
+**Oversubscription.** ``oversubscribe > 1`` relaxes the reservation
+invariant to a *virtual* budget: admission may reserve up to
+``round(n_blocks * oversubscribe)`` blocks against only ``n_blocks``
+physical ones, betting that most requests retire before their worst
+case. The generalized invariant is ``physical_in_use + reserved_total
+<= virtual_blocks`` (algebraically identical to ``free >= reserved``
+at factor 1). The price: `ensure_mapped` / `cow_clone` can now hit
+genuine physical exhaustion mid-flight, surfaced as the typed
+:class:`BlockPressure` exception — the engine's `PressurePolicy`
+(serving/pressure.py) answers it by preempting, deferring, or shedding
+a victim. Without oversubscription exhaustion is still a hard
+RuntimeError (a bookkeeping bug, not pressure).
+
+**Host swap tier.** ``swap_blocks > 0`` gives evicted cached prefix
+blocks a second life: when `_pop_free` must evict a zero-ref registered
+block, its contents are first copied to a bounded host-RAM store (LRU
+over chain keys, capacity ``swap_blocks``). `share_prefix` consults the
+store after the device registry misses and swaps matching blocks back
+in (`_swap_in`: allocate + host->device copy + re-register), so the
+prefix cache survives pressure instead of being recomputed. Swap keys
+and device registry keys are always disjoint.
 
 **Prefix sharing (copy-on-write).** Physical blocks carry reference
 counts, so one block may appear in several slots' tables. A **prefix
@@ -65,6 +87,7 @@ from __future__ import annotations
 import hashlib
 import heapq
 import math
+from collections import OrderedDict
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -75,6 +98,18 @@ from repro.configs import ModelConfig
 from repro.models import transformer as tfm
 from repro.models.attention import gather_blocks
 from repro.serving.cache_pool import _is_abstract
+
+
+class BlockPressure(RuntimeError):
+    """Physical block exhaustion under oversubscription.
+
+    Raised by allocation paths (`ensure_mapped` -> `_take_free_block`,
+    `cow_clone`, swap-in) when the pool is oversubscribed and no
+    physical block is free — an expected, recoverable condition the
+    engine answers with its pressure policy (preempt / defer-on-OOM /
+    shed a victim, then retry). Never raised at ``oversubscribe == 1``,
+    where the reservation invariant makes allocation infallible and
+    exhaustion stays a hard RuntimeError."""
 
 
 def next_pow2(n: int) -> int:
@@ -154,11 +189,17 @@ class PagedCachePool:
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
-                 block_size: int, max_len: int, dtype=None):
+                 block_size: int, max_len: int, dtype=None,
+                 oversubscribe: float = 1.0, swap_blocks: int = 0):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if block_size < 1 or n_blocks < 1:
             raise ValueError("block_size and n_blocks must be >= 1")
+        if oversubscribe < 1.0:
+            raise ValueError(f"oversubscribe must be >= 1.0, "
+                             f"got {oversubscribe}")
+        if swap_blocks < 0:
+            raise ValueError(f"swap_blocks must be >= 0, got {swap_blocks}")
         validate_pageable(cfg, max_len)
         self.cfg = cfg
         self.n_slots = n_slots
@@ -204,6 +245,16 @@ class PagedCachePool:
         self.peak_mapped = 0           # high-water PHYSICAL blocks in use
         self.shared_blocks_total = 0   # lifetime blocks mapped via sharing
         self.cow_clones = 0            # lifetime copy-on-write clones
+        # oversubscription: virtual reservation budget (== n_blocks at
+        # factor 1, where the classic free >= reserved invariant holds)
+        self.oversubscribe = float(oversubscribe)
+        self.virtual_blocks = int(round(n_blocks * self.oversubscribe))
+        # host swap tier: chain key -> host copy of the block's cache
+        # leaves (insertion-ordered for LRU eviction), bounded capacity
+        self.swap_blocks = int(swap_blocks)
+        self._swap: "OrderedDict[bytes, Any]" = OrderedDict()
+        self.swap_outs = 0             # lifetime device -> host spills
+        self.swap_ins = 0              # lifetime host -> device restores
         self._tables_dev = jnp.asarray(self.tables)
         self._tables_prefix_cache: dict = {}
         self._tables_dirty = False
@@ -251,16 +302,34 @@ class PagedCachePool:
         self.generations[slot] += 1
         return slot
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int,
+                expected_generation: Optional[int] = None) -> None:
         """Free the slot: decrement its blocks' refcounts — only blocks
         that hit zero return to the free list (a block still shared by
         another slot lives on; a zero-ref block that is REGISTERED keeps
         its registry entry and goes to the cached free heap, reusable by
         a later same-prefix request until evicted) — drop its
         outstanding reservation, and zero its table row (so stale decode
-        writes from the retired tenant land in the trash block)."""
+        writes from the retired tenant land in the trash block).
+
+        Double release is LOUD, never silent: releasing a slot that is
+        not in use raises with the slot id (instead of pushing its
+        blocks onto the free heap twice and corrupting refcounts), and
+        `expected_generation` (the value of ``generations[slot]`` the
+        caller captured at alloc) catches the nastier stale-release case
+        where the slot was already re-allocated to a new tenant."""
         if slot not in self._in_use:
-            raise RuntimeError(f"releasing slot {slot} that is not in use")
+            raise RuntimeError(
+                f"double release of slot {slot}: slot is not in use "
+                f"(already released or never allocated) — a second "
+                f"release would corrupt the free-block heap")
+        if (expected_generation is not None
+                and expected_generation != self.generations[slot]):
+            raise RuntimeError(
+                f"stale release of slot {slot}: caller holds generation "
+                f"{expected_generation} but the slot was re-allocated "
+                f"(now generation {self.generations[slot]}) — releasing "
+                f"would free the new tenant's blocks")
         self._in_use.remove(slot)
         heapq.heappush(self._free_slots, slot)
         for m in range(int(self.n_mapped[slot])):
@@ -283,7 +352,12 @@ class PagedCachePool:
 
     def _pop_free(self) -> int:
         """Lowest-id unregistered free block, else evict (deregister) the
-        lowest-id cached one. Caller owns the block (ref set to 1)."""
+        lowest-id cached one — spilling its contents to the host swap
+        store first when one is configured. Caller owns the block (ref
+        set to 1). Exhaustion raises `BlockPressure` when oversubscribed
+        (recoverable: the engine's pressure policy frees a victim), a
+        hard RuntimeError otherwise (the reservation invariant makes it
+        a bookkeeping bug)."""
         for heap in (self._free_plain, self._free_cached):
             while heap:
                 blk = heapq.heappop(heap)
@@ -293,35 +367,52 @@ class PagedCachePool:
                 key = self._registered_key.pop(blk, None)
                 if key is not None:             # evict the cached prefix
                     del self._prefix_registry[key]
+                    if self.swap_blocks > 0:
+                        self._swap_out(blk, key)
                 self.ref[blk] = 1
                 return blk
+        if self.virtual_blocks > self.n_blocks:
+            raise BlockPressure(
+                f"paged pool out of physical blocks ({self.n_blocks} "
+                f"in use, {self._reserved_total} still reserved) under "
+                f"oversubscription x{self.oversubscribe:g}")
         raise RuntimeError("paged pool out of blocks — reservation "
                            "invariant violated")
 
     def _take_free_block(self, slot: int) -> int:
         """Allocate one fresh block for `slot`, charged against its
-        reservation — or, beyond it, against UNRESERVED free headroom.
+        reservation — or, beyond it, against UNRESERVED virtual headroom.
         The over-map case raises rather than silently draining blocks
-        that other slots' reservations are counting on."""
-        if self._owed[slot] > 0:
-            self._owed[slot] -= 1
-            self._reserved_total -= 1
-        elif len(self._free_set) - 1 < self._reserved_total:
+        that other slots' reservations are counting on. Reservation
+        accounting is only charged AFTER the pop succeeds, so a
+        `BlockPressure` raise leaves the books untouched and the caller
+        can retry the same demand after relieving pressure."""
+        charged = self._owed[slot] > 0
+        if not charged and (self.n_physical_in_use + 1
+                            + self._reserved_total > self.virtual_blocks):
             raise RuntimeError(
                 f"slot {slot} mapping beyond its reservation would leave "
                 f"free ({len(self._free_set) - 1}) < reserved "
                 f"({self._reserved_total}) — raise n_blocks or reserve "
                 f"the slack explicitly")
         blk = self._pop_free()
+        if charged:
+            self._owed[slot] -= 1
+            self._reserved_total -= 1
         self.peak_mapped = max(self.peak_mapped, self.n_physical_in_use)
         return blk
 
     # -- block reservation / mapping --------------------------------------
     def can_reserve(self, n_tokens: int) -> bool:
         """True if a request needing `n_tokens` total cache entries can be
-        admitted without ever starving an already-admitted request."""
-        return (len(self._free_set) - self._reserved_total
-                >= self.blocks_for(n_tokens))
+        admitted within the (possibly oversubscribed) reservation budget:
+        ``physical_in_use + reserved_total + need <= virtual_blocks``.
+        At ``oversubscribe == 1`` this is exactly the classic
+        ``free - reserved >= need`` check, under which an admitted
+        request can never starve; beyond 1 it is a bet that `ensure_
+        mapped` may lose (`BlockPressure`) and the engine must cover."""
+        return (self.n_physical_in_use + self._reserved_total
+                + self.blocks_for(n_tokens) <= self.virtual_blocks)
 
     def reserve(self, slot: int, n_tokens: int) -> None:
         """Reserve the slot's worst-case block count. Must hold
@@ -329,7 +420,8 @@ class PagedCachePool:
         `ensure_mapped` (or aliased by `share_prefix`, which returns the
         matched blocks' share of this reservation)."""
         need = self.blocks_for(n_tokens)
-        if len(self._free_set) - self._reserved_total < need:
+        if (self.n_physical_in_use + self._reserved_total + need
+                > self.virtual_blocks):
             raise RuntimeError("paged pool over-reserved: admission must "
                                "check can_reserve() first")
         self._owed[slot] = need
@@ -337,9 +429,13 @@ class PagedCachePool:
 
     def ensure_mapped(self, slot: int, n_tokens: int) -> int:
         """Map blocks until the slot covers `n_tokens` logical cache
-        entries. Never fails for demands within the slot's reservation
-        (the free list always holds >= reserved blocks). Returns the
-        number of newly mapped blocks."""
+        entries. At ``oversubscribe == 1`` this never fails for demands
+        within the slot's reservation (the free list always holds >=
+        reserved blocks); oversubscribed pools may raise `BlockPressure`
+        mid-way — already-mapped progress is kept and the call is
+        idempotent, so the caller retries the same demand after its
+        pressure policy frees blocks. Returns the number of newly
+        mapped blocks."""
         need = self.blocks_for(n_tokens)
         newly = 0
         while int(self.n_mapped[slot]) < need:
@@ -351,6 +447,90 @@ class PagedCachePool:
         if newly:
             self._tables_dirty = True
         return newly
+
+    # -- host swap tier -----------------------------------------------------
+    def _swap_out(self, blk: int, key: bytes) -> None:
+        """Spill an evicted cached block's contents to the host store
+        before its device block is handed to a new owner. The store is
+        an LRU over chain keys bounded by `swap_blocks`; the copy is a
+        plain `np.asarray` pull of every cache leaf's block row (jax
+        dispatches the device->host transfers asynchronously; the arrays
+        materialize lazily on first host access)."""
+        def one(leaf, ax):
+            if ax == 0:
+                return np.asarray(leaf[blk])
+            return np.asarray(leaf[:, blk])
+        self._swap[key] = jax.tree.map(one, self.cache, self.block_axes)
+        self._swap.move_to_end(key)
+        self.swap_outs += 1
+        while len(self._swap) > self.swap_blocks:
+            self._swap.popitem(last=False)      # LRU: drop the coldest
+
+    def _swap_in(self, slot: int, key: bytes) -> int:
+        """Restore a swapped-out prefix block: allocate a device block
+        (charged to `slot`'s reservation like a fresh mapping — may
+        raise `BlockPressure`), copy the host contents back, and
+        re-register the chain key. Returns the new physical id with
+        ref already set to 1."""
+        blk = self._take_free_block(slot)        # BlockPressure-able
+        host = self._swap.pop(key)
+
+        def one(leaf, hv, ax):
+            if ax == 0:
+                return leaf.at[blk].set(hv)
+            return leaf.at[:, blk].set(hv)
+        self.cache = jax.tree.map(one, self.cache, host, self.block_axes)
+        self._prefix_registry[key] = blk
+        self._registered_key[blk] = key
+        self.swap_ins += 1
+        return blk
+
+    def save_block_span(self, slot: int, lo: int, hi: int) -> list:
+        """Host snapshot of the physical blocks covering token span
+        [lo, hi) of `slot` (whole blocks; `lo` rounds down to a block
+        boundary). The preemption path uses this for the DECODE-written
+        region of a victim's cache: decode-written K/V is not bit-
+        identical to a prefill recompute of the same positions (different
+        reduction shapes), so those bytes must survive preemption
+        verbatim — unlike prompt blocks, which chunked prefill recomputes
+        bit-exactly. Returns an opaque list for `restore_block_span`."""
+        if hi <= lo:
+            return []
+        saved = []
+        for m in range(lo // self.block_size,
+                       (hi - 1) // self.block_size + 1):
+            blk = int(self.tables[slot, m])
+
+            def one(leaf, ax, blk=blk):
+                if ax == 0:
+                    return np.asarray(leaf[blk])
+                return np.asarray(leaf[:, blk])
+            saved.append(jax.tree.map(one, self.cache, self.block_axes))
+        return saved
+
+    def restore_block_span(self, slot: int, lo: int, hi: int,
+                           saved: list) -> None:
+        """Write a `save_block_span` snapshot back over the SAME token
+        span of `slot`'s (re-mapped) table. The span's blocks must be
+        mapped and write-private — the resume path maps them fresh, so
+        they are; restoring over a shared or registered block would
+        corrupt another reader."""
+        if hi <= lo:
+            return
+        ms = range(lo // self.block_size, (hi - 1) // self.block_size + 1)
+        for m, host in zip(ms, saved):
+            blk = int(self.tables[slot, m])
+            assert blk > 0 and self.ref[blk] == 1 \
+                and blk not in self._registered_key, \
+                (f"restore_block_span: slot {slot} block {m} (phys {blk}) "
+                 f"is not a private mapped block")
+
+            def one(leaf, hv, ax, blk=blk):
+                if ax == 0:
+                    return leaf.at[blk].set(hv)
+                return leaf.at[:, blk].set(hv)
+            self.cache = jax.tree.map(one, self.cache, host,
+                                      self.block_axes)
 
     # -- prefix sharing / copy-on-write ------------------------------------
     def share_prefix(self, slot: int, tokens: np.ndarray) -> int:
@@ -364,10 +544,13 @@ class PagedCachePool:
         Matched blocks that are still refcounted are aliased (ref+1);
         matched blocks sitting cached on the free list are resurrected
         (ref 0 -> 1, leaving the free list, charged to the slot's
-        reservation like a fresh mapping). Aliased blocks give their
-        reservation back — minus ONE block of slack when the prompt is
-        fully shared with an aliased tail, so the worst-case `cow_clone`
-        (a fully-shared prompt recomputes its final token in place) can
+        reservation like a fresh mapping); keys missing from the device
+        registry but present in the host swap store are swapped back in
+        (`_swap_in` — on `BlockPressure` matching simply stops at the
+        blocks already recovered). Aliased blocks give their reservation
+        back — minus ONE block of slack when the prompt is fully shared
+        with an aliased tail, so the worst-case `cow_clone` (a
+        fully-shared prompt recomputes its final token in place) can
         never fail. Partial shares restart prefill at a block boundary
         and never write shared blocks, so they keep no slack."""
         assert int(self.n_mapped[slot]) == 0, \
@@ -378,10 +561,20 @@ class PagedCachePool:
         for m, key in enumerate(keys):
             blk = self._prefix_registry.get(key)
             if blk is None:
-                break
-            if self.ref[blk] == 0:
+                if self.swap_blocks <= 0 or key not in self._swap:
+                    break
+                try:
+                    blk = self._swap_in(slot, key)
+                except BlockPressure:
+                    break        # keep what we recovered; caller prefills
+            elif self.ref[blk] == 0:
                 # cached free block: resurrect (consumes a free block,
-                # so it is charged like a fresh mapping)
+                # so it is charged like a fresh mapping — or, past the
+                # reservation, only within virtual headroom)
+                if self._owed[slot] <= 0 and (
+                        self.n_physical_in_use + 1 + self._reserved_total
+                        > self.virtual_blocks):
+                    break
                 self._free_set.remove(blk)
                 if self._owed[slot] > 0:
                     self._owed[slot] -= 1
@@ -430,6 +623,9 @@ class PagedCachePool:
                 continue
             self._prefix_registry[key] = blk
             self._registered_key[blk] = key
+            # a device registration supersedes any stale host copy (swap
+            # keys and registry keys stay disjoint)
+            self._swap.pop(key, None)
             n += 1
         return n
 
@@ -514,6 +710,11 @@ class PagedCachePool:
         by a later same-prefix request until evicted)."""
         return sum(1 for b in self._registered_key if b in self._free_set)
 
+    @property
+    def n_swapped_blocks(self) -> int:
+        """Prefix blocks currently living only in the host swap store."""
+        return len(self._swap)
+
     def register_metrics(self, reg) -> None:
         """Expose pool occupancy as pull-mode gauges on a
         `MetricsRegistry` — callbacks are evaluated only at scrape or
@@ -527,12 +728,18 @@ class PagedCachePool:
         g.labels(kind="refcounted").set_fn(lambda: self.n_shared_blocks)
         g.labels(kind="cached").set_fn(lambda: self.n_cached_blocks)
         g.labels(kind="peak").set_fn(lambda: self.peak_mapped)
+        g.labels(kind="virtual").set_fn(lambda: self.virtual_blocks)
+        g.labels(kind="swapped").set_fn(lambda: self.n_swapped_blocks)
         reg.gauge("serving_pool_cow_clones_total",
                   "lifetime copy-on-write block clones",
                   fn=lambda: self.cow_clones)
         reg.gauge("serving_pool_shared_blocks_total",
                   "lifetime blocks mapped via prefix sharing",
                   fn=lambda: self.shared_blocks_total)
+        s = reg.gauge("serving_pool_swap_total",
+                      "lifetime host swap-tier transfers", ("dir",))
+        s.labels(dir="out").set_fn(lambda: self.swap_outs)
+        s.labels(dir="in").set_fn(lambda: self.swap_ins)
 
     def active_prefix_blocks(self, n_tokens: int) -> int:
         """Logical blocks needed to cover `n_tokens` cache entries,
@@ -578,13 +785,29 @@ class PagedCachePool:
         assert mapped.isdisjoint(free), "free block still referenced"
         assert mapped | free == set(range(1, self.n_blocks + 1)), \
             "blocks leaked"
-        assert len(free) >= self._reserved_total >= 0, \
-            "reservation exceeds free blocks"
+        if self.virtual_blocks == self.n_blocks:
+            assert len(free) >= self._reserved_total >= 0, \
+                "reservation exceeds free blocks"
+        else:
+            assert self._reserved_total >= 0
+        # the generalized (oversubscription-aware) reservation invariant;
+        # reduces to the classic free >= reserved at factor 1
+        assert (self.n_physical_in_use + self._reserved_total
+                <= self.virtual_blocks), \
+            "physical_in_use + reserved exceeds the virtual budget"
         for key, blk in self._prefix_registry.items():
             assert self._registered_key.get(blk) == key, \
                 "registry / reverse-map mismatch"
             assert blk in mapped or blk in free  # always true, documents it
         assert len(self._registered_key) == len(self._prefix_registry)
+        # host swap tier: bounded, key-disjoint from the device registry,
+        # and resident-free — a swapped-out prefix owns NO physical block,
+        # so no slot's table row (hence no decode/prefill read) can ever
+        # touch one
+        assert len(self._swap) <= max(self.swap_blocks, 0), \
+            "swap store exceeds its capacity"
+        assert not (set(self._swap) & set(self._prefix_registry)), \
+            "chain key registered on device AND swapped to host"
         for s in range(self.n_slots):
             if s not in self._in_use:
                 assert (self.tables[s] == 0).all(), \

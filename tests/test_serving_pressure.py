@@ -1,0 +1,481 @@
+"""Memory-pressure serving tests: KV-cache oversubscription with the
+preempt / defer-on-OOM / shed pressure policies, host swap tier,
+admission overload control (bounded queue + deadlines), loud release
+semantics, and property-based churn over the paged pool.
+
+The headline guarantees pinned here:
+
+  * an oversubscribed engine under a block budget far below worst-case
+    reservation demand completes 100% of requests with greedy tokens
+    BIT-EXACT against an unconstrained run (preemption is invisible to
+    the output);
+  * defer-on-OOM escalates victims up the cascade ladder with
+    ``deferred_reason == "oom"``;
+  * shed / queue-bound / deadline paths land requests in the
+    REJECTED / EXPIRED terminal states with empty outputs, exactly once;
+  * a preempted request re-enters the arrival queue ahead of
+    never-admitted arrivals (age priority — repeated preemption cannot
+    starve it behind fresh traffic).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_shim import given, settings, st
+from repro.configs import get_config, reduced
+from repro.data.synthetic import make_lm_stream
+from repro.models import transformer as tfm
+from repro.serving import (BlockPressure, CascadeSpec,
+                           ContinuousCascadeEngine, EngineConfig,
+                           MLBackendConfig, ModelRunner, PagedCachePool,
+                           PagedConfig, PressureConfig, SlotScheduler,
+                           make_requests)
+from repro.serving.request import (DONE, EXPIRED, REJECTED, ArrivalQueue,
+                                   Request)
+
+MAX_NEW = 10
+BS = 4
+SLOTS = 4
+TIGHT = 16        # demand of a full slot set is 8 blocks/req = 2x this
+GENEROUS = 64     # no pressure possible
+
+
+@pytest.fixture(scope="module")
+def runners():
+    key = jax.random.PRNGKey(0)
+    s_cfg = reduced(get_config("internlm2-1.8b"))
+    l_cfg = s_cfg.replace(name="large", n_layers=3, d_ff=768)
+    small = ModelRunner(s_cfg, tfm.init_params(s_cfg, key))
+    large = ModelRunner(l_cfg, tfm.init_params(l_cfg,
+                                               jax.random.fold_in(key, 1)))
+    rng = np.random.default_rng(7)
+    lens = rng.integers(6, 21, size=10)
+    base = make_lm_stream(jax.random.fold_in(key, 2), 10, 20,
+                          s_cfg.vocab_size)
+    prompts = [np.asarray(base[i, :n]).astype(np.int32)
+               for i, n in enumerate(lens)]
+    return small, large, prompts
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return reduced(get_config("internlm2-1.8b"))
+
+
+def make_engine(small, large, *, n_blocks, pressure=None, slots=SLOTS,
+                max_queue=None, deadline_s=None):
+    return ContinuousCascadeEngine(
+        CascadeSpec.two_tier(small, large, tau=-1e9),
+        EngineConfig(n_slots=slots, early_exit=False, steps_per_sync=4,
+                     backend="paged", max_queue=max_queue,
+                     deadline_s=deadline_s,
+                     ml=MLBackendConfig(kind="sync", large_batch=slots),
+                     paged=PagedConfig(block_size=BS, n_blocks=n_blocks,
+                                       prefill_chunk=4,
+                                       pressure=pressure)))
+
+
+@pytest.fixture(scope="module")
+def unconstrained(runners):
+    """Reference run with a generous budget: no pressure, no shedding."""
+    small, large, prompts = runners
+    eng = make_engine(small, large, n_blocks=GENEROUS)
+    return eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+
+
+def assert_terminal_exactly_once(res, n):
+    """Every request reaches exactly one terminal state; DONE requests
+    carry a full generation, shed requests an empty one."""
+    assert len(res.requests) == n
+    assert len({r.rid for r in res.requests}) == n
+    s = res.stats
+    assert s["n_completed"] + s["n_rejected"] + s["n_expired"] == n
+    for r in res.requests:
+        if r.state == DONE:
+            assert r.tokens is not None and len(r.tokens) == r.max_new
+        else:
+            assert r.shed and len(r.tokens) == 0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: oversubscription + preempt policy, bit-exact under pressure
+# ---------------------------------------------------------------------------
+
+def test_oversubscribed_preempt_completes_bit_exact(runners, unconstrained):
+    """2x+ reservation demand on a tight budget: the preempt policy must
+    complete every request with tokens identical to the unconstrained
+    run — save/restore of the decode-written KV region plus bit-exact
+    prompt re-prefill make preemption invisible to greedy outputs."""
+    small, large, prompts = runners
+    eng = make_engine(
+        small, large, n_blocks=TIGHT,
+        pressure=PressureConfig(oversubscribe=4.0, policy="preempt",
+                                max_preemptions=50, swap_blocks=8))
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    assert res.stats["n_preemptions"] > 0
+    assert res.stats["n_completed"] == len(prompts)
+    assert_terminal_exactly_once(res, len(prompts))
+    assert all(r.state == DONE and r.tier == 0 for r in res.requests)
+    np.testing.assert_array_equal(res.tokens, unconstrained.tokens)
+
+
+def test_preemption_bound_escalates_to_oom_deferral(runners, unconstrained):
+    """max_preemptions=1 on a thrashing workload: victims past the bound
+    escalate up the ladder (deferred_reason == "oom") instead of cycling
+    forever; everything still completes, and requests that never left
+    tier 0 stay bit-exact."""
+    small, large, prompts = runners
+    eng = make_engine(
+        small, large, n_blocks=TIGHT,
+        pressure=PressureConfig(oversubscribe=4.0, policy="preempt",
+                                max_preemptions=1))
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    assert res.stats["n_completed"] == len(prompts)
+    assert all(r.n_preempted <= 1 for r in res.requests)
+    oom = [r for r in res.requests if r.deferred_reason == "oom"]
+    assert res.stats["oom_deferrals"] == len(oom) > 0
+    assert all(r.deferred and r.state == DONE for r in oom)
+    for i, r in enumerate(res.requests):
+        if not r.deferred:
+            np.testing.assert_array_equal(r.tokens,
+                                          unconstrained.requests[i].tokens)
+
+
+def test_defer_on_oom_policy(runners, unconstrained):
+    """The defer policy never resumes a victim: every eviction goes up
+    the ladder immediately, tagged as an OOM deferral."""
+    small, large, prompts = runners
+    eng = make_engine(
+        small, large, n_blocks=TIGHT,
+        pressure=PressureConfig(oversubscribe=4.0, policy="defer"))
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    assert res.stats["n_completed"] == len(prompts)
+    assert res.stats["n_preemptions"] == 0
+    assert res.stats["oom_deferrals"] > 0
+    for i, r in enumerate(res.requests):
+        assert r.state == DONE
+        if not r.deferred:
+            np.testing.assert_array_equal(r.tokens,
+                                          unconstrained.requests[i].tokens)
+
+
+def test_shed_policy_rejects_deterministically(runners, unconstrained):
+    """The shed policy trades completion for latency: pressure victims
+    land in REJECTED with empty outputs; survivors are untouched
+    (bit-exact vs the unconstrained run)."""
+    small, large, prompts = runners
+    eng = make_engine(
+        small, large, n_blocks=TIGHT,
+        pressure=PressureConfig(oversubscribe=4.0, policy="shed"))
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    s = res.stats
+    assert s["n_rejected"] > 0
+    assert s["n_completed"] + s["n_rejected"] == len(prompts)
+    assert s["shed_ratio"] == pytest.approx(s["n_rejected"] / len(prompts))
+    assert_terminal_exactly_once(res, len(prompts))
+    for i, r in enumerate(res.requests):
+        if r.state == REJECTED:
+            assert r.shed and len(r.tokens) == 0
+        else:
+            np.testing.assert_array_equal(r.tokens,
+                                          unconstrained.requests[i].tokens)
+
+
+def test_hostile_trace_no_starvation(runners):
+    """Hostile trace: uniform prompts cross block boundaries in lockstep,
+    so pressure recurs every few steps. The age-priority requeue +
+    preemption bound must still drive every request to completion with
+    its per-request preemption count within the bound."""
+    small, large, _ = runners
+    vocab = small.cfg.vocab_size
+    prompts = [np.full(12, (i * 17) % vocab, dtype=np.int32)
+               for i in range(8)]
+    eng = make_engine(
+        small, large, n_blocks=12,
+        pressure=PressureConfig(oversubscribe=4.0, policy="preempt",
+                                max_preemptions=3))
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    assert res.stats["n_completed"] == len(prompts)
+    assert res.stats["n_preemptions"] > 0
+    assert all(r.n_preempted <= 3 for r in res.requests)
+
+
+# ---------------------------------------------------------------------------
+# Admission overload control: bounded queue + deadlines
+# ---------------------------------------------------------------------------
+
+def test_queue_bound_sheds_newest(runners):
+    """max_queue trims the ready set to the OLDEST entries; the shed
+    requests end REJECTED with empty outputs and the survivors drain
+    normally."""
+    small, large, prompts = runners
+    eng = make_engine(small, large, n_blocks=GENEROUS, max_queue=2)
+    res = eng.run(make_requests(prompts, MAX_NEW), MAX_NEW)
+    s = res.stats
+    assert s["n_completed"] == 2 and s["n_rejected"] == len(prompts) - 2
+    assert_terminal_exactly_once(res, len(prompts))
+    assert sorted(r.rid for r in res.requests if r.state == DONE) == [0, 1]
+    assert all(r.state == REJECTED
+               for r in res.requests if r.rid >= 2)
+
+
+def test_deadline_expires_queued_requests(runners):
+    """A deadline far shorter than the service time expires requests
+    stuck behind a single slot; requests already admitted are finished,
+    never killed in flight."""
+    small, large, prompts = runners
+    eng = make_engine(small, large, n_blocks=GENEROUS, slots=1,
+                      deadline_s=0.01)
+    res = eng.run(make_requests(prompts[:6], MAX_NEW), MAX_NEW)
+    s = res.stats
+    assert s["n_expired"] >= 1 and s["n_completed"] >= 1
+    assert s["n_completed"] + s["n_expired"] == 6
+    assert_terminal_exactly_once(res, 6)
+    done = [r for r in res.requests if r.state == DONE]
+    assert all(r.state == EXPIRED for r in res.requests if r not in done)
+
+
+def test_requeue_age_priority_unit():
+    """A preempted request re-enters keyed on its ORIGINAL arrival time:
+    it pops before every never-admitted arrival still waiting."""
+    mk = lambda rid, t: Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                                max_new=4, arrival_time=t)
+    old, mid, new = mk(0, 0.0), mk(1, 1.0), mk(2, 2.0)
+    q = ArrivalQueue([mid, new])
+    q.release(5.0)
+    q.requeue(old)                      # preempted at t=4, arrived at t=0
+    assert [q.pop_ready().rid for _ in range(3)] == [0, 1, 2]
+
+    # overflow shedding keeps the OLDEST max_queue entries
+    q = ArrivalQueue([mk(i, float(i)) for i in range(5)], max_queue=2)
+    q.release(10.0)
+    shed = q.shed_overflow()
+    assert [r.rid for r in shed] == [2, 3, 4]
+    assert q.pop_ready().rid == 0
+
+
+# ---------------------------------------------------------------------------
+# Pool: oversubscription accounting, loud release, swap tier, snapshots
+# ---------------------------------------------------------------------------
+
+def test_pool_oversubscription_accounting(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=3, n_blocks=8, block_size=4,
+                          max_len=40, oversubscribe=2.0)
+    assert pool.virtual_blocks == 16
+    a, b, c = pool.alloc(), pool.alloc(), pool.alloc()
+    for s in (a, b, c):
+        pool.reserve(s, 20)             # 5 blocks each: 15 <= 16 virtual
+    pool.check_invariants()
+    # physical exhaustion raises BlockPressure instead of the
+    # reservation-invariant RuntimeError
+    pool.ensure_mapped(a, 20)
+    pool.ensure_mapped(b, 12)           # 8 physical blocks now mapped
+    with pytest.raises(BlockPressure):
+        pool.ensure_mapped(c, 4)
+    pool.check_invariants()             # failed map left the books sound
+    assert pool.n_mapped[c] == 0
+    # relief: release a victim, the retry succeeds
+    pool.release(a)
+    pool.ensure_mapped(c, 4)
+    pool.check_invariants()
+
+    # a non-oversubscribed pool can never reach BlockPressure: the same
+    # over-demand is refused at reservation time
+    flat = PagedCachePool(tiny_cfg, n_slots=3, n_blocks=8, block_size=4,
+                          max_len=40)
+    s0 = flat.alloc()
+    flat.reserve(s0, 20)
+    assert not flat.can_reserve(20)     # 10 > 8 physical
+
+
+def test_pool_release_is_loudly_idempotent(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=8, block_size=4,
+                          max_len=16)
+    a = pool.alloc()
+    gen = pool.generations[a]
+    pool.reserve(a, 8)
+    pool.ensure_mapped(a, 8)
+    pool.release(a, expected_generation=gen)
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release(a)
+    # stale release: slot re-allocated to a new tenant since the caller
+    # captured its generation
+    b = pool.alloc()
+    assert b == a
+    with pytest.raises(RuntimeError, match="stale release"):
+        pool.release(b, expected_generation=gen)
+    pool.release(b, expected_generation=pool.generations[b])
+    pool.check_invariants()
+
+
+def test_pool_save_restore_span_round_trip(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=1, n_blocks=4, block_size=4,
+                          max_len=16)
+    a = pool.alloc()
+    pool.reserve(a, 8)
+    pool.ensure_mapped(a, 8)
+    saved = pool.save_block_span(a, 0, 8)
+    assert len(saved) == 2
+    # clobber the mapped blocks, then restore the snapshot verbatim
+    blks = [int(pool.tables[a, m]) for m in range(2)]
+
+    def zero(leaf, ax):
+        for blk in blks:
+            leaf = (leaf.at[blk].set(0) if ax == 0
+                    else leaf.at[:, blk].set(0))
+        return leaf
+    pool.cache = jax.tree.map(zero, pool.cache, pool.block_axes)
+    pool.restore_block_span(a, 0, 8, saved)
+    again = pool.save_block_span(a, 0, 8)
+    for s0, s1 in zip(saved, again):
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                     s0, s1)
+
+
+def test_pool_swap_tier_round_trip(tiny_cfg):
+    """Cold registered prefix blocks spill to host RAM on eviction and
+    come back bit-identical on the next same-prefix share."""
+    pool = PagedCachePool(tiny_cfg, n_slots=2, n_blocks=4, block_size=4,
+                          max_len=16, swap_blocks=4)
+    toks = np.arange(8, dtype=np.int32)
+    a = pool.alloc()
+    pool.reserve(a, 8)
+    pool.ensure_mapped(a, 8)
+    pool.register_prefix(a, toks)
+    before = pool.save_block_span(a, 0, 8)
+    pool.release(a)                     # zero-ref registered -> cached
+    pool.check_invariants()
+
+    b = pool.alloc()                    # evict the cached blocks: they
+    pool.reserve(b, 16)                 # swap out instead of vanishing
+    pool.ensure_mapped(b, 16)
+    assert pool.swap_outs == 2 and pool.n_swapped_blocks == 2
+    pool.check_invariants()
+    pool.release(b)
+
+    c = pool.alloc()
+    pool.reserve(c, 8)
+    assert pool.share_prefix(c, toks) == 8
+    assert pool.swap_ins == 2 and pool.n_swapped_blocks == 0
+    pool.check_invariants()
+    after = pool.save_block_span(c, 0, 8)
+    for s0, s1 in zip(before, after):
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                     s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# Property suites: pool churn + scheduling exactly-once
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 32)),
+                min_size=1, max_size=50))
+def test_pool_churn_invariants(ops):
+    """Random alloc/reserve/grow/register/release churn on a small
+    oversubscribed pool with a swap tier: after every operation the pool
+    invariants hold (block conservation, refcount bijection, no table
+    points at a swapped-out or free block), BlockPressure never corrupts
+    the books, and release stays loud."""
+    cfg = reduced(get_config("internlm2-1.8b"))
+    pool = PagedCachePool(cfg, n_slots=3, n_blocks=6, block_size=4,
+                          max_len=32, oversubscribe=2.0, swap_blocks=4)
+    live = {}                           # slot -> (gen, reserved_tokens, base)
+    for op, arg in ops:
+        if op == 0 and pool.n_free > 0:          # admit
+            n_tok = 4 * (arg % 8) + 4            # 4..32
+            if pool.can_reserve(n_tok):
+                s = pool.alloc()
+                pool.reserve(s, n_tok)
+                live[s] = (pool.generations[s], n_tok, arg)
+        elif op == 1 and live:                   # grow mapping
+            s = sorted(live)[arg % len(live)]
+            try:
+                pool.ensure_mapped(s, min(arg, live[s][1]))
+            except BlockPressure:
+                pass                             # books stay sound
+        elif op == 2 and live:                   # release (loud)
+            s = sorted(live)[arg % len(live)]
+            gen, _, _ = live.pop(s)
+            pool.release(s, expected_generation=gen)
+            with pytest.raises(RuntimeError):
+                pool.release(s)
+        elif op == 3 and live:                   # register + release
+            s = sorted(live)[arg % len(live)]
+            gen, n_tok, base = live.pop(s)
+            n_map = int(pool.n_mapped[s]) * 4
+            if n_map:
+                pool.register_prefix(
+                    s, (np.arange(n_map, dtype=np.int32) + base))
+            pool.release(s, expected_generation=gen)
+        pool.check_invariants()
+    for s in list(live):
+        pool.release(s, expected_generation=live.pop(s)[0])
+    pool.check_invariants()
+    # full drain: every non-trash block is free again
+    assert pool.n_physical_in_use == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=60),
+       st.integers(2, 10))
+def test_scheduler_queue_exactly_once(ops, n):
+    """Random admit/preempt/complete churn through the real
+    SlotScheduler + ArrivalQueue (dense pool, no jax): every request
+    completes exactly once, preempted requests re-enter with age
+    priority and are never starved, and admission order never lets a
+    fresh arrival overtake a preempted one."""
+    class _NullPool:                   # the slot surface the scheduler
+        def __init__(self, n_slots):   # uses, with no device cache
+            self.n_slots = n_slots
+            self._free = sorted(range(n_slots), reverse=True)
+            self._in_use = set()
+            self.generations = [0] * n_slots
+
+        n_free = property(lambda self: len(self._free))
+        in_use = property(lambda self: frozenset(self._in_use))
+
+        def alloc(self):
+            slot = self._free.pop()
+            self._in_use.add(slot)
+            self.generations[slot] += 1
+            return slot
+
+        def release(self, slot, expected_generation=None):
+            assert slot in self._in_use
+            assert expected_generation == self.generations[slot]
+            self._in_use.remove(slot)
+            self._free.append(slot)
+            self._free.sort(reverse=True)
+
+    pool = _NullPool(2)
+    sched = SlotScheduler(pool)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=4,
+                    arrival_time=float(i)) for i in range(n)]
+    queue = ArrivalQueue(list(reqs))
+    completed, clock = [], float(n)
+    for op in ops:
+        clock += 1.0
+        if op == 0:
+            for slot, req in sched.admit_ready(queue, clock):
+                # age priority: nothing ready is older than an admit
+                head = queue.peek_ready()
+                assert head is None or (head.arrival_time, head.rid) \
+                    >= (req.arrival_time, req.rid)
+        elif op == 1 and sched.running:
+            slot = max(sched.running,
+                       key=lambda s: sched.running[s].admit_seq)
+            queue.requeue(sched.preempt(slot, clock))
+        elif op == 2 and sched.running:
+            slot = min(sched.running)
+            completed.append(sched.retire(slot, clock, deferred=False))
+        sched.check_invariants()
+    while len(completed) < n:          # drain
+        clock += 1.0
+        sched.admit_ready(queue, clock)
+        slot = min(sched.running)
+        completed.append(sched.retire(slot, clock, deferred=False))
+    assert sorted(r.rid for r in completed) == list(range(n))
+    assert all(r.state == DONE for r in completed)
+    assert len(queue) == 0 and not sched.running
