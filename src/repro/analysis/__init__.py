@@ -1,0 +1,45 @@
+"""Repo-specific static analysis: machine-check the invariants the
+serving stack established by hand.
+
+Off-the-shelf linters see syntax; this pass sees the repo's contracts:
+
+  * ``trace-safety``    — host-sync hazards inside jit/Pallas-traced
+    regions, and the engine's "one deliberate ``device_get`` per sync"
+    discipline (every host-sync call site in ``serving/`` must be
+    baselined with a justification).
+  * ``lock-discipline`` — ``# guarded_by: self._lock`` attribute
+    annotations, checked against actual ``with self._lock:`` scopes in
+    the threaded modules.
+  * ``determinism``     — ``time.time``/``random``/builtin ``hash()``
+    banned from code that decides dispatch order, victim selection, or
+    wire encoding (the crc32-instead-of-``hash()`` class of bug).
+  * ``pallas-contracts`` — at each ``pallas_call`` site: kernel arity
+    vs grid/BlockSpec structure, index-map lambda arity,
+    ``input_output_aliases`` index validity, fp32 online-softmax
+    scratch.
+
+Run it the way CI does::
+
+    PYTHONPATH=src python -m repro.analysis --paths src tests benchmarks
+
+Findings are suppressed per line with ``# repro: ignore[rule-or-code]``
+or grandfathered in ``analysis_baseline.json`` (see docs/analysis.md
+for the ratchet workflow). The framework is stdlib-only (``ast`` +
+``json``) so the CI job needs no dependencies.
+"""
+from repro.analysis.core import (AnalysisReport, Baseline, Finding,
+                                 SourceModule, collect_files, load_baseline,
+                                 run_analysis)
+from repro.analysis.registry import ALL_RULES, get_rules
+
+__all__ = [
+    "ALL_RULES",
+    "AnalysisReport",
+    "Baseline",
+    "Finding",
+    "SourceModule",
+    "collect_files",
+    "get_rules",
+    "load_baseline",
+    "run_analysis",
+]

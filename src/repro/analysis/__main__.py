@@ -1,0 +1,78 @@
+"""CLI: ``python -m repro.analysis --paths src tests benchmarks``.
+
+Exit codes: 0 = clean (modulo baseline), 1 = new findings or file
+errors, 2 = usage error. ``--write-baseline`` regenerates the baseline
+from the current findings (then hand-edit each entry's justification —
+see docs/analysis.md for the ratchet workflow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.core import load_baseline, run_analysis
+from repro.analysis.registry import ALL_RULES, get_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific static analysis (trace-safety, "
+                    "lock discipline, determinism, Pallas contracts).")
+    ap.add_argument("--paths", nargs="+", default=["src"],
+                    help="files or directories to analyze")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are relative to (and baseline "
+                         "paths are recorded against)")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="grandfathered-findings file ('' to disable)")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma-separated rule families to run "
+                         f"(default all: {','.join(ALL_RULES)})")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON report on stdout")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also list baselined findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline from current findings "
+                         "(keeps existing justifications)")
+    args = ap.parse_args(argv)
+
+    try:
+        rules = get_rules(args.rules.split(",") if args.rules else None)
+    except KeyError as e:
+        ap.error(str(e))
+    baseline = load_baseline(args.baseline or None)
+    report = run_analysis(args.paths, root=args.root, baseline=baseline,
+                          rules=rules)
+
+    if args.write_baseline:
+        if not args.baseline:
+            ap.error("--write-baseline needs --baseline")
+        # keep hand-written justifications for findings that persist
+        just = {(str(e.get("rule")), str(e.get("code")), str(e.get("path")),
+                 str(e.get("context")), str(e.get("snippet"))):
+                str(e.get("justification", ""))
+                for e in baseline.entries}
+        from repro.analysis.core import Baseline
+        fresh = Baseline.from_findings(report.findings)
+        for e in fresh.entries:
+            key = (e["rule"], e["code"], e["path"], e["context"],
+                   e["snippet"])
+            if just.get(key):
+                e["justification"] = just[key]
+        fresh.dump(args.baseline)
+        print(f"wrote {len(fresh.entries)} entries to {args.baseline} "
+              f"(review every 'TODO: justify')")
+        return 0
+
+    if args.as_json:
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        print(report.render(verbose=args.verbose))
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

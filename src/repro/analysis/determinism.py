@@ -1,0 +1,123 @@
+"""determinism: ban ambient nondeterminism where ordering is a contract.
+
+Three hand-written fixes established that dispatch order, victim
+selection, and wire encoding must be pure functions of request state:
+
+  * PR 1 replaced builtin ``hash()`` (salted per process via
+    ``PYTHONHASHSEED``) with ``zlib.crc32`` for parameter-init path
+    hashing — two processes now build bit-identical params.
+  * PR 8's semantic-agreement signal derives its sampling keys from
+    ``crc32(prompt)``, so the score is replay-stable.
+  * PR 9's pressure policies pick the *deterministic* youngest victim
+    (max admit_seq, tie max rid), never "whatever iteration order".
+
+This rule makes that a property of the listed modules rather than a
+review habit: inside determinism-critical modules (the default scope
+below, plus any file carrying a ``# repro: deterministic-module``
+pragma), flag
+
+* DM001 — builtin ``hash()`` (process-salted for str/bytes; use
+  ``zlib.crc32`` / ``hashlib``).
+* DM002 — ambient RNG: ``random.*``, legacy global ``np.random.*``
+  (seedless ``default_rng()`` included), ``os.urandom``, ``uuid.*``,
+  ``secrets.*``. Seeded ``np.random.default_rng(seed)`` and the
+  functional ``jax.random.*`` API are fine.
+* DM003 — wall-clock reads: ``time.time`` / ``time.time_ns`` /
+  ``datetime.*now`` / ``utcnow``. Use the caller-supplied timestamp or
+  ``time.perf_counter`` (monotonic, never encoded on the wire).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Tuple
+
+from repro.analysis.core import (Finding, SourceModule, dotted_name,
+                                 iter_scopes, qualname_of)
+
+RULE = "determinism"
+
+# path suffixes of modules that decide dispatch order, victim
+# selection, or wire encoding — the determinism-critical set
+DEFAULT_SCOPE: Tuple[str, ...] = (
+    "src/repro/serving/scheduler.py",
+    "src/repro/serving/pressure.py",
+    "src/repro/serving/paged_pool.py",
+    "src/repro/serving/cache_pool.py",
+    "src/repro/serving/remote/wire.py",
+    "src/repro/core/deferral.py",
+    "src/repro/core/cascade_spec.py",
+    "src/repro/models/common.py",
+)
+
+_WALLCLOCK = {"time.time", "time.time_ns", "time.monotonic_ns",
+              "datetime.now", "datetime.datetime.now",
+              "datetime.utcnow", "datetime.datetime.utcnow"}
+
+_AMBIENT_RNG_PREFIXES = ("random.", "np.random.", "numpy.random.",
+                         "uuid.", "secrets.")
+_AMBIENT_RNG_EXACT = {"os.urandom"}
+
+
+def _in_scope(module: SourceModule) -> bool:
+    if module.deterministic_pragma:
+        return True
+    path = module.rel_path
+    return any(path.endswith(suffix) for suffix in DEFAULT_SCOPE)
+
+
+class DeterminismRule:
+    name = RULE
+
+    def check(self, module: SourceModule) -> Iterator[Optional[Finding]]:
+        if not _in_scope(module):
+            return
+        # context lookup: function spans -> qualname
+        spans = []
+        for node, stack in iter_scopes(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                spans.append((node.lineno,
+                              getattr(node, "end_lineno", node.lineno),
+                              qualname_of(stack)))
+
+        def context_of(line: int) -> str:
+            best = ""
+            best_span = None
+            for lo, hi, name in spans:
+                if lo <= line <= hi and (best_span is None
+                                         or hi - lo < best_span):
+                    best, best_span = name, hi - lo
+            return best
+
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            ctx = context_of(node.lineno)
+            if name == "hash":
+                yield module.finding(
+                    RULE, "DM001", node, ctx,
+                    "builtin hash() is salted per process — use "
+                    "zlib.crc32/hashlib for cross-process-stable keys")
+            elif name in _AMBIENT_RNG_EXACT or (
+                    name.startswith(_AMBIENT_RNG_PREFIXES)
+                    and not self._seeded_rng(name, node)):
+                yield module.finding(
+                    RULE, "DM002", node, ctx,
+                    f"ambient RNG `{name}` in determinism-critical module "
+                    f"— derive randomness from request state (crc32) or "
+                    f"a seeded generator")
+            elif name in _WALLCLOCK:
+                yield module.finding(
+                    RULE, "DM003", node, ctx,
+                    f"wall-clock `{name}` must not influence dispatch "
+                    f"order or wire encoding — take the timestamp as an "
+                    f"argument or use time.perf_counter")
+
+    @staticmethod
+    def _seeded_rng(name: str, node: ast.Call) -> bool:
+        """`np.random.default_rng(seed)` with an explicit seed is fine;
+        seedless `default_rng()` draws OS entropy."""
+        return (name.endswith(".default_rng")
+                and bool(node.args or node.keywords))

@@ -1,0 +1,254 @@
+"""pallas-contracts: structural checks at every ``pl.pallas_call`` site.
+
+A Pallas kernel's contract with its call site is positional and
+silent: the kernel signature must line up with
+``num_scalar_prefetch + in_specs + outputs + scratch_shapes`` in that
+exact order, every BlockSpec index map takes one parameter per grid
+axis (plus one ref per scalar-prefetch operand), and
+``input_output_aliases`` indexes raw call operands. Getting any of
+these wrong is a shape error deep inside Mosaic at best and silent
+garbage at worst — and interpret-mode CPU tests exercise exactly one
+(grid, spec) instantiation, so arity rot hides until a TPU run.
+
+Checks (sites whose structure can't be resolved statically — e.g. a
+grid built by a helper — are skipped, not guessed):
+
+* PL001 — kernel positional-parameter count !=
+  ``num_scalar_prefetch + len(in_specs) + n_outputs +
+  len(scratch_shapes)`` (``functools.partial``-bound statics are
+  expected keyword-only and don't count).
+* PL002 — a BlockSpec index-map lambda whose arity is not
+  ``len(grid) + num_scalar_prefetch``.
+* PL003 — ``input_output_aliases`` key outside the operand range or
+  value outside the output range.
+* PL004 — online-softmax scratch (``pltpu.VMEM``) that is not fp32, in
+  ``kernels/paged_attention.py`` / ``kernels/flash_attention.py``:
+  accumulating ``(m, l, acc)`` in the input dtype loses the flash
+  recurrence's stability guarantee (bf16 accumulation diverges from
+  the dense oracle past ~1k tokens).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, List, Optional
+
+from repro.analysis.core import (Finding, SourceModule, dotted_name,
+                                 positional_params, qualname_of, unparse)
+from repro.analysis.trace_safety import (_enclosing_stack, _ModuleIndex,
+                                         _unwrap_partial)
+
+RULE = "pallas-contracts"
+
+# modules whose VMEM scratch carries flash-attention online-softmax
+# state and therefore must be fp32
+_FP32_SCRATCH_MODULES = ("kernels/paged_attention.py",
+                         "kernels/flash_attention.py")
+
+
+@dataclasses.dataclass
+class _SiteSpec:
+    """Statically-resolved structure of one pallas_call site; None
+    fields mean "could not resolve — skip dependent checks"."""
+
+    num_prefetch: int = 0
+    grid_rank: Optional[int] = None
+    in_specs: Optional[List[ast.AST]] = None
+    out_specs: Optional[List[ast.AST]] = None
+    scratch_shapes: Optional[List[ast.AST]] = None
+    n_out: Optional[int] = None
+    aliases: Optional[ast.Dict] = None
+
+
+def _as_elements(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return None
+
+
+def _resolve_name(index: _ModuleIndex, tree: ast.Module, at: ast.AST,
+                  expr: ast.AST) -> ast.AST:
+    """Follow a Name back to its latest single-target assignment in the
+    enclosing function (textually before `at`)."""
+    if not isinstance(expr, ast.Name):
+        return expr
+    stack = _enclosing_stack(index, at, tree)
+    scopes = [s for s in reversed(stack)
+              if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    scopes.append(tree)
+    for scope in scopes:
+        best = None
+        for node in ast.walk(scope):
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == expr.id
+                    and node.lineno < at.lineno):
+                if best is None or node.lineno > best.lineno:
+                    best = node
+        if best is not None:
+            return best.value
+    return expr
+
+
+def _n_outputs(out_shape: Optional[ast.AST]) -> Optional[int]:
+    if out_shape is None:
+        return None
+    if isinstance(out_shape, (ast.Tuple, ast.List)):
+        return len(out_shape.elts)
+    if isinstance(out_shape, ast.Call):
+        name = dotted_name(out_shape.func) or ""
+        if name.endswith("ShapeDtypeStruct"):
+            return 1
+    return None
+
+
+def _index_map_of(spec: ast.AST) -> Optional[ast.Lambda]:
+    """The index-map lambda of a `pl.BlockSpec(shape, lambda...)` node."""
+    if not isinstance(spec, ast.Call):
+        return None
+    name = dotted_name(spec.func) or ""
+    if not name.endswith("BlockSpec"):
+        return None
+    candidates = list(spec.args[1:]) + [kw.value for kw in spec.keywords
+                                        if kw.arg == "index_map"]
+    for c in candidates:
+        if isinstance(c, ast.Lambda):
+            return c
+    return None
+
+
+class PallasContractsRule:
+    name = RULE
+
+    def check(self, module: SourceModule) -> Iterator[Optional[Finding]]:
+        index = _ModuleIndex(module.tree)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name not in ("pl.pallas_call", "pallas_call"):
+                continue
+            stack = _enclosing_stack(index, node, module.tree)
+            context = qualname_of(stack)
+            yield from self._check_site(module, index, node, context)
+
+    def _check_site(self, module: SourceModule, index: _ModuleIndex,
+                    call: ast.Call, context: str
+                    ) -> Iterator[Optional[Finding]]:
+        tree = module.tree
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        spec = _SiteSpec()
+
+        grid_spec = kw.get("grid_spec")
+        if grid_spec is not None:
+            gs = _resolve_name(index, tree, call, grid_spec)
+            if isinstance(gs, ast.Call):
+                gkw = {k.arg: k.value for k in gs.keywords if k.arg}
+                npf = gkw.get("num_scalar_prefetch")
+                if isinstance(npf, ast.Constant) and isinstance(npf.value,
+                                                                int):
+                    spec.num_prefetch = npf.value
+                self._fill_shape(spec, gkw, index, tree, call)
+        else:
+            self._fill_shape(spec, kw, index, tree, call)
+        spec.n_out = _n_outputs(
+            _resolve_name(index, tree, call, kw["out_shape"])
+            if "out_shape" in kw else None)
+        aliases = kw.get("input_output_aliases")
+        if isinstance(aliases, ast.Dict):
+            spec.aliases = aliases
+
+        # PL001: kernel arity vs site structure
+        kernel = call.args[0] if call.args else None
+        fn = index.resolve(kernel, _enclosing_stack(index, call, tree)) \
+            if kernel is not None else None
+        if (fn is not None and spec.in_specs is not None
+                and spec.n_out is not None):
+            n_scratch = len(spec.scratch_shapes or [])
+            expected = (spec.num_prefetch + len(spec.in_specs)
+                        + spec.n_out + n_scratch)
+            inner = _unwrap_partial(kernel)
+            bound = len(kernel.args) - 1 if inner is not None else 0
+            got = len(positional_params(fn)) - bound
+            if got != expected:
+                yield module.finding(
+                    RULE, "PL001", call, context,
+                    f"kernel `{getattr(fn, 'name', '<lambda>')}` takes "
+                    f"{got} positional refs but the call site supplies "
+                    f"{expected} ({spec.num_prefetch} prefetch + "
+                    f"{len(spec.in_specs)} in + {spec.n_out} out + "
+                    f"{n_scratch} scratch)")
+
+        # PL002: index-map lambda arity
+        if spec.grid_rank is not None:
+            want = spec.grid_rank + spec.num_prefetch
+            for s in (spec.in_specs or []) + (spec.out_specs or []):
+                lam = _index_map_of(s)
+                if lam is None:
+                    continue
+                got = len(positional_params(lam))
+                if got != want:
+                    yield module.finding(
+                        RULE, "PL002", lam, context,
+                        f"BlockSpec index map takes {got} params, expected "
+                        f"{want} (grid rank {spec.grid_rank} + "
+                        f"{spec.num_prefetch} scalar-prefetch refs)")
+
+        # PL003: input_output_aliases ranges
+        if spec.aliases is not None and spec.in_specs is not None:
+            n_operands = spec.num_prefetch + len(spec.in_specs)
+            for k, v in zip(spec.aliases.keys, spec.aliases.values):
+                if (isinstance(k, ast.Constant) and isinstance(k.value, int)
+                        and not 0 <= k.value < n_operands):
+                    yield module.finding(
+                        RULE, "PL003", k, context,
+                        f"input_output_aliases key {k.value} out of range "
+                        f"for {n_operands} call operands "
+                        f"(prefetch + inputs, 0-based)")
+                if (isinstance(v, ast.Constant) and isinstance(v.value, int)
+                        and spec.n_out is not None
+                        and not 0 <= v.value < spec.n_out):
+                    yield module.finding(
+                        RULE, "PL003", v, context,
+                        f"input_output_aliases value {v.value} out of "
+                        f"range for {spec.n_out} output(s)")
+
+        # PL004: fp32 online-softmax scratch
+        if (module.rel_path.endswith(_FP32_SCRATCH_MODULES)
+                and spec.scratch_shapes is not None):
+            for s in spec.scratch_shapes:
+                if not (isinstance(s, ast.Call)
+                        and (dotted_name(s.func) or "").endswith("VMEM")):
+                    continue
+                dtype = (s.args[1] if len(s.args) > 1 else None)
+                for k in s.keywords:
+                    if k.arg == "dtype":
+                        dtype = k.value
+                if dtype is not None and not unparse(dtype).endswith(
+                        "float32"):
+                    yield module.finding(
+                        RULE, "PL004", s, context,
+                        f"online-softmax scratch must be fp32, got "
+                        f"`{unparse(dtype)}` — low-precision (m, l, acc) "
+                        f"accumulation breaks dense-oracle parity")
+
+    @staticmethod
+    def _fill_shape(spec: _SiteSpec, kw, index, tree, call) -> None:
+        grid = kw.get("grid")
+        if grid is not None:
+            g = _resolve_name(index, tree, call, grid)
+            if isinstance(g, (ast.Tuple, ast.List)):
+                spec.grid_rank = len(g.elts)
+            elif isinstance(g, ast.Constant) and isinstance(g.value, int):
+                spec.grid_rank = 1
+        for field, name in (("in_specs", "in_specs"),
+                            ("scratch_shapes", "scratch_shapes")):
+            v = kw.get(name)
+            if v is not None:
+                setattr(spec, field,
+                        _as_elements(_resolve_name(index, tree, call, v)))
+        outs = kw.get("out_specs")
+        if outs is not None:
+            outs = _resolve_name(index, tree, call, outs)
+            spec.out_specs = _as_elements(outs) or [outs]

@@ -1,0 +1,495 @@
+"""trace-safety: host-sync hazards inside jit/Pallas-traced regions.
+
+The serving engine's performance story depends on *where* host<->device
+synchronization happens: the decode loop does exactly one deliberate
+``jax.device_get`` per sync interval, and nothing inside a traced
+region (``jax.jit``, ``pl.pallas_call`` kernels, ``lax.fori_loop`` /
+``scan`` / ``cond`` bodies) may force a transfer or branch on a traced
+value — that either crashes at trace time (``TracerBoolConversion``)
+or, worse, silently bakes one calibration of a value into the compiled
+function.
+
+Mechanics
+---------
+1. Build a per-module *traced-region call graph*: functions passed to
+   trace-inducing callables (``jax.jit(f)``, ``pl.pallas_call(k)``,
+   ``lax.fori_loop(_, _, body, _)`` ...) or decorated with them are
+   roots; anything they call (bare names resolved lexically,
+   ``self.method`` resolved within the class) or define inside
+   (``@pl.when(...)`` bodies, closures) is traced too. Resolution is
+   within-module — cross-module traced helpers need their own roots or
+   a suppression.
+2. Inside traced functions, run a small forward taint pass. Taint is
+   only *seeded* where parameter provenance is known: functions passed
+   directly to a trace entry (and defs nested inside them — ``scan`` /
+   ``fori_loop`` bodies, closures) take traced positional arguments;
+   transitively-called helpers often receive static shape/config ints,
+   so they get no seeds (TS001 still applies inside them). Seeds
+   exclude: ``self``/``cls``; names listed in ``static_argnames`` /
+   positions in ``static_argnums`` on the jit call or decorator;
+   parameters with literal defaults (``x=None``, ``flag=False``); and
+   the repo's static-config parameter names (``cfg``, ``config``,
+   ``ctx``, ``mesh`` — config dataclasses are threaded positionally
+   but are hashable statics, never traced). ``.shape`` / ``.dtype`` /
+   ``.ndim`` / ``.size`` projections and ``len()`` / ``isinstance()``
+   style structure queries are static at trace time and launder taint.
+
+Checks
+------
+* TS001 — ``jax.device_get`` / ``jax.block_until_ready`` called inside
+  a traced region (always wrong: forces a transfer at trace time).
+* TS002 — host coercion of a traced value: ``.item()`` / ``.tolist()``
+  / ``float()`` / ``int()`` / ``bool()`` on a tainted expression.
+* TS003 — ``np.*`` called on a traced value (NumPy silently calls
+  ``__array__`` and materializes the tracer).
+* TS004 — Python ``if`` / ``while`` branching on a traced value
+  (``x is None`` identity tests are static and exempt).
+* TS005 — host-sync *audit*: every ``jax.device_get`` /
+  ``jax.block_until_ready`` call site in ``src/repro/serving/`` host
+  code must be deliberate — new sites fail until baselined with a
+  justification or removed. This is how "one device_get per sync"
+  stays a property instead of a memory.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, SourceModule, dotted_name,
+                                 positional_params, qualname_of, unparse)
+
+RULE = "trace-safety"
+
+# dotted callable -> index/indices of function-valued arguments
+_TRACE_ENTRY_ARGS: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,), "jit": (0,), "jax.pjit": (0,), "pjit": (0,),
+    "jax.vmap": (0,), "jax.pmap": (0,), "jax.grad": (0,),
+    "jax.value_and_grad": (0,), "jax.checkpoint": (0,), "jax.remat": (0,),
+    "jax.shard_map": (0,), "shard_map": (0,),
+    "pl.pallas_call": (0,), "pallas_call": (0,),
+    "jax.lax.fori_loop": (2,), "lax.fori_loop": (2,),
+    "jax.lax.scan": (0,), "lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1), "lax.while_loop": (0, 1),
+    "jax.lax.cond": (1, 2), "lax.cond": (1, 2),
+    "jax.lax.switch": (1,), "lax.switch": (1,),
+    "jax.lax.map": (0,), "lax.map": (0,),
+}
+
+_SYNC_CALLS = {"jax.device_get", "device_get",
+               "jax.block_until_ready", "block_until_ready"}
+
+_HOST_COERCIONS = {"item", "tolist", "numpy", "__array__"}
+
+# attribute projections of a traced array that are static at trace time
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+# structure/introspection builtins whose results are static under trace
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type"}
+
+# repo convention: config dataclasses are passed positionally under
+# these names but are hashable statics (jit static_argnames / closed
+# over), never traced values
+_STATIC_PARAM_NAMES = {"cfg", "config", "ctx", "mesh"}
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _unwrap_partial(node: ast.AST) -> Optional[ast.AST]:
+    """functools.partial(F, ...) -> F (else None)."""
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name in ("functools.partial", "partial") and node.args:
+            return node.args[0]
+    return None
+
+
+class _ModuleIndex:
+    """Lexical-scope name resolution for function definitions."""
+
+    def __init__(self, tree: ast.Module):
+        self.parent: Dict[ast.AST, Optional[ast.AST]] = {tree: None}
+        self.stack_of: Dict[ast.AST, List[ast.AST]] = {}
+        # scope node -> {name: FunctionDef} for its immediate child defs
+        self.local_defs: Dict[ast.AST, Dict[str, ast.AST]] = {}
+        # class node -> {method name: FunctionDef}
+        self.methods: Dict[ast.AST, Dict[str, ast.AST]] = {}
+        self.functions: List[ast.AST] = []
+        self._walk(tree, [])
+
+    def _walk(self, node: ast.AST, stack: List[ast.AST]) -> None:
+        scope = stack[-1] if stack else None
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FuncNode + (ast.ClassDef,)):
+                self.parent[child] = scope
+                sub = stack + [child]
+                self.stack_of[child] = sub
+                if not isinstance(child, ast.ClassDef):
+                    self.functions.append(child)
+                name = getattr(child, "name", None)
+                if name is not None:
+                    owner = scope
+                    if isinstance(scope, ast.ClassDef):
+                        self.methods.setdefault(scope, {})[name] = child
+                        # class bodies are not lexical scopes: register
+                        # the def one level further out too
+                        owner = self.parent.get(scope)
+                    key = owner if owner is not None else None
+                    self.local_defs.setdefault(key, {})[name] = child
+                self._walk(child, sub)
+            else:
+                self._walk(child, stack)
+
+    def resolve(self, expr: ast.AST,
+                stack: Sequence[ast.AST]) -> Optional[ast.AST]:
+        """Resolve a callable expression to a FunctionDef/Lambda in this
+        module, through functools.partial wrappers. Names that resolve
+        to classes (constructor calls) yield None."""
+        inner = _unwrap_partial(expr)
+        if inner is not None:
+            expr = inner
+        if isinstance(expr, ast.Lambda):
+            return expr
+        fn = None
+        if isinstance(expr, ast.Name):
+            # innermost enclosing function scope outward, then module
+            for scope in [s for s in reversed(list(stack))
+                          if not isinstance(s, ast.ClassDef)] + [None]:
+                fn = self.local_defs.get(scope, {}).get(expr.id)
+                if fn is not None:
+                    break
+        elif (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id in ("self", "cls")):
+            for scope in reversed(list(stack)):
+                if isinstance(scope, ast.ClassDef):
+                    fn = self.methods.get(scope, {}).get(expr.attr)
+                    break
+        return fn if isinstance(fn, _FuncNode) else None
+
+
+def _entry_callees(call: ast.Call) -> List[ast.AST]:
+    """Function-valued arguments of a trace-inducing call, else []."""
+    name = dotted_name(call.func)
+    if name is None:
+        return []
+    idxs = _TRACE_ENTRY_ARGS.get(name)
+    if idxs is None:
+        return []
+    out: List[ast.AST] = []
+    for i in idxs:
+        if i < len(call.args):
+            arg = call.args[i]
+            if isinstance(arg, (ast.List, ast.Tuple)):  # lax.switch
+                out.extend(arg.elts)
+            else:
+                out.append(arg)
+    return out
+
+
+def _decorated_entry(fn: ast.AST) -> Tuple[bool, Optional[ast.Call]]:
+    """(is traced root?, decorator Call carrying static_arg* kwargs)."""
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec)
+        if name in _TRACE_ENTRY_ARGS:
+            return True, None
+        if isinstance(dec, ast.Call):
+            dname = dotted_name(dec.func)
+            if dname in _TRACE_ENTRY_ARGS:
+                return True, dec
+            # @partial(jax.jit, static_argnames=...)
+            if dname in ("functools.partial", "partial") and dec.args:
+                if dotted_name(dec.args[0]) in _TRACE_ENTRY_ARGS:
+                    return True, dec
+            # @pl.when(cond) decorating an inline kernel branch
+            if dname in ("pl.when", "when"):
+                return True, None
+    return False, None
+
+
+def _static_param_names(entry: Optional[ast.Call], fn: ast.AST) -> Set[str]:
+    """Parameters declared static via `static_argnames`/`static_argnums`
+    on the jit call or decorator that roots `fn`."""
+    out: Set[str] = set()
+    if entry is None:
+        return out
+    pos = positional_params(fn)
+    for k in entry.keywords:
+        if k.arg == "static_argnames":
+            for c in ast.walk(k.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    out.add(c.value)
+        elif k.arg == "static_argnums":
+            for c in ast.walk(k.value):
+                if (isinstance(c, ast.Constant)
+                        and isinstance(c.value, int)
+                        and 0 <= c.value < len(pos)):
+                    out.add(pos[c.value])
+    return out
+
+
+def _find_traced(index: _ModuleIndex,
+                 tree: ast.Module) -> Dict[ast.AST, Tuple[bool, Set[str]]]:
+    """Every function node that executes under a trace in this module,
+    mapped to ``(seed_taint?, static param names)``.
+
+    Taint is seeded only where argument provenance is certain: direct
+    roots (passed to / decorated with a trace entry) take traced
+    positional args, and defs nested inside a seeded function are loop
+    bodies / closures over the same traced values. Transitive callees
+    frequently take static shape ints, so they keep the TS001 sync
+    check but get no seeds rather than guessed ones."""
+    traced: Dict[ast.AST, Tuple[bool, Set[str]]] = {}
+    pending: List[ast.AST] = []
+
+    def add(fn: Optional[ast.AST], seeded: bool,
+            static: Set[str] = frozenset()) -> None:
+        if fn is None or not isinstance(fn, _FuncNode):
+            return
+        cur = traced.get(fn)
+        if cur is None:
+            traced[fn] = (seeded, set(static))
+            pending.append(fn)
+        elif seeded and not cur[0]:
+            traced[fn] = (True, set(static) | cur[1])
+            pending.append(fn)      # re-walk to upgrade nested defs
+
+    # roots: decorated defs and callees of trace-inducing calls anywhere
+    for fn in index.functions:
+        is_root, entry = _decorated_entry(fn)
+        if is_root:
+            add(fn, True, _static_param_names(entry, fn))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            stack = _enclosing_stack(index, node, tree)
+            for callee in _entry_callees(node):
+                fn = index.resolve(callee, stack)
+                if fn is not None:
+                    add(fn, True, _static_param_names(node, fn))
+
+    # propagate through calls and lexical nesting
+    while pending:
+        fn = pending.pop()
+        seeded = traced[fn][0]
+        stack = index.stack_of.get(fn, [])
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(node, _FuncNode):
+                add(node, seeded)   # closures/loop bodies trace too
+            if isinstance(node, ast.Call):
+                add(index.resolve(node.func, stack), False)
+    return traced
+
+
+def _enclosing_stack(index: _ModuleIndex, node: ast.AST,
+                     tree: ast.Module) -> List[ast.AST]:
+    """Best-effort scope stack for an arbitrary node: nearest function
+    whose source span contains the node."""
+    line = getattr(node, "lineno", None)
+    if line is None:
+        return []
+    best: List[ast.AST] = []
+    for fn in index.functions:
+        end = getattr(fn, "end_lineno", fn.lineno)
+        if fn.lineno <= line <= end:
+            stack = index.stack_of[fn]
+            if len(stack) > len(best):
+                best = list(stack)
+    if not best:
+        for cls, stack in index.stack_of.items():
+            if isinstance(cls, ast.ClassDef):
+                end = getattr(cls, "end_lineno", cls.lineno)
+                if cls.lineno <= line <= end and len(stack) > len(best):
+                    best = list(stack)
+    return best
+
+
+# --------------------------------------------------------------------------
+# taint within one traced function
+# --------------------------------------------------------------------------
+
+def _literal_default(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) or (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.operand, ast.Constant))
+
+
+def _seed_taint(fn: ast.AST, static: Set[str] = frozenset()) -> Set[str]:
+    """Positional params are traced values; `self`/`cls`, declared
+    statics (static_argnames/nums), params with literal defaults, and
+    the repo's static-config parameter names are not."""
+    names = positional_params(fn)
+    a = fn.args
+    with_default = set()
+    pos = list(getattr(a, "posonlyargs", [])) + list(a.args)
+    for param, default in zip(reversed(pos), reversed(a.defaults)):
+        if _literal_default(default):
+            with_default.add(param.arg)
+    return {n for n in names
+            if n not in ("self", "cls")
+            and n not in static
+            and n not in with_default
+            and n not in _STATIC_PARAM_NAMES}
+
+
+def _names_in(expr: ast.AST) -> Set[str]:
+    """Names referenced by `expr`, ignoring static `.shape`-style
+    projections, static structure calls (`len`/`isinstance`/...), and
+    nested function bodies."""
+    out: Set[str] = set()
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return
+        if (isinstance(node, ast.Call)
+                and dotted_name(node.func) in _STATIC_CALLS):
+            return
+        if isinstance(node, _FuncNode):
+            return
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(expr)
+    return out
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+def _propagate_taint(fn: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Forward may-taint over simple assignments, to a fixpoint."""
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for _ in range(10):
+        changed = False
+        for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+            value = targets = None
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AugAssign):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.NamedExpr):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.For):
+                value, targets = node.iter, [node.target]
+            if value is None:
+                continue
+            if _names_in(value) & tainted:
+                for t in targets:
+                    new = _target_names(t) - tainted
+                    if new:
+                        tainted |= new
+                        changed = True
+        if not changed:
+            break
+    return tainted
+
+
+def _is_identity_test(test: ast.AST) -> bool:
+    """`x is None` / `x is not None` (and `and`/`or` of those) are
+    static structure checks, not traced branching."""
+    if isinstance(test, ast.BoolOp):
+        return all(_is_identity_test(v) for v in test.values)
+    return (isinstance(test, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in test.ops))
+
+
+class TraceSafetyRule:
+    name = RULE
+
+    # TS005 scope: host code in the serving hot path
+    AUDIT_PREFIXES = ("src/repro/serving/",)
+
+    def check(self, module: SourceModule) -> Iterator[Optional[Finding]]:
+        index = _ModuleIndex(module.tree)
+        traced = _find_traced(index, module.tree)
+
+        sync_in_traced: Set[int] = set()
+        for fn, (seeded, static) in traced.items():
+            context = qualname_of(index.stack_of.get(fn, [fn]))
+            yield from self._check_traced_fn(module, fn, context,
+                                             sync_in_traced, seeded,
+                                             static)
+
+        if module.rel_path.startswith(self.AUDIT_PREFIXES):
+            yield from self._audit_host_syncs(module, index,
+                                              sync_in_traced)
+
+    def _check_traced_fn(self, module: SourceModule, fn: ast.AST,
+                         context: str, sync_in_traced: Set[int],
+                         seeded: bool, static: Set[str]
+                         ) -> Iterator[Optional[Finding]]:
+        seeds = _seed_taint(fn, static) if seeded else set()
+        tainted = _propagate_taint(fn, seeds)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, _FuncNode):
+                    # nested defs are traced in their own right (they are
+                    # members of `traced`), with their own taint seeds
+                    continue
+                if isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if name in _SYNC_CALLS:
+                        sync_in_traced.add(node.lineno)
+                        yield module.finding(
+                            RULE, "TS001", node, context,
+                            f"`{name}` inside a jit/Pallas-traced region "
+                            f"forces a host sync at trace time")
+                    elif (isinstance(node.func, ast.Attribute)
+                          and node.func.attr in _HOST_COERCIONS
+                          and _names_in(node.func.value) & tainted):
+                        yield module.finding(
+                            RULE, "TS002", node, context,
+                            f"`.{node.func.attr}()` on traced value "
+                            f"`{unparse(node.func.value)}` materializes "
+                            f"the tracer on host")
+                    elif (name in ("float", "int", "bool") and node.args
+                          and _names_in(node.args[0]) & tainted):
+                        yield module.finding(
+                            RULE, "TS002", node, context,
+                            f"`{name}()` coercion of traced value "
+                            f"`{unparse(node.args[0])}` inside a traced "
+                            f"region")
+                    elif (name is not None
+                          and name.split(".")[0] in ("np", "numpy")
+                          and any(_names_in(a) & tainted
+                                  for a in node.args)):
+                        yield module.finding(
+                            RULE, "TS003", node, context,
+                            f"`{name}` on a traced value runs NumPy on a "
+                            f"tracer (host round-trip or trace error)")
+                elif isinstance(node, (ast.If, ast.While)):
+                    if (_names_in(node.test) & tainted
+                            and not _is_identity_test(node.test)):
+                        kw = ("while" if isinstance(node, ast.While)
+                              else "if")
+                        yield module.finding(
+                            RULE, "TS004", node, context,
+                            f"Python `{kw}` on traced value "
+                            f"`{unparse(node.test)}` — use `lax.cond`/"
+                            f"`jnp.where` (or bind it static)")
+
+    def _audit_host_syncs(self, module: SourceModule, index: _ModuleIndex,
+                          sync_in_traced: Set[int]
+                          ) -> Iterator[Optional[Finding]]:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if node.lineno in sync_in_traced:
+                continue                    # already a TS001
+            name = dotted_name(node.func)
+            if name in _SYNC_CALLS:
+                stack = _enclosing_stack(index, node, module.tree)
+                yield module.finding(
+                    RULE, "TS005", node, qualname_of(stack),
+                    f"deliberate host sync `{name}` in serving hot path — "
+                    f"every site must be baselined with a justification "
+                    f"(one device_get per sync discipline)")

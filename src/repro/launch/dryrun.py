@@ -17,6 +17,7 @@ import dataclasses
 import json
 import time
 import traceback
+from typing import Optional
 
 import jax
 
@@ -113,8 +114,10 @@ def extrapolated_costs(cfg, shape, mesh, ctx, rules=None, opt_rules=None):
 def lower_combo(arch: str, shape_name: str, multi_pod: bool,
                 remat: str = "none", verbose: bool = True,
                 skip_extrapolation: bool = False,
-                rule_overrides: dict = None, label: str = None,
-                cfg_overrides: dict = None, opt_rule_overrides: dict = None):
+                rule_overrides: Optional[dict] = None,
+                label: Optional[str] = None,
+                cfg_overrides: Optional[dict] = None,
+                opt_rule_overrides: Optional[dict] = None):
     """Lower + compile one (arch, shape, mesh). Returns result dict.
 
     rule_overrides: logical-axis -> mesh-axes overrides (hillclimb knob).

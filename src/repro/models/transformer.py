@@ -247,9 +247,9 @@ def _scan_group(block_fn, stacked_params, x, stacked_cache, cfg: ModelConfig):
         blk = _maybe_remat(block_fn, cfg)
         caches, aux_sum = [], jnp.zeros((), jnp.float32)
         for i in range(n):
-            p_i = jax.tree.map(lambda a: a[i], stacked_params)
+            p_i = jax.tree.map(lambda a, i=i: a[i], stacked_params)
             c_i = (None if stacked_cache is None
-                   else jax.tree.map(lambda a: a[i], stacked_cache))
+                   else jax.tree.map(lambda a, i=i: a[i], stacked_cache))
             x, nc, aux = blk(p_i, x, c_i)
             caches.append(nc)
             aux_sum = aux_sum + aux
@@ -338,13 +338,14 @@ def _trunk(params, cfg: ModelConfig, x, positions, ctx,
                 sa_cache["k"].shape[2] if sa_cache is not None else 4096))
             for g in range(n_inv + (1 if n % every else 0)):
                 lo, hi = g * every, min((g + 1) * every, n)
-                p_g = jax.tree.map(lambda a: a[lo:hi], blocks["mamba"])
-                c_g = jax.tree.map(lambda a: a[lo:hi], c)
+                p_g = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi],
+                                   blocks["mamba"])
+                c_g = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], c)
                 x, nc_g, _ = _scan_group(mamba_fn, p_g, x, c_g, cfg)
                 mamba_new.append(nc_g)
                 if g < n_inv:
                     c_sa = (None if sa_cache is None else
-                            jax.tree.map(lambda a: a[g], sa_cache))
+                            jax.tree.map(lambda a, g=g: a[g], sa_cache))
                     x, nc_sa, _ = _attn_ffn_block(
                         blocks["shared_attn"], sa_cfg, x, positions, ctx,
                         c_sa, cache_offset, decode, position, ffn_kind="mlp")

@@ -347,10 +347,16 @@ class _WorkerBackend:
         self._drain_flag = threading.Event()
         self._stop_flag = threading.Event()
         self._n_tickets = 0
-        self._n_open = 0            # main-thread view: submitted - returned
-        self._n_batches = 0
-        self.batch_log: List[Dict[str, Any]] = []
-        self._error: Optional[BaseException] = None
+        # _lock covers the worker<->main shared state: batch stats are
+        # written mid-_loop while metrics gauges scrape, _error crosses
+        # from the worker's except to _check_error, and _n_open is read
+        # by the queue-depth gauge off the engine thread
+        self._lock = threading.Lock()
+        # submitted - returned
+        self._n_open = 0            # guarded_by: self._lock
+        self._n_batches = 0         # guarded_by: self._lock
+        self.batch_log: List[Dict[str, Any]] = []  # guarded_by: self._lock
+        self._error: Optional[BaseException] = None  # guarded_by: self._lock
         self._worker = threading.Thread(target=self._run_worker,
                                         daemon=True,
                                         name=f"large-{self.name}")
@@ -379,17 +385,20 @@ class _WorkerBackend:
         try:
             self._loop()
         except BaseException as e:              # noqa: BLE001
-            self._error = e
+            with self._lock:
+                self._error = e
 
     def _check_error(self) -> None:
-        if self._error is not None:
+        with self._lock:
+            error, n_open = self._error, self._n_open
+        if error is not None:
             raise RuntimeError(
                 f"M_L {self.name} backend worker died: "
-                f"{self._error!r}") from self._error
-        if not self._worker.is_alive() and self._n_open > 0 \
+                f"{error!r}") from error
+        if not self._worker.is_alive() and n_open > 0 \
                 and not self._stop_flag.is_set():
             raise RuntimeError(f"M_L {self.name} backend worker exited "
-                               f"with {self._n_open} requests pending")
+                               f"with {n_open} requests pending")
 
     def _loop(self) -> None:
         while not self._stop_flag.is_set():
@@ -410,12 +419,13 @@ class _WorkerBackend:
                 tokens, conf = _generate_batch(self._generate, group, pad_to,
                                                self.max_new)
                 self._sleep_latency()
-                bid = self._n_batches
-                self._n_batches += 1
-                self.batch_log.append({
-                    "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
-                    "reason": reason,
-                    "prompt_len": int(group[0].prompt.shape[0])})
+                with self._lock:
+                    bid = self._n_batches
+                    self._n_batches += 1
+                    self.batch_log.append({
+                        "batch_id": bid, "n_real": len(group),
+                        "pad_to": pad_to, "reason": reason,
+                        "prompt_len": int(group[0].prompt.shape[0])})
                 self._metrics.record_batch(len(group), pad_to, reason)
                 for i, p in enumerate(group):
                     self._outq.put(self._encode_result(LargeResult(
@@ -430,7 +440,8 @@ class _WorkerBackend:
             raise RuntimeError("backend is closed")
         for r in requests:
             self._inq.put(self._encode_submit(r))
-            self._n_open += 1
+            with self._lock:
+                self._n_open += 1
         self._n_tickets += 1
         return self._n_tickets
 
@@ -447,7 +458,8 @@ class _WorkerBackend:
                 out.append(self._decode_result(self._outq.get_nowait()))
         except queue.Empty:
             pass
-        self._n_open -= len(out)
+        with self._lock:
+            self._n_open -= len(out)
         return out
 
     def flush(self) -> None:
@@ -458,7 +470,7 @@ class _WorkerBackend:
         """Block until every submitted request has completed."""
         self.flush()
         out: List[LargeResult] = []
-        while self._n_open > 0:
+        while self.n_pending > 0:
             out.extend(self.poll(timeout=0.05))
         return out
 
@@ -468,7 +480,8 @@ class _WorkerBackend:
 
     @property
     def n_pending(self) -> int:
-        return self._n_open
+        with self._lock:
+            return self._n_open
 
 
 class ThreadedBackend(_WorkerBackend):

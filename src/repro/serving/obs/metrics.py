@@ -63,7 +63,7 @@ class _Child:
 
     def __init__(self, lock: threading.Lock):
         self._lock = lock
-        self._value = 0.0
+        self._value = 0.0                  # guarded_by: self._lock
         self._fn: Optional[Callable[[], float]] = None
 
     def inc(self, v: float = 1.0) -> None:
@@ -96,9 +96,10 @@ class _HistChild:
     def __init__(self, lock: threading.Lock, buckets: Tuple[float, ...]):
         self._lock = lock
         self.buckets = buckets
-        self.counts = [0] * (len(buckets) + 1)   # last = +Inf
-        self.sum = 0.0
-        self.count = 0
+        # cumulative state (last bucket = +Inf)
+        self.counts = [0] * (len(buckets) + 1)  # guarded_by: self._lock
+        self.sum = 0.0                     # guarded_by: self._lock
+        self.count = 0                     # guarded_by: self._lock
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -114,12 +115,18 @@ class _HistChild:
             self.count += 1
 
     def cumulative(self) -> List[int]:
+        return self.snapshot()[0]
+
+    def snapshot(self) -> Tuple[List[int], float, int]:
+        """(cumulative bucket counts, sum, count) read atomically — the
+        renderer must not see a count from one observation and a sum
+        from the next."""
         with self._lock:
             out, acc = [], 0
             for c in self.counts:
                 acc += c
                 out.append(acc)
-            return out
+            return out, self.sum, self.count
 
 
 class MetricFamily:
@@ -136,7 +143,9 @@ class MetricFamily:
         self.labelnames = labelnames
         self.buckets = tuple(buckets)
         self._lock = threading.Lock()
-        self._children: Dict[Tuple[str, ...], object] = {}
+        # NOTE: children share this lock — never read a child's value
+        # while holding it (collect under lock, read outside)
+        self._children: Dict[Tuple[str, ...], object] = {}  # guarded_by: self._lock
         if not labelnames:
             self._default = self._make_child()
             self._children[()] = self._default
@@ -153,11 +162,12 @@ class MetricFamily:
             raise ValueError(f"{self.name}: expected labels "
                              f"{self.labelnames}, got {tuple(kv)}")
         key = tuple(str(kv[n]) for n in self.labelnames)
-        child = self._children.get(key)
-        if child is None:
-            with self._lock:
-                child = self._children.setdefault(key, self._make_child())
-        return child
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._make_child()
+                self._children[key] = child
+            return child
 
     # -- unlabeled convenience --------------------------------------------
     def _only(self):
@@ -188,17 +198,18 @@ class MetricFamily:
         if self.help:
             lines.append(f"# HELP {self.name} {self.help}")
         lines.append(f"# TYPE {self.name} {self.type}")
-        for key in sorted(self._children):
-            child = self._children[key]
+        with self._lock:
+            children = sorted(self._children.items())
+        for key, child in children:   # child reads re-take the lock
             if self.type == "histogram":
-                cum = child.cumulative()
+                cum, total, count = child.snapshot()
                 for ub, c in zip((*self.buckets, float("inf")), cum):
                     lbl = _fmt_labels((*self.labelnames, "le"),
                                       (*key, _fmt(ub)))
                     lines.append(f"{self.name}_bucket{lbl} {c}")
                 base = _fmt_labels(self.labelnames, key)
-                lines.append(f"{self.name}_sum{base} {_fmt(child.sum)}")
-                lines.append(f"{self.name}_count{base} {child.count}")
+                lines.append(f"{self.name}_sum{base} {_fmt(total)}")
+                lines.append(f"{self.name}_count{base} {count}")
             else:
                 lbl = _fmt_labels(self.labelnames, key)
                 lines.append(f"{self.name}{lbl} {_fmt(child.value)}")
@@ -214,7 +225,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._families: Dict[str, MetricFamily] = {}
+        self._families: Dict[str, MetricFamily] = {}  # guarded_by: self._lock
 
     def _get(self, name: str, help_: str, mtype: str,
              labels: Iterable[str], buckets=DEFAULT_BUCKETS) -> MetricFamily:
@@ -251,7 +262,8 @@ class MetricsRegistry:
         return self._get(name, help_, "histogram", labels, buckets)
 
     def get(self, name: str) -> Optional[MetricFamily]:
-        return self._families.get(name)
+        with self._lock:
+            return self._families.get(name)
 
     def snapshot(self) -> Dict[str, Dict[Tuple[str, ...], float]]:
         """Point-in-time ``{family: {label-values: value}}`` view of
@@ -262,15 +274,22 @@ class MetricsRegistry:
         instead of regexing the Prometheus dump."""
         with self._lock:
             fams = list(self._families.values())
-        return {fam.name: {key: fam._children[key].value
-                           for key in sorted(fam._children)}
-                for fam in fams if fam.type != "histogram"}
+        out: Dict[str, Dict[Tuple[str, ...], float]] = {}
+        for fam in fams:
+            if fam.type == "histogram":
+                continue
+            with fam._lock:
+                children = sorted(fam._children.items())
+            # .value re-takes the (non-reentrant) family lock
+            out[fam.name] = {key: child.value for key, child in children}
+        return out
 
     def render(self) -> str:
         """Prometheus text exposition format (v0.0.4), families sorted by
         name, trailing newline included (scrapers require it)."""
-        parts = [self._families[n].render()
-                 for n in sorted(self._families)]
+        with self._lock:
+            fams = [self._families[n] for n in sorted(self._families)]
+        parts = [f.render() for f in fams]
         return "\n".join(parts) + ("\n" if parts else "")
 
     def write(self, path: str) -> None:

@@ -81,14 +81,15 @@ class SocketBackend:
         self._lock = threading.RLock()
         self._sock: Optional[socket.socket] = None
         self._closed = False
-        self._n_tickets = 0
+        self._n_tickets = 0                # guarded_by: self._lock
         # rid -> prompt of every submitted-but-unreturned request (the
         # replica pool re-dispatches from this on ejection)
-        self._inflight: Dict[int, np.ndarray] = {}
-        self._unacked: List[int] = []      # delivered, not yet acked
-        self._returned: set = set()        # delivered ever (dup guard)
-        self.batch_log: List[Dict[str, Any]] = []
-        self._batches_seen: set = set()
+        self._inflight: Dict[int, np.ndarray] = {}  # guarded_by: self._lock
+        # delivered-not-yet-acked / ever-delivered (dup guard)
+        self._unacked: List[int] = []      # guarded_by: self._lock
+        self._returned: set = set()        # guarded_by: self._lock
+        self.batch_log: List[Dict[str, Any]] = []   # guarded_by: self._lock
+        self._batches_seen: set = set()    # guarded_by: self._lock
 
         self._m_retries = self._m_reconnects = None
         if registry is not None:
@@ -271,7 +272,10 @@ class SocketBackend:
 
     @property
     def n_pending(self) -> int:
-        return len(self._inflight)
+        # read from the pool's health/metrics paths while poll() mutates
+        # _inflight on the engine thread — must snapshot under the lock
+        with self._lock:
+            return len(self._inflight)
 
     # -- replica-pool hooks --------------------------------------------------
     def healthy(self) -> bool:
@@ -292,7 +296,7 @@ class SocketBackend:
             self._inflight = {}
             return out
 
-    def _log_batch(self, res: LargeResult) -> None:
+    def _log_batch(self, res: LargeResult) -> None:  # guarded_by: self._lock
         if res.batch_id not in self._batches_seen:
             self._batches_seen.add(res.batch_id)
             self.batch_log.append({

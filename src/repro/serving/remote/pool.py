@@ -72,12 +72,12 @@ class ReplicaPool:
         self.large_batch = large_batch
         # prompt_len -> (replica idx, requests routed into the open
         # group); the sticky state behind batch-aware routing
-        self._route: Dict[int, Tuple[int, int]] = {}
+        self._route: Dict[int, Tuple[int, int]] = {}  # guarded_by: self._lock
         self._lock = threading.RLock()
-        self._flushed = False
+        self._flushed = False              # guarded_by: self._lock
         self._closed = False
-        self._n_tickets = 0
-        self._last_health = time.perf_counter()
+        self._n_tickets = 0                # guarded_by: self._lock
+        self._last_health = time.perf_counter()  # guarded_by: self._lock
         # replicas hold their own retry/timeout machinery; metrics are
         # registered pool-level (per-client registration would collide
         # on the single-backend gauge names)
@@ -88,7 +88,7 @@ class ReplicaPool:
                           retries=retries, backoff=backoff,
                           backoff_max=backoff_max)
             for a in addresses]
-        self._alive = [True] * len(self.replicas)
+        self._alive = [True] * len(self.replicas)  # guarded_by: self._lock
 
         self._m_ejections = self._m_health = self._m_redispatch = None
         if registry is not None:
@@ -114,11 +114,12 @@ class ReplicaPool:
                     lambda r=r: r.n_pending)
 
     # -- replica management --------------------------------------------------
-    def _alive_replicas(self) -> List[Tuple[int, SocketBackend]]:
+    # (every helper below runs with the pool lock held by its caller)
+    def _alive_replicas(self):  # guarded_by: self._lock
         return [(i, r) for i, r in enumerate(self.replicas)
                 if self._alive[i]]
 
-    def _eject(self, idx: int, why: str) -> None:
+    def _eject(self, idx: int, why: str) -> None:  # guarded_by: self._lock
         """Remove a replica and re-dispatch its in-flight requests to the
         survivors. Raises when it held work and no survivor remains."""
         if not self._alive[idx]:
@@ -145,7 +146,7 @@ class ReplicaPool:
             # cut the re-dispatched work immediately, not wait for more
             self._flush_alive()
 
-    def _pick_replica(self, plen: int, n: int) -> Tuple[int, SocketBackend]:
+    def _pick_replica(self, plen, n):  # guarded_by: self._lock
         """Choose a live replica for `n` requests of prompt length
         `plen`: sticky while the current group has room (batch-aware),
         least-loaded when a new group opens or `large_batch` is unset."""
@@ -169,7 +170,7 @@ class ReplicaPool:
             self._route[plen] = (idx, count)
         return idx, self.replicas[idx]
 
-    def _submit_balanced(self, requests: List[Request]) -> None:
+    def _submit_balanced(self, requests):  # guarded_by: self._lock
         """Place requests on live replicas (grouped by prompt length so
         sticky routing can fill server-side batches), ejecting and
         retrying on failure until someone accepts them or nobody is
@@ -186,14 +187,14 @@ class ReplicaPool:
                 except _RPC_ERRORS:
                     self._eject(idx, "submit failed")
 
-    def _flush_alive(self) -> None:
+    def _flush_alive(self) -> None:  # guarded_by: self._lock
         for idx, replica in self._alive_replicas():
             try:
                 replica.flush()
             except _RPC_ERRORS:
                 self._eject(idx, "flush failed")
 
-    def _health_check(self) -> None:
+    def _health_check(self) -> None:  # guarded_by: self._lock
         for idx, replica in self._alive_replicas():
             if self._m_health is not None:
                 self._m_health.inc()
@@ -267,8 +268,11 @@ class ReplicaPool:
 
     @property
     def n_pending(self) -> int:
-        return sum(r.n_pending for i, r in enumerate(self.replicas)
-                   if self._alive[i])
+        # metrics gauges read this off-thread; _alive must be read under
+        # the lock (RLock, so the poll/drain paths can re-enter)
+        with self._lock:
+            return sum(r.n_pending for i, r in enumerate(self.replicas)
+                       if self._alive[i])
 
     @property
     def batch_log(self) -> List[Dict[str, Any]]:
@@ -281,4 +285,5 @@ class ReplicaPool:
 
     @property
     def n_alive(self) -> int:
-        return sum(self._alive)
+        with self._lock:
+            return sum(self._alive)

@@ -88,15 +88,19 @@ class MLServer:
 
         # session + delivery state (under _lock; worker only sees srids)
         self._lock = threading.Lock()
-        self._session: Optional[str] = None
-        self._epoch = 0
-        self._seen: set = set()            # rids accepted this session
-        self._done: Dict[int, Dict[str, Any]] = {}  # rid -> undelivered
-        self._n_open = 0                   # accepted - completed/cancelled
+        self._session: Optional[str] = None  # guarded_by: self._lock
+        self._epoch = 0                    # guarded_by: self._lock
+        # rids accepted this session
+        self._seen: set = set()            # guarded_by: self._lock
+        # rid -> undelivered result
+        self._done: Dict[int, Dict[str, Any]] = {}  # guarded_by: self._lock
+        # accepted - completed/cancelled
+        self._n_open = 0                   # guarded_by: self._lock
         self._results_ready = threading.Event()
 
-        self._n_batches = 0
-        self.batch_log: List[Dict[str, Any]] = []
+        # written by the worker thread, read by metrics gauges
+        self._n_batches = 0                # guarded_by: self._lock
+        self.batch_log: List[Dict[str, Any]] = []   # guarded_by: self._lock
         self._metrics = _BackendMetrics(registry, self)
         self._t_start = time.perf_counter()
 
@@ -207,12 +211,13 @@ class MLServer:
                                                self.max_new)
                 if self.latency > 0:
                     time.sleep(self.latency)
-                bid = self._n_batches
-                self._n_batches += 1
-                self.batch_log.append({
-                    "batch_id": bid, "n_real": len(group), "pad_to": pad_to,
-                    "reason": reason,
-                    "prompt_len": int(group[0].prompt.shape[0])})
+                with self._lock:
+                    bid = self._n_batches
+                    self._n_batches += 1
+                    self.batch_log.append({
+                        "batch_id": bid, "n_real": len(group),
+                        "pad_to": pad_to, "reason": reason,
+                        "prompt_len": int(group[0].prompt.shape[0])})
                 self._metrics.record_batch(len(group), pad_to, reason)
                 for i, p in enumerate(group):
                     epoch, rid = divmod(p.rid, _RID_SPAN)
@@ -246,7 +251,7 @@ class MLServer:
             self._n_open = 0
             self._drain_flag.clear()
 
-    def _absorb_outq(self) -> None:
+    def _absorb_outq(self) -> None:  # guarded_by: self._lock
         """Move completed work from the worker into the undelivered
         buffer, dropping anything from a superseded session."""
         while True:

@@ -1,0 +1,579 @@
+"""repro.analysis: per-rule must-flag / must-pass fixtures, the
+suppression and baseline machinery (round-trip, ratchet, staleness),
+CLI exit codes, and the self-check that the shipped tree is clean
+modulo the checked-in `analysis_baseline.json`."""
+import json
+import textwrap
+from pathlib import Path
+
+from repro.analysis import __main__ as analysis_cli
+from repro.analysis.core import Baseline, load_baseline, run_analysis
+from repro.analysis.determinism import DeterminismRule
+from repro.analysis.lock_discipline import LockDisciplineRule
+from repro.analysis.pallas_contracts import PallasContractsRule
+from repro.analysis.trace_safety import TraceSafetyRule
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_on(tmp_path, src, rel="mod.py", rules=None, baseline=None):
+    """Write `src` at tmp_path/rel and analyze it (rel matters: several
+    rules scope by path suffix)."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return run_analysis([str(path)], root=str(tmp_path),
+                        baseline=baseline, rules=rules)
+
+
+def codes(report):
+    return sorted(f.code for f in report.findings)
+
+
+# ---------------------------------------------------------------- trace-safety
+
+def test_ts001_sync_inside_jit(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = jax.device_get(x)
+            return y
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS001"]
+    assert rep.findings[0].context == "f"
+
+
+def test_ts001_reaches_transitive_callee(tmp_path):
+    # taint is not seeded in helpers, but the sync check still applies
+    rep = run_on(tmp_path, """
+        import jax
+
+        def helper(x):
+            return jax.device_get(x)
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS001"]
+    assert rep.findings[0].context == "helper"
+
+
+def test_ts002_host_coercions(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            a = x.item()
+            b = float(x)
+            return a + b
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS002", "TS002"]
+
+
+def test_ts003_numpy_on_traced(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.sum(x)
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS003"]
+
+
+def test_ts004_python_branch_on_traced(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            while x < 3:
+                x = x + 1
+            return -x
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS004", "TS004"]
+
+
+def test_ts004_static_tests_pass(tmp_path):
+    # shape projections, identity tests, isinstance/len, literal-default
+    # params, and declared statics are all trace-time constants
+    rep = run_on(tmp_path, """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode, flag=False):
+            if mode == "fast":
+                x = x * 2
+            if flag:
+                x = x + 1
+            if x is None:
+                return 0
+            if isinstance(x, tuple):
+                x = x[0]
+            if x.shape[0] > 4:
+                x = x[:4]
+            if len(x) > 2:
+                x = x * 2
+            return x
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == []
+
+
+def test_ts004_cfg_param_is_static_by_convention(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+
+        def forward(params, cfg, x):
+            if cfg.residual:
+                x = x + params["w"] * x
+            return x
+
+        step = jax.jit(forward)
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == []
+
+
+def test_ts004_transitive_helper_not_seeded(tmp_path):
+    # a helper's int params are usually static shape math — branching on
+    # them must not be flagged on guesswork
+    rep = run_on(tmp_path, """
+        import jax
+
+        def pad_to(n, multiple):
+            if n % multiple:
+                n = n + multiple - n % multiple
+            return n
+
+        @jax.jit
+        def f(x):
+            k = pad_to(x.shape[0], 8)
+            return x, k
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == []
+
+
+def test_trace_entry_via_fori_loop_body(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+        from jax import lax
+
+        def run(x, n):
+            def body(i, carry):
+                return carry + float(carry)
+            return lax.fori_loop(0, n, body, x)
+    """, rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS002"]
+
+
+def test_ts005_audits_serving_host_syncs(tmp_path):
+    src = """
+        import jax
+
+        def sync_stats(state):
+            return jax.device_get(state)
+    """
+    flagged = run_on(tmp_path, src, rel="src/repro/serving/mod.py",
+                     rules=[TraceSafetyRule()])
+    assert codes(flagged) == ["TS005"]
+    elsewhere = run_on(tmp_path, src, rel="src/repro/models/mod.py",
+                       rules=[TraceSafetyRule()])
+    assert codes(elsewhere) == []
+
+
+# ------------------------------------------------------------ lock-discipline
+
+LOCKED_CLASS = """
+    import threading
+
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []  # guarded_by: self._lock
+
+        def add(self, x):
+            with self._lock:
+                self._items.append(x)
+
+        def peek(self):
+            return len(self._items)
+
+        def _drain(self):  # guarded_by: self._lock
+            out, self._items = self._items, []
+            return out
+"""
+
+
+def test_ld001_flags_unguarded_access_only(tmp_path):
+    rep = run_on(tmp_path, LOCKED_CLASS, rules=[LockDisciplineRule()])
+    assert codes(rep) == ["LD001"]
+    (f,) = rep.findings
+    assert f.context == "Box.peek"
+    assert "_items" in f.message
+
+
+def test_ld001_deferred_callback_loses_the_lock(tmp_path):
+    rep = run_on(tmp_path, """
+        import threading
+
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded_by: self._lock
+
+            def register(self, registry):
+                with self._lock:
+                    registry.gauge(fn=lambda: self._n)
+    """, rules=[LockDisciplineRule()])
+    assert codes(rep) == ["LD001"]
+    assert "deferred" in rep.findings[0].message
+
+
+def test_ld001_inheritance_same_module(tmp_path):
+    rep = run_on(tmp_path, """
+        import threading
+
+
+        class Base:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded_by: self._lock
+
+
+        class Child(Base):
+            def bump(self):
+                self._n += 1
+    """, rules=[LockDisciplineRule()])
+    assert codes(rep) == ["LD001"]
+    assert rep.findings[0].context == "Child.bump"
+
+
+def test_ld002_orphan_annotation(tmp_path):
+    rep = run_on(tmp_path, """
+        import threading
+
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                # guarded_by: self._lock
+                self._items = []
+
+            def use(self):
+                return self._items
+    """, rules=[LockDisciplineRule()])
+    # the comment sits on its own line -> binds nothing -> LD002, and
+    # _items is NOT guarded (that is exactly the bug LD002 catches)
+    assert codes(rep) == ["LD002"]
+
+
+def test_guarded_by_in_docstring_is_not_an_annotation(tmp_path):
+    rep = run_on(tmp_path, '''
+        class Doc:
+            """Explains the convention: # guarded_by: self._lock ."""
+
+            def use(self):
+                return 1
+    ''', rules=[LockDisciplineRule()])
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------- determinism
+
+def test_determinism_flags_in_pragma_module(tmp_path):
+    rep = run_on(tmp_path, """
+        # repro: deterministic-module
+        import random
+        import time
+
+
+        def pick(items, key):
+            h = hash(key)
+            r = random.random()
+            t = time.time()
+            ok = time.perf_counter()
+            return h, r, t, ok
+    """, rules=[DeterminismRule()])
+    assert codes(rep) == ["DM001", "DM002", "DM003"]
+
+
+def test_determinism_scoped_by_default_paths(tmp_path):
+    src = """
+        def k(key):
+            return hash(key)
+    """
+    scoped = run_on(tmp_path, src, rel="src/repro/serving/scheduler.py",
+                    rules=[DeterminismRule()])
+    assert codes(scoped) == ["DM001"]
+    unscoped = run_on(tmp_path, src, rel="src/repro/obscure.py",
+                      rules=[DeterminismRule()])
+    assert codes(unscoped) == []
+
+
+def test_determinism_allows_seeded_rng(tmp_path):
+    rep = run_on(tmp_path, """
+        # repro: deterministic-module
+        import numpy as np
+
+
+        def make(seed):
+            return np.random.default_rng(seed)
+    """, rules=[DeterminismRule()])
+    assert codes(rep) == []
+
+
+# ----------------------------------------------------------- pallas-contracts
+
+def test_pl001_kernel_arity(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+
+        def kernel(a_ref, o_ref):
+            o_ref[...] = a_ref[...]
+
+
+        def call(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: i),
+                          pl.BlockSpec((8,), lambda i: i)],
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            )(x, x)
+    """, rules=[PallasContractsRule()])
+    assert "PL001" in codes(rep)
+
+
+def test_pl002_index_map_arity(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+
+        def kernel(a_ref, o_ref):
+            o_ref[...] = a_ref[...]
+
+
+        def call(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            )(x)
+    """, rules=[PallasContractsRule()])
+    assert "PL002" in codes(rep)
+
+
+def test_pl003_alias_out_of_range(tmp_path):
+    rep = run_on(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+
+        def kernel(a_ref, b_ref, o_ref):
+            o_ref[...] = a_ref[...] + b_ref[...]
+
+
+        def call(x, y):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: i),
+                          pl.BlockSpec((8,), lambda i: i)],
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+                input_output_aliases={5: 0},
+            )(x, y)
+    """, rules=[PallasContractsRule()])
+    assert "PL003" in codes(rep)
+
+
+def test_pl004_fp32_scratch_in_attention_kernels(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+
+        def kernel(a_ref, o_ref, m_ref):
+            o_ref[...] = a_ref[...]
+
+
+        def call(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: i)],
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+                scratch_shapes=[pltpu.VMEM((8, 128), jnp.bfloat16)],
+            )(x)
+    """
+    rep = run_on(tmp_path, src, rel="src/repro/kernels/paged_attention.py",
+                 rules=[PallasContractsRule()])
+    assert "PL004" in codes(rep)
+    # same scratch dtype is fine outside the online-softmax kernels
+    rep2 = run_on(tmp_path, src, rel="src/repro/kernels/other.py",
+                  rules=[PallasContractsRule()])
+    assert "PL004" not in codes(rep2)
+    fixed = src.replace("jnp.bfloat16", "jnp.float32")
+    rep3 = run_on(tmp_path, fixed,
+                  rel="src/repro/kernels/paged_attention.py",
+                  rules=[PallasContractsRule()])
+    assert "PL004" not in codes(rep3)
+
+
+def test_pallas_clean_on_real_kernels():
+    rep = run_analysis(["src/repro/kernels"], root=str(REPO),
+                       rules=[PallasContractsRule()])
+    assert rep.errors == []
+    assert rep.findings == []
+
+
+# ------------------------------------------------- suppression and baseline
+
+SYNC_IN_JIT = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return jax.device_get(x){suffix}
+"""
+
+
+def test_suppression_by_rule_code_and_bare(tmp_path):
+    for token in ("trace-safety", "TS001", ""):
+        comment = (f"  # repro: ignore[{token}]" if token
+                   else "  # repro: ignore")
+        rep = run_on(tmp_path, SYNC_IN_JIT.format(suffix=comment),
+                     rel=f"m_{token or 'bare'}.py".replace("-", "_"),
+                     rules=[TraceSafetyRule()])
+        assert rep.findings == [], token
+    # a non-matching token does not silence the finding
+    rep = run_on(tmp_path,
+                 SYNC_IN_JIT.format(suffix="  # repro: ignore[determinism]"),
+                 rules=[TraceSafetyRule()])
+    assert codes(rep) == ["TS001"]
+
+
+def test_baseline_round_trip(tmp_path):
+    rep = run_on(tmp_path, SYNC_IN_JIT.format(suffix=""),
+                 rules=[TraceSafetyRule()])
+    assert rep.exit_code == 1 and len(rep.new) == 1
+
+    bl_path = tmp_path / "baseline.json"
+    Baseline.from_findings(rep.findings).dump(str(bl_path))
+    loaded = load_baseline(str(bl_path))
+
+    rep2 = run_on(tmp_path, SYNC_IN_JIT.format(suffix=""),
+                  rules=[TraceSafetyRule()], baseline=loaded)
+    assert rep2.exit_code == 0
+    assert rep2.new == [] and len(rep2.baselined) == 1
+    assert rep2.stale_baseline == []
+
+
+def test_baseline_survives_line_moves_but_not_edits(tmp_path):
+    rep = run_on(tmp_path, SYNC_IN_JIT.format(suffix=""),
+                 rules=[TraceSafetyRule()])
+    baseline = Baseline.from_findings(rep.findings)
+
+    moved = "import os\n# a new comment shifting lines\n" + \
+        textwrap.dedent(SYNC_IN_JIT.format(suffix=""))
+    rep2 = run_on(tmp_path, moved, rules=[TraceSafetyRule()],
+                  baseline=baseline)
+    assert rep2.exit_code == 0 and rep2.new == []
+
+    edited = SYNC_IN_JIT.format(suffix="").replace(
+        "jax.device_get(x)", "jax.device_get(x + 1)")
+    rep3 = run_on(tmp_path, edited, rules=[TraceSafetyRule()],
+                  baseline=baseline)
+    assert rep3.exit_code == 1      # snippet changed -> re-justify
+    assert len(rep3.stale_baseline) == 1
+
+
+def test_stale_baseline_entries_reported(tmp_path):
+    baseline = Baseline([{
+        "rule": "trace-safety", "code": "TS001", "path": "gone.py",
+        "context": "f", "snippet": "jax.device_get(x)",
+        "justification": "file was deleted"}])
+    rep = run_on(tmp_path, "x = 1\n", rules=[TraceSafetyRule()],
+                 baseline=baseline)
+    assert rep.exit_code == 0       # stale entries warn, not fail
+    assert len(rep.stale_baseline) == 1
+    assert "prune" in rep.render()
+
+
+# ----------------------------------------------------------------------- CLI
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(SYNC_IN_JIT.format(suffix="")))
+    rc = analysis_cli.main(["--paths", str(bad), "--root", str(tmp_path),
+                            "--baseline", "", "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert [f["code"] for f in out["new"]] == ["TS001"]
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    rc = analysis_cli.main(["--paths", str(good), "--root", str(tmp_path),
+                            "--baseline", ""])
+    assert rc == 0
+
+
+def test_cli_write_baseline_keeps_justifications(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(SYNC_IN_JIT.format(suffix="")))
+    bl = tmp_path / "bl.json"
+    argv = ["--paths", str(bad), "--root", str(tmp_path),
+            "--baseline", str(bl)]
+    assert analysis_cli.main(argv + ["--write-baseline"]) == 0
+    data = json.loads(bl.read_text())
+    assert data["entries"][0]["justification"] == "TODO: justify"
+
+    data["entries"][0]["justification"] = "deliberate: fixture"
+    bl.write_text(json.dumps(data))
+    assert analysis_cli.main(argv + ["--write-baseline"]) == 0
+    data2 = json.loads(bl.read_text())
+    assert data2["entries"][0]["justification"] == "deliberate: fixture"
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------- self-check
+
+def test_repo_is_clean_modulo_baseline():
+    """The shipped tree passes the gate: no errors, no rule crashes, no
+    findings beyond the checked-in baseline, and no stale entries."""
+    baseline = load_baseline(str(REPO / "analysis_baseline.json"))
+    rep = run_analysis(["src", "tests", "benchmarks"], root=str(REPO),
+                       baseline=baseline)
+    assert rep.errors == []
+    assert [f.render() for f in rep.new] == []
+    assert rep.stale_baseline == []
+    assert rep.exit_code == 0
+    assert rep.baselined  # the deliberate host-sync sites are tracked
+
+
+def test_injected_violation_fails_the_gate(tmp_path):
+    """Acceptance check: the exact CLI the CI job runs exits nonzero
+    when a violating file is injected next to clean sources."""
+    (tmp_path / "clean.py").write_text("x = 1\n")
+    (tmp_path / "dirty.py").write_text(textwrap.dedent(
+        SYNC_IN_JIT.format(suffix="")))
+    rc = analysis_cli.main(["--paths", str(tmp_path),
+                            "--root", str(tmp_path), "--baseline", ""])
+    assert rc == 1
